@@ -1,0 +1,40 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.lcrq import LCRQ, install_line_map
+from repro.core.machine import Machine
+
+
+def des_throughput(queue_factory: Callable[[Machine], object], n_threads: int,
+                   pairs_per_thread: int = 150) -> dict:
+    """The paper's standard experiment: each thread runs enqueue/dequeue
+    pairs; throughput = ops / simulated makespan (DES with line contention)."""
+    m = Machine(n_threads)
+    m.trace_enabled = False
+    q = queue_factory(m)
+
+    def wl(tid):
+        def gen():
+            yield from q.enqueue(tid, (tid, object()))
+            yield from q.dequeue(tid)
+        return gen
+
+    r = m.run_des({t: wl(t) for t in range(n_threads)},
+                  ops_per_thread=pairs_per_thread)
+    ops = 2 * r["ops"]
+    return {
+        "throughput": ops / r["makespan"],
+        "makespan": r["makespan"],
+        "ops": ops,
+        "pwbs_per_op": m.persist_count / max(ops, 1),
+        "psyncs_per_op": m.psync_count / max(ops, 1),
+    }
+
+
+def perlcrq_factory(mode: str, R: int = 1024):
+    def make(m: Machine):
+        install_line_map(m)
+        return LCRQ(m, R=R, mode=mode)
+    return make

@@ -1,0 +1,34 @@
+"""Paper Figure 2: PerLCRQ vs PBQueue vs PWFQueue (+ PerLCRQ-PHead) --
+throughput as the thread count grows.  Claims reproduced:
+  (a) PerLCRQ >= 2x its best competitor (PBQueue) at scale,
+  (b) PerLCRQ-PHead (persist the SHARED Head) collapses under contention and
+      falls below the combining baselines."""
+from __future__ import annotations
+
+from repro.core.combining import PBQueue, PWFQueue
+
+from .common import des_throughput, perlcrq_factory
+
+THREADS = (1, 4, 8, 16, 32, 48, 64, 96)
+
+
+def run(pairs: int = 150):
+    rows = []
+    for n in THREADS:
+        row = {"threads": n}
+        row["perlcrq"] = des_throughput(perlcrq_factory("percrq"), n, pairs)["throughput"]
+        row["pbqueue"] = des_throughput(PBQueue, n, pairs)["throughput"]
+        row["pwfqueue"] = des_throughput(PWFQueue, n, pairs)["throughput"]
+        row["perlcrq_phead"] = des_throughput(perlcrq_factory("phead"), n, pairs)["throughput"]
+        rows.append(row)
+    return rows
+
+
+def check_claims(rows) -> dict:
+    at_scale = [r for r in rows if r["threads"] >= 32]
+    speedup = min(r["perlcrq"] / r["pbqueue"] for r in at_scale)
+    phead_collapses = all(r["perlcrq_phead"] <= r["pbqueue"] * 1.1
+                          for r in at_scale)
+    return {"min_speedup_vs_pbqueue_at_scale": speedup,
+            "claim_2x": speedup >= 2.0,
+            "claim_phead_collapse": phead_collapses}

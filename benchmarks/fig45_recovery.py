@@ -1,0 +1,66 @@
+"""Paper Figures 4 + 5: recovery cost.
+
+Fig 4: recovery time vs number of operations executed before the crash.
+Fig 5: recovery time vs queue size at crash time.
+Both for PerIQ vs PerIQ(persist_tail_every=k) -- without persisted Tail the
+recovery scan grows with the array extent; with it, recovery is ~constant."""
+from __future__ import annotations
+
+from repro.core.failures import mean_recovery, run_cycles
+from repro.core.iq import PerIQ
+
+
+def run_fig4(steps_list=(400, 1500, 4000, 8000), n_threads: int = 4):
+    rows = []
+    for steps in steps_list:
+        no_tail = run_cycles(lambda m: PerIQ(m), n_threads, steps,
+                             n_cycles=3, ops_per_thread=10_000, seed=4)
+        with_tail = run_cycles(lambda m: PerIQ(m, persist_tail_every=8),
+                               n_threads, steps, n_cycles=3,
+                               ops_per_thread=10_000, seed=4)
+        rows.append({
+            "crash_after_steps": steps,
+            "recovery_steps_no_tail": mean_recovery(no_tail)["steps"],
+            "recovery_steps_with_tail": mean_recovery(with_tail)["steps"],
+            "recovery_sim_no_tail": mean_recovery(no_tail)["sim_time"],
+            "recovery_sim_with_tail": mean_recovery(with_tail)["sim_time"],
+        })
+    return rows
+
+
+def run_fig5(sizes=(50, 200, 800, 2000), n_threads: int = 4):
+    """Queue size at crash: build up a backlog of `size` items by running an
+    enqueue-heavy workload, then crash."""
+    from repro.core.harness import random_workload
+
+    rows = []
+    for size in sizes:
+        def wf(n, k, tag, size=size):
+            return random_workload(n, k, seed=5, p_enq=0.9, tag=tag)
+
+        no_tail = run_cycles(lambda m: PerIQ(m), n_threads,
+                             recovery_steps=size * 6, n_cycles=3,
+                             ops_per_thread=10_000, seed=5,
+                             workload_factory=wf)
+        with_tail = run_cycles(lambda m: PerIQ(m, persist_tail_every=8),
+                               n_threads, recovery_steps=size * 6, n_cycles=3,
+                               ops_per_thread=10_000, seed=5,
+                               workload_factory=wf)
+        rows.append({
+            "approx_queue_size": size,
+            "recovery_steps_no_tail": mean_recovery(no_tail)["steps"],
+            "recovery_steps_with_tail": mean_recovery(with_tail)["steps"],
+        })
+    return rows
+
+
+def check_claims(fig4_rows, fig5_rows) -> dict:
+    growing = (fig4_rows[-1]["recovery_steps_no_tail"]
+               > 2 * fig4_rows[0]["recovery_steps_no_tail"])
+    bounded = (fig4_rows[-1]["recovery_steps_with_tail"]
+               < fig4_rows[-1]["recovery_steps_no_tail"])
+    size_growth = (fig5_rows[-1]["recovery_steps_no_tail"]
+                   > fig5_rows[0]["recovery_steps_no_tail"])
+    return {"claim_recovery_grows_with_ops": growing,
+            "claim_tail_bounds_recovery": bounded,
+            "claim_recovery_grows_with_size": size_growth}

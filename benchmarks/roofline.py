@@ -1,0 +1,100 @@
+"""Roofline report generator: reads experiments/dryrun.jsonl (written by
+repro.launch.dryrun) and emits the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--jsonl experiments/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return rows
+
+
+def fmt_t(s):
+    if s is None:
+        return "-"
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s*1e3:.1f}ms"
+
+
+def emit_table(rows, mesh="16x16"):
+    print(f"\n### Roofline table ({mesh} mesh, per-device terms)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+          "| useful/HLO flops | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    archs = sorted({a for (a, _, _) in rows})
+    for a in archs:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | - | - | - | SKIP (sub-quadratic-only "
+                      f"cell) | - | - |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {a} | {s} | ERROR: {r.get('error','?')[:60]} | | | | | |")
+                continue
+            print(f"| {a} | {s} | {fmt_t(r.get('t_compute_s'))} "
+                  f"| {fmt_t(r.get('t_memory_s'))} "
+                  f"| {fmt_t(r.get('t_collective_s'))} "
+                  f"| {r.get('bottleneck','-')} "
+                  f"| {r.get('useful_flops_ratio', 0)*100:.0f}% "
+                  f"| {r.get('mfu_bound', 0)*100:.1f}% |")
+
+
+def emit_summary(rows):
+    ok = sum(1 for r in rows.values() if r["status"] == "ok")
+    skip = sum(1 for r in rows.values() if r["status"] == "skipped")
+    err = sum(1 for r in rows.values() if r["status"] == "error")
+    print(f"\ncells: {ok} ok / {skip} skipped / {err} error "
+          f"(total {len(rows)})")
+    for (a, s, m), r in sorted(rows.items()):
+        if r["status"] == "error":
+            print(f"  ERROR {a} x {s} @ {m}: {r.get('error','')[:120]}")
+
+
+def pick_hillclimb(rows):
+    """The three §Perf targets: worst MFU bound, most collective-bound, most
+    representative of the paper's technique (the serving/decode cell with the
+    largest queue-side traffic -- we use decode_32k of the largest arch)."""
+    cands = [r for r in rows.values()
+             if r["status"] == "ok" and r["mesh"] == "16x16"]
+    worst = min(cands, key=lambda r: r.get("mfu_bound", 1.0))
+    coll = max(cands, key=lambda r: r.get("t_collective_s", 0.0)
+               / max(r.get("step_time_bound_s", 1e-9), 1e-9))
+    print("\nhillclimb candidates:")
+    print(f"  worst-MFU: {worst['arch']} x {worst['shape']} "
+          f"(MFU bound {worst.get('mfu_bound',0)*100:.2f}%)")
+    print(f"  most collective-bound: {coll['arch']} x {coll['shape']} "
+          f"(t_coll {fmt_t(coll.get('t_collective_s'))})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+    rows = load(args.jsonl)
+    emit_table(rows, "16x16")
+    emit_table(rows, "2x16x16")
+    emit_summary(rows)
+    try:
+        pick_hillclimb(rows)
+    except ValueError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows + the paper-claim checks.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _emit(name, us, derived=""):
+    print(f"{name},{us:.3f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads (CI)")
+    args = ap.parse_args()
+    pairs = 60 if args.fast else 150
+
+    from . import (fig2_throughput, fig3_persist_cost, fig45_recovery,
+                   fig6_tradeoff, wave_engine)
+
+    print("name,us_per_call,derived")
+    claims = {}
+
+    # --- Figure 2 ---
+    t0 = time.perf_counter()
+    rows2 = fig2_throughput.run(pairs=pairs)
+    for r in rows2:
+        for k in ("perlcrq", "pbqueue", "pwfqueue", "perlcrq_phead"):
+            # sim time units per op -> report 1/throughput as us_per_call
+            _emit(f"fig2/{k}/n{r['threads']}", 1.0 / r[k],
+                  f"throughput={r[k]:.5f}")
+    claims["fig2"] = fig2_throughput.check_claims(rows2)
+    _emit("fig2/elapsed", (time.perf_counter() - t0) * 1e6)
+
+    # --- Figure 3 ---
+    t0 = time.perf_counter()
+    rows3 = fig3_persist_cost.run(pairs=pairs)
+    for r in rows3:
+        for k in ("perlcrq", "no_head", "no_tail"):
+            _emit(f"fig3/{k}/n{r['threads']}", 1.0 / r[k],
+                  f"throughput={r[k]:.5f}")
+    claims["fig3"] = fig3_persist_cost.check_claims(rows3)
+    _emit("fig3/elapsed", (time.perf_counter() - t0) * 1e6)
+
+    # --- Figures 4 + 5 ---
+    t0 = time.perf_counter()
+    steps_list = (400, 1500, 4000) if args.fast else (400, 1500, 4000, 8000)
+    rows4 = fig45_recovery.run_fig4(steps_list=steps_list)
+    for r in rows4:
+        _emit(f"fig4/no_tail/ops{r['crash_after_steps']}",
+              r["recovery_sim_no_tail"],
+              f"scan_steps={r['recovery_steps_no_tail']:.0f}")
+        _emit(f"fig4/with_tail/ops{r['crash_after_steps']}",
+              r["recovery_sim_with_tail"],
+              f"scan_steps={r['recovery_steps_with_tail']:.0f}")
+    sizes = (50, 200, 800) if args.fast else (50, 200, 800, 2000)
+    rows5 = fig45_recovery.run_fig5(sizes=sizes)
+    for r in rows5:
+        _emit(f"fig5/no_tail/size{r['approx_queue_size']}",
+              r["recovery_steps_no_tail"])
+        _emit(f"fig5/with_tail/size{r['approx_queue_size']}",
+              r["recovery_steps_with_tail"])
+    claims["fig45"] = fig45_recovery.check_claims(rows4, rows5)
+    _emit("fig45/elapsed", (time.perf_counter() - t0) * 1e6)
+
+    # --- Figure 6 (+ the persistence-principles strawman) ---
+    rows6 = fig6_tradeoff.run(pairs=pairs)
+    naive = fig6_tradeoff.run_naive(pairs=pairs)
+    for r in rows6:
+        _emit(f"fig6/k{r['persist_tail_every']}", 1.0 / r["throughput"],
+              f"pwbs_per_op={r['pwbs_per_op']:.2f}")
+    _emit("fig6/naive_every_fai", 1.0 / naive["throughput"],
+          f"pwbs_per_op={naive['pwbs_per_op']:.2f}")
+    claims["fig6"] = fig6_tradeoff.check_claims(rows6, naive)
+
+    # --- wave engine wall-clock ---
+    rowsw = wave_engine.run(iters=50 if args.fast else 200)
+    for r in rowsw:
+        _emit(f"wave/{r['path']}", r["us_per_wave"],
+              f"ops_per_sec={r['ops_per_sec']:.0f}")
+
+    print("\n# paper-claim checks", file=sys.stderr)
+    print(json.dumps(claims, indent=2, default=float), file=sys.stderr)
+    ok = (claims["fig2"]["claim_2x"] and claims["fig2"]["claim_phead_collapse"]
+          and claims["fig45"]["claim_recovery_grows_with_ops"]
+          and claims["fig45"]["claim_tail_bounds_recovery"]
+          and claims["fig6"]["claim_tradeoff"])
+    print(f"\n# ALL PAPER CLAIMS {'REPRODUCED' if ok else 'NOT reproduced'}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

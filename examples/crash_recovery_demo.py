@@ -1,0 +1,27 @@
+"""End-to-end crash/recovery demo: train with checkpoints + persistent data
+pipeline, kill the run mid-flight, restart, verify exactly-once sample
+delivery and step recovery from worker mirrors.
+
+Run:  PYTHONPATH=src python examples/crash_recovery_demo.py
+"""
+import shutil
+import subprocess
+import sys
+
+CKPT = "/tmp/repro_demo_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+base = [sys.executable, "-m", "repro.launch.train", "--arch", "internlm2-1.8b",
+        "--reduced", "--steps", "60", "--batch", "4", "--seq", "64",
+        "--ckpt", CKPT, "--ckpt-every", "10", "--log-every", "10"]
+
+print("=== phase 1: run until simulated crash at step 35 ===")
+p = subprocess.run(base + ["--crash-at", "35"], env={"PYTHONPATH": "src"},
+                   cwd=".")
+assert p.returncode == 42, f"expected simulated-crash exit 42, got {p.returncode}"
+
+print("\n=== phase 2: restart -- recovery resumes from the mirror max ===")
+p = subprocess.run(base, env={"PYTHONPATH": "src"}, cwd=".")
+assert p.returncode == 0
+print("\ncrash/recovery demo complete: training resumed from the last "
+      "durable checkpoint (max over per-worker step mirrors).")

@@ -1,0 +1,14 @@
+"""Continuous-batching serving behind the persistent request queue, with a
+mid-serving crash: no request is lost, none is answered twice.
+
+Run:  PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import subprocess
+import sys
+
+p = subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-1b",
+     "--requests", "10", "--max-new", "6", "--max-batch", "3",
+     "--crash-after", "4"],
+    env={"PYTHONPATH": "src"}, cwd=".")
+assert p.returncode == 0

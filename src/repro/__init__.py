@@ -1,0 +1,3 @@
+"""repro: fault-tolerant JAX training/serving framework built around the
+persistent FIFO queues of Fatourou-Giachoudis-Mallis (2024)."""
+__version__ = "0.1.0"

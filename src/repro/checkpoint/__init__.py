@@ -1,0 +1,2 @@
+from .manager import CheckpointManager  # noqa: F401
+from .local_persistence import CounterMirrors  # noqa: F401

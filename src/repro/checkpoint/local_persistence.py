@@ -1,0 +1,58 @@
+"""Local persistence for runtime counters (the paper's technique, lifted to
+the cluster level).
+
+Instead of persisting one contended global record (step counter, data-
+pipeline cursor, serving watermark) through a coordinator, EVERY worker
+persists its own single-writer mirror; recovery takes the max (paper
+Algorithm 3 line 60: ``Head <- max_i Head_i``).  Mirrors are tiny files --
+one per worker -- written atomically (write-to-temp + rename = the
+pwb+psync pair)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+
+class CounterMirrors:
+    def __init__(self, root: str, name: str, worker: int):
+        self.dir = os.path.join(root, f"{name}.mirrors")
+        self.worker = worker
+        os.makedirs(self.dir, exist_ok=True)
+
+    def _path(self, worker: int) -> str:
+        return os.path.join(self.dir, f"w{worker:05d}.json")
+
+    def persist(self, value: int, extra: Optional[Dict] = None) -> None:
+        """pwb+psync analog: atomic replace of this worker's mirror."""
+        payload = {"value": int(value), **(extra or {})}
+        fd, tmp = tempfile.mkstemp(dir=self.dir)
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(self.worker))
+
+    def recover(self) -> int:
+        """max over all persisted mirrors (0 if none)."""
+        best = 0
+        for fn in os.listdir(self.dir):
+            if fn.endswith(".json"):
+                try:
+                    with open(os.path.join(self.dir, fn)) as f:
+                        best = max(best, int(json.load(f)["value"]))
+                except (ValueError, KeyError, json.JSONDecodeError):
+                    continue  # torn mirror: ignore (single-writer atomicity)
+        return best
+
+    def recover_all(self) -> Dict[int, int]:
+        out = {}
+        for fn in sorted(os.listdir(self.dir)):
+            if fn.endswith(".json"):
+                try:
+                    with open(os.path.join(self.dir, fn)) as f:
+                        out[int(fn[1:6])] = int(json.load(f)["value"])
+                except (ValueError, KeyError, json.JSONDecodeError):
+                    continue
+        return out

@@ -1,0 +1,196 @@
+"""Sharded, asynchronous, crash-consistent checkpointing.
+
+Design (maps the paper's persistence discipline onto training state):
+
+  * each worker writes ONLY its own shard files (single-writer, the
+    low-contention persist the paper advocates),
+  * shard files are written to a temp name and atomically renamed, then the
+    worker persists its step MIRROR (local_persistence.CounterMirrors) -- a
+    checkpoint "exists" at step s when >= quorum mirrors say s and every
+    shard file of s is present (two-phase commit without a coordinator),
+  * recovery: step = max over mirrors that have a COMPLETE shard set (the
+    paper's max-over-mirrors, guarded by completeness -- the analog of
+    PerCRQ recovery validating the ring contents),
+  * async mode: the flush happens on a worker thread, overlapping the next
+    train step (compute/IO overlap); ``wait()`` is the psync,
+  * content hashes (crc32) guard torn files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .local_persistence import CounterMirrors
+
+
+def _flat(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flat(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flat(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflat_into(tree, values, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _unflat_into(tree[k], values, f"{prefix}/{k}")
+                for k in sorted(tree)}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_unflat_into(v, values, f"{prefix}/{i}")
+                          for i, v in enumerate(tree))
+    return values[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, worker: int = 0, n_workers: int = 1,
+                 async_flush: bool = True, keep: int = 3):
+        self.root = root
+        self.worker = worker
+        self.n_workers = n_workers
+        self.async_flush = async_flush
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self.mirrors = CounterMirrors(root, "step", worker)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save --------------------------------------------------------------------
+
+    def _shard_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:010d}")
+
+    def _write_shard(self, step: int, tree: Any, extra: Dict) -> None:
+        try:
+            d = self._shard_dir(step)
+            os.makedirs(d, exist_ok=True)
+            manifest = {}
+            for path, leaf in _flat(tree):
+                arr = np.asarray(jax.device_get(leaf))
+                if arr.dtype.name == "bfloat16":
+                    # np.load cannot round-trip bf16: store as f32 (lossless
+                    # widening); restore() casts back per the manifest dtype
+                    arr = arr.astype(np.float32)
+                fn = f"w{self.worker:05d}{path.replace('/', '.')}.npy"
+                tmp = os.path.join(d, fn + ".tmp")
+                with open(tmp, "wb") as f:
+                    np.save(f, arr)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, os.path.join(d, fn))
+                with open(os.path.join(d, fn), "rb") as f:
+                    crc = zlib.crc32(f.read())
+                manifest[path] = {"file": fn, "crc32": crc,
+                                  "shape": list(arr.shape),
+                                  "dtype": str(arr.dtype)}
+            mfn = os.path.join(d, f"manifest_w{self.worker:05d}.json")
+            tmp = mfn + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"manifest": manifest, "extra": extra}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, mfn)
+            # the commit point: persist the step mirror (paper line 60)
+            self.mirrors.persist(step)
+            self._gc(step)
+        except BaseException as e:  # noqa: BLE001
+            self._error = e
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        """Async by default: the device->host snapshot happens HERE (before
+        returning -- the caller may donate/overwrite the buffers in the next
+        step), and only the file I/O overlaps compute."""
+        self.wait()
+        if self._error:
+            raise self._error
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_flush:
+            self._thread = threading.Thread(
+                target=self._write_shard, args=(step, snapshot, extra or {}))
+            self._thread.start()
+        else:
+            self._write_shard(step, snapshot, extra or {})
+            if self._error:
+                raise self._error
+
+    def wait(self) -> None:
+        """The psync: block until the in-flight flush lands."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self, newest: int) -> None:
+        steps = self.available_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            if s == newest:
+                continue
+            d = self._shard_dir(s)
+            for fn in os.listdir(d):
+                if fn.startswith(f"w{self.worker:05d}") or \
+                        fn == f"manifest_w{self.worker:05d}.json":
+                    os.unlink(os.path.join(d, fn))
+            try:
+                os.rmdir(d)
+            except OSError:
+                pass  # other workers' shards remain
+
+    # -- restore -------------------------------------------------------------------
+
+    def available_steps(self) -> List[int]:
+        out = []
+        for fn in os.listdir(self.root):
+            if fn.startswith("step_"):
+                out.append(int(fn[5:]))
+        return sorted(out)
+
+    def _complete(self, step: int) -> bool:
+        d = self._shard_dir(step)
+        if not os.path.isdir(d):
+            return False
+        for w in range(self.n_workers):
+            if not os.path.exists(os.path.join(d, f"manifest_w{w:05d}.json")):
+                return False
+        return True
+
+    def latest_step(self) -> Optional[int]:
+        """Recovery rule: the max mirror value with a COMPLETE shard set;
+        fall back to older complete checkpoints if the newest is torn."""
+        candidates = sorted(set(self.mirrors.recover_all().values()),
+                            reverse=True)
+        for s in candidates:
+            if self._complete(s):
+                return s
+        for s in reversed(self.available_steps()):
+            if self._complete(s):
+                return s
+        return None
+
+    def restore(self, step: int, like: Any) -> Any:
+        d = self._shard_dir(step)
+        with open(os.path.join(d, f"manifest_w{self.worker:05d}.json")) as f:
+            manifest = json.load(f)["manifest"]
+        values = {}
+        for path, meta in manifest.items():
+            fn = os.path.join(d, meta["file"])
+            with open(fn, "rb") as fh:
+                raw = fh.read()
+            if zlib.crc32(raw) != meta["crc32"]:
+                raise IOError(f"checksum mismatch in {fn} (torn write?)")
+            with open(fn, "rb") as fh:
+                # device arrays (donation-compatible), dtype from the leaf
+                values[path] = np.load(fh)
+        import jax.numpy as jnp
+        out = _unflat_into(like, values)
+        return jax.tree.map(lambda ref, v: jnp.asarray(v, ref.dtype)
+                            if hasattr(ref, "dtype") else v, like, out)

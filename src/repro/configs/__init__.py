@@ -1,0 +1,2 @@
+from .base import LONG_CTX_ARCHS, SHAPES, ModelConfig, MoEConfig, RGLRUConfig, SSMConfig, ShapeConfig  # noqa: F401
+from .registry import ARCHS, get_config  # noqa: F401

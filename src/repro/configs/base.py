@@ -1,0 +1,181 @@
+"""Model/shape configuration schema for the 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_expert: bool = False      # llama4 has one shared expert
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0               # 0 => d_model
+    d_conv: int = 4
+    block_pattern: Tuple[str, ...] = ("rglru", "rglru", "local")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    rope_theta: float = 10_000.0
+    rope_theta_local: Optional[float] = None   # gemma3 dual-theta
+    norm_eps: float = 1e-6
+    act: str = "silu"                # silu (SwiGLU) | gelu (GeGLU)
+    tie_embeddings: bool = False
+    # attention pattern: period of layer kinds; layer i uses
+    # pattern[i % len(pattern)].  kinds: "global", "local", "rglru", "ssm"
+    pattern: Tuple[str, ...] = ("global",)
+    window: int = 1024               # local-attention window
+    mrope: bool = False              # qwen2-vl multimodal RoPE
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1               # MoE layer every k layers (else dense)
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_ctx: int = 1500              # encoder frames (stub frontend output)
+    # frontend stub: "none" | "audio" | "vision"
+    frontend: str = "none"
+    # training
+    optimizer: str = "adamw"         # adamw | adafactor
+    remat: bool = True
+    scan_layers: bool = True
+    dtype: str = "bfloat16"
+    # ---- performance levers (EXPERIMENTS.md §Perf hillclimbs) ----
+    attn_probs_bf16: bool = False    # bf16 attention probabilities (PV in
+    #                                   bf16 with fp32 accumulation)
+    remat_policy: str = "full"       # full | dots (save matmul outputs)
+    moe_shard_dispatch: bool = False  # explicit expert-parallel sharding
+    #                                   constraints on the dispatch buffers
+    moe_impl: str = "pjit"           # pjit | shard_map (expert-local + psum)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def kind_of_layer(self, i: int) -> str:
+        return self.pattern[i % len(self.pattern)]
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe_every == self.moe_every - 1)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.hd
+        p = self.vocab * d  # embeddings
+        if not self.tie_embeddings:
+            p += self.vocab * d
+        for i in range(self.n_layers):
+            kind = self.kind_of_layer(i)
+            if kind in ("global", "local"):
+                p += d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            elif kind == "rglru":
+                w = (self.rglru.lru_width or d) if self.rglru else d
+                p += 2 * d * w + w * d + 2 * w * w // 1 + w * self.rglru.d_conv
+            elif kind == "ssm":
+                s = self.ssm
+                di = s.expand * d
+                p += d * (2 * di + 2 * s.n_groups * s.d_state) + di * d + di * s.d_conv
+            if self.layer_is_moe(i):
+                m = self.moe
+                p += d * m.n_experts  # router
+                p += m.n_experts * 3 * d * m.d_ff_expert
+                if m.shared_expert:
+                    p += 3 * d * (m.d_ff_shared or m.d_ff_expert)
+            elif kind in ("global", "local", "rglru", "ssm"):
+                p += 3 * d * self.d_ff if self.d_ff else 0
+        # encoder (whisper)
+        for _ in range(self.enc_layers):
+            p += 4 * d * d + 3 * d * self.d_ff
+            p += 4 * d * d  # decoder cross-attention extra
+        return p
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.n_params()
+        m = self.moe
+        total = self.n_params()
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.layer_is_moe(i))
+        all_experts = n_moe_layers * m.n_experts * 3 * self.d_model * m.d_ff_expert
+        active = n_moe_layers * m.top_k * 3 * self.d_model * m.d_ff_expert
+        return total - all_experts + active
+
+    def reduced(self, **over) -> "ModelConfig":
+        """A small same-family config for CPU smoke tests."""
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, len(self.pattern) + 1
+                         if len(self.pattern) > 1 else 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            enc_layers=min(self.enc_layers, 2),
+            enc_ctx=16,
+        )
+        if self.moe is not None:
+            # capacity_factor = E: no token is ever dropped at smoke sizes, so
+            # prefill/decode consistency tests routing math, not drop policy
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2), d_ff_expert=64,
+                d_ff_shared=64 if self.moe.shared_expert else 0,
+                capacity_factor=float(min(self.moe.n_experts, 4)))
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(self.ssm, d_state=16, head_dim=16,
+                                            chunk=8)
+        if self.rglru is not None:
+            kw["rglru"] = dataclasses.replace(self.rglru, lru_width=128)
+        kw.update(over)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    grad_accum: int = 1   # microbatching for the big training shapes
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k only runs for sub-quadratic architectures (see DESIGN.md):
+LONG_CTX_ARCHS = {"mamba2-780m", "recurrentgemma-2b", "gemma3-27b", "gemma3-1b"}

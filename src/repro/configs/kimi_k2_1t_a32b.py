@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384e top-8 -- trillion-param MoE (paper-table)
+[arXiv:2501.kimi2; unverified].
+
+Uses Adafactor: 1T params cannot hold Adam m/v on a 256-chip v5e pod (see
+EXPERIMENTS.md §Dry-run)."""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    head_dim=128,
+    rope_theta=50_000.0,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff_expert=2048),
+    moe_every=1,
+    optimizer="adafactor",
+)

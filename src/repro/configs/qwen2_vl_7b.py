@@ -1,0 +1,22 @@
+"""qwen2-vl-7b [vlm]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 -- M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings that replace the first n_patches token embeddings; the backbone
+applies M-RoPE throughout."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    mrope=True,
+    frontend="vision",
+)

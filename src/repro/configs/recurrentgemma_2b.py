@@ -1,0 +1,20 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 -- RG-LRU + local attn, 1:2 [arXiv:2402.19427; hf]."""
+from .base import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    pattern=("rglru", "rglru", "local"),
+    window=2048,
+    rglru=RGLRUConfig(lru_width=2560, d_conv=4),
+    tie_embeddings=True,
+    act="gelu",
+)

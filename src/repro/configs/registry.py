@@ -1,0 +1,88 @@
+"""Architecture registry: ``--arch <id>`` resolution + input specs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import LONG_CTX_ARCHS, SHAPES, ModelConfig, ShapeConfig
+
+ARCHS = {
+    "internlm2-1.8b": "internlm2_1_8b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "gemma3-27b": "gemma3_27b",
+    "gemma3-1b": "gemma3_1b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-tiny": "whisper_tiny",
+}
+
+# microbatch factor per (arch, shape) for the big training cells: global
+# batch is split into grad-accumulation microbatches so activations fit HBM.
+GRAD_ACCUM = {
+    ("kimi-k2-1t-a32b", "train_4k"): 16,
+    ("gemma3-27b", "train_4k"): 8,
+    ("llama4-scout-17b-a16e", "train_4k"): 8,
+    ("mistral-nemo-12b", "train_4k"): 4,
+    ("qwen2-vl-7b", "train_4k"): 4,
+}
+
+N_PATCHES = 1024  # qwen2-vl stub: patch embeddings replacing the first slots
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def cell_is_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CTX_ARCHS
+    return True
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if cell_is_applicable(arch, shape):
+        return None
+    return ("pure full-attention arch: 500k-token decode requires "
+            "sub-quadratic attention (see DESIGN.md shape applicability)")
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell --
+    weak-type-correct, shardable, no device allocation."""
+    cfg = get_config(arch)
+    sc = SHAPES[shape]
+    B, S = sc.global_batch, sc.seq_len
+    i32 = jnp.int32
+    if sc.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_ctx, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_PATCHES, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if sc.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_ctx, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_PATCHES, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "lengths": jax.ShapeDtypeStruct((B,), i32),
+    }

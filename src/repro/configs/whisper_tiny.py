@@ -1,0 +1,24 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (GQA kv=6) d_ff=1536 vocab=51865
+-- enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified].
+
+4 encoder layers + 4 decoder layers (with cross-attention).  The conv/mel
+frontend is a STUB: input_specs() provides precomputed frame embeddings
+[B, 1500, 384]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    head_dim=64,
+    enc_layers=4,
+    enc_ctx=1500,
+    frontend="audio",
+    scan_layers=False,   # enc-dec interleaves cross-attention per layer
+    act="gelu",
+)

@@ -1,0 +1,9 @@
+"""Core: faithful reproduction of the paper's persistent FIFO queues
+(PerIQ / PerCRQ / PerLCRQ) on a simulated shared-memory machine with
+explicit-epoch persistency, plus the TPU-native batched wave engine."""
+
+from .machine import (BOT, CLOSED, EMPTY, OK, TOP, CostModel, Machine)  # noqa: F401
+from .iq import IQ, PerIQ  # noqa: F401
+from .crq import CRQ  # noqa: F401
+from .lcrq import LCRQ, install_line_map  # noqa: F401
+from .combining import CombiningQueue, PBQueue, PWFQueue  # noqa: F401

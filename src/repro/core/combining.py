@@ -1,0 +1,177 @@
+"""Combining-based persistent queue baselines (PBQueue / PWFQueue style).
+
+The paper's competitors [9] (Fatourou-Kallimanis-Kosmas, PPoPP'22): a
+combiner thread acquires a lock, collects announced operations from all
+threads, applies them to a sequential queue, persists the modified state with
+a batch of pwbs + ONE psync, publishes results, releases.
+
+We model the algorithmic structure that determines performance:
+  * per-op persistent announcement (pwb+psync on the thread's own slot --
+    cheap, single-writer),
+  * serialized combining (lock + one pass over announce slots),
+  * batched persistence of the queue state (head/tail/cells/results),
+  * PWFQueue = wait-free flavor: extra helping bookkeeping per applied op
+    and an extra fence per batch (the price of wait-freedom).
+
+Recovery is trivial (state is persisted per batch): re-read head/tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+from .machine import (EMPTY, OK, CAS, LocalWork, Machine, PSync, PWB, Read,
+                      Write)
+
+HEAD = ("cq", "head")
+TAIL = ("cq", "tail")
+LOCK = ("cq", "lock")
+
+
+def cell(i: int):
+    return ("cq", "arr", i)
+
+
+def ann(tid: int):
+    return ("cq", "ann", tid)
+
+
+def res(tid: int):
+    return ("cq", "res", tid)
+
+
+def dres(tid: int):
+    """Durable shadow of res: persisted WITH the batch (exactly-once across
+    crashes -- without it, recovered announce slots would be re-applied)."""
+    return ("cq", "dres", tid)
+
+
+class CombiningQueue:
+    persistent = True
+
+    def __init__(self, m: Machine, wait_free: bool = False, persistent: bool = True):
+        self.m = m
+        self.wait_free = wait_free
+        self.persistent = persistent
+        m.declare(HEAD, 0)
+        m.declare(TAIL, 0)
+        m.declare(LOCK, 0)
+        for t in range(m.n):
+            m.declare(ann(t), (0, None, None))
+            m.declare(res(t), (0, None))
+            m.declare(dres(t), (0, None))
+        prev = m.default_factory
+        m.default_factory = lambda v, prev=prev: (
+            None if isinstance(v, tuple) and v[:2] == ("cq", "arr") else (prev(v) if prev else None)
+        )
+        self._seq = [0] * m.n
+
+    # -- public ops -------------------------------------------------------------
+
+    def enqueue(self, tid: int, x: Any) -> Generator:
+        return (yield from self._op(tid, "enq", x))
+
+    def dequeue(self, tid: int) -> Generator:
+        v = yield from self._op(tid, "deq", None)
+        return v
+
+    # -- combining ---------------------------------------------------------------
+
+    def _op(self, tid: int, kind: str, arg: Any) -> Generator:
+        self._seq[tid] += 1
+        seq = self._seq[tid]
+        yield Write(ann(tid), (seq, kind, arg))
+        if self.persistent:
+            # announcement must be durable before the op can be applied
+            # (detectability), but it is a single-writer line => cheap.
+            yield PWB(ann(tid))
+            yield PSync()
+        while True:
+            r = yield Read(res(tid))
+            if r is not None and r[0] == seq:
+                return r[1]
+            got = yield CAS(LOCK, 0, 1)
+            if got:
+                r = yield Read(res(tid))
+                if r is not None and r[0] == seq:
+                    yield Write(LOCK, 0)
+                    return r[1]
+                out = yield from self._combine(tid)
+                yield Write(LOCK, 0)
+                if out is not None:
+                    return out
+            else:
+                yield LocalWork(2.0)  # bounded spin
+
+    def _combine(self, tid: int) -> Generator:
+        m = self.m
+        h = yield Read(HEAD)
+        t = yield Read(TAIL)
+        dirty = []
+        my_result = None
+        served = []
+        for i in range(m.n):
+            a = yield Read(ann(i))
+            if a is None or a[1] is None:
+                continue
+            seq, kind, arg = a
+            r = yield Read(dres(i))
+            if r is not None and r[0] >= seq:
+                continue  # already applied (durably recorded)
+            if kind == "enq":
+                yield Write(cell(t), arg)
+                dirty.append(cell(t))
+                t += 1
+                v = OK
+            else:
+                if h < t:
+                    v = yield Read(cell(h))
+                    h += 1
+                else:
+                    v = EMPTY
+            if self.wait_free:
+                # wait-free helping bookkeeping (per applied op)
+                yield Write(("cq", "help", i), (seq, v))
+            served.append((i, seq, v))
+            yield Write(dres(i), (seq, v))
+            dirty.append(dres(i))
+            if i == tid:
+                my_result = v
+        yield Write(HEAD, h)
+        yield Write(TAIL, t)
+        if self.persistent:
+            # CRITICAL ordering: the batch state AND the applied-sequence
+            # records must be durable BEFORE any result is published --
+            # otherwise a thread can complete an op whose effect is lost by a
+            # crash, or recovery re-applies announced ops (duplication).
+            for d in dirty:
+                yield PWB(d)
+            yield PWB(HEAD)
+            yield PWB(TAIL)
+            yield PSync()
+            if self.wait_free:
+                yield PSync()  # extra fence for the helping records
+        for i, seq, v in served:
+            yield Write(res(i), (seq, v))
+        return my_result
+
+    # -- recovery ------------------------------------------------------------------
+
+    def recover(self) -> dict:
+        m = self.m
+        h = m.peek_nvm(HEAD) or 0
+        t = m.peek_nvm(TAIL) or 0
+        m.poke_nvm(LOCK, 0)
+        for i in range(m.n):
+            # republish durably-applied results so recovered announce slots
+            # are not served twice
+            m.poke_nvm(res(i), m.peek_nvm(dres(i)))
+        return {"steps": 2 + m.n, "sim_time": (2 + m.n) * m.cm.shared_op,
+                "head": h, "tail": t}
+
+
+def PBQueue(m: Machine) -> CombiningQueue:
+    return CombiningQueue(m, wait_free=False)
+
+
+def PWFQueue(m: Machine) -> CombiningQueue:
+    return CombiningQueue(m, wait_free=True)

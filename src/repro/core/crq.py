@@ -1,0 +1,265 @@
+"""CRQ and PerCRQ (paper Algorithm 3).
+
+A CRQ is a circular array of R cells, each holding a packed triple
+``(safe, idx, val)`` (the paper's CAS2 operates on the packed cell; we model
+it as CAS on the tuple, which is what the 16-byte CAS2 implements).  Tail is
+packed ``(closed_bit, t)``.
+
+Persistence modes (the paper's algorithm + its Section 5 ablations):
+
+  * ``none``    -- plain CRQ (conventional, no persistence instructions)
+  * ``percrq``  -- the paper's PerCRQ: one pwb+psync per op; dequeues persist
+                   the per-thread LOCAL mirror Head_i (local persistence),
+                   enqueues persist the Q cell they wrote; Tail persisted only
+                   when closing (guarded by closedFlag).
+  * ``phead``   -- PerCRQ-PHead: dequeues persist the SHARED Head (the paper
+                   shows this collapses under contention -- Figures 2, 3)
+  * ``nohead``  -- pwbs on Head/mirrors removed (Figure 3 ablation)
+  * ``notail``  -- pwbs on Tail removed (Figure 3 ablation)
+"""
+from __future__ import annotations
+
+from typing import Any, Generator, Optional, Tuple
+
+from .machine import (BOT, CLOSED, EMPTY, FAI, OK, CAS, GetSet, LocalWork,
+                      Machine, PSync, PWB, Read, TAS, Write)
+
+MODES = ("none", "percrq", "phead", "nohead", "notail")
+
+
+class CRQ:
+    """One circular-ring-queue instance (possibly one node of PerLCRQ)."""
+
+    def __init__(
+        self,
+        m: Machine,
+        R: int,
+        mode: str = "percrq",
+        ns: Any = 0,
+        starvation_limit: Optional[int] = None,
+    ):
+        assert mode in MODES, mode
+        self.m, self.R, self.mode, self.ns = m, R, mode, ns
+        self.starvation_limit = starvation_limit or max(64, 2 * R)
+        self.TAIL = ("crq", ns, "Tail")
+        self.HEAD = ("crq", ns, "Head")
+        self.closed_flag = [False] * m.n
+
+    # -- variable names ------------------------------------------------------
+
+    def cell(self, u: int):
+        return ("crq", self.ns, "Q", u)
+
+    def mirror(self, tid: int):
+        return ("crq", self.ns, "Head_i", tid)
+
+    def declare(self, first_item: Any = None) -> None:
+        """Initialize state in volatile memory (node creation path uses pokes;
+        the root instance is initialized directly in NVM via init_nvm)."""
+        m = self.m
+        m.declare(self.TAIL, (0, 0))
+        m.declare(self.HEAD, 0)
+        for u in range(self.R):
+            m.declare(self.cell(u), (1, u, BOT))
+        for t in range(m.n):
+            m.declare(self.mirror(t), 0)
+        if first_item is not None:
+            # node pre-seeded with one item (PerLCRQ line 17)
+            m.poke(self.cell(0), (1, 0, first_item))
+            m.poke(self.TAIL, (0, 1))
+            m.poke(("node_seeded", self.ns), True)
+
+    # -- persistence hooks ----------------------------------------------------
+
+    def _persist_cell(self, u: int):
+        if self.mode != "none":
+            yield PWB(self.cell(u))
+            yield PSync()
+
+    def _persist_tail(self):
+        if self.mode in ("percrq", "phead", "nohead"):
+            yield PWB(self.TAIL)
+            yield PSync()
+
+    def _persist_head(self, tid: int):
+        if self.mode in ("percrq", "notail"):
+            # notail removes only the TAIL persists; the local Head mirror
+            # persistence (the paper's central mechanism) stays
+            yield PWB(self.mirror(tid))
+            yield PSync()
+        elif self.mode == "phead":
+            yield PWB(self.HEAD)
+            yield PSync()
+        # nohead / none: no head persistence
+
+    # -- operations (Algorithm 3) ---------------------------------------------
+
+    def enqueue(self, tid: int, x: Any) -> Generator:
+        R = self.R
+        attempts = 0
+        while True:
+            cb, t = yield FAI(self.TAIL, field=1)
+            if cb == 1:  # closed bit set (line 5)
+                if not self.closed_flag[tid]:
+                    # line 7: persist the closed Tail before returning CLOSED
+                    # (otherwise a crash could resurrect the tantrum queue)
+                    yield from self._persist_tail()
+                    self.closed_flag[tid] = True
+                return CLOSED
+            s, i, v = yield Read(self.cell(t % R))  # lines 10-12
+            if v is BOT:
+                ok = i <= t
+                if ok and s != 1:
+                    h = yield Read(self.HEAD)
+                    ok = h <= t
+                if ok and (
+                    yield CAS(self.cell(t % R), (s, i, BOT), (1, t, x))
+                ):  # enqueue transition (line 14)
+                    yield from self._persist_cell(t % R)  # line 15
+                    return OK
+            h = yield Read(self.HEAD)  # line 17
+            attempts += 1
+            if t - h >= R or attempts >= self.starvation_limit:  # line 18
+                yield TAS(self.TAIL, field=0)  # line 19
+                yield from self._persist_tail()  # line 20
+                self.closed_flag[tid] = True
+                return CLOSED
+
+    def dequeue(self, tid: int) -> Generator:
+        R = self.R
+        while True:
+            h = yield FAI(self.HEAD)  # line 25
+            yield Write(self.mirror(tid), h + 1)  # line 26: local mirror
+            e = yield Read(self.cell(h % R))  # line 27
+            while True:  # line 28
+                s, i, v = e
+                if i > h:
+                    break  # line 31 -> goto 43
+                if v is not BOT:
+                    if i == h:
+                        if (
+                            yield CAS(self.cell(h % R), (s, h, v), (s, h + R, BOT))
+                        ):  # dequeue transition (line 34)
+                            yield from self._persist_head(tid)  # line 35
+                            return v
+                    else:
+                        if (
+                            yield CAS(self.cell(h % R), (s, i, v), (0, i, v))
+                        ):  # unsafe transition (line 38)
+                            break  # -> 43
+                else:
+                    if (
+                        yield CAS(self.cell(h % R), (s, i, BOT), (s, h + R, BOT))
+                    ):  # empty transition (line 41)
+                        break  # -> 43
+                e = yield Read(self.cell(h % R))  # re-read & retry inner loop
+            cb, t = yield Read(self.TAIL)  # line 43
+            if t <= h + 1:  # line 44
+                yield from self._persist_head(tid)  # line 45
+                yield from self.fix_state(tid)  # line 46
+                return EMPTY
+            # otherwise: retry the outer loop with a fresh FAI
+
+    def fix_state(self, tid: int) -> Generator:
+        """Lines 48-57: if Tail fell behind Head (dequeuers overran), CAS Tail
+        forward so subsequent enqueues do not write where a dequeuer already
+        exhausted an index."""
+        while True:
+            h = yield Read(self.HEAD)
+            cb, t = yield Read(self.TAIL)
+            if h <= t:
+                return
+            if (yield CAS(self.TAIL, (cb, t), (cb, h))):
+                return
+
+    # -- recovery (lines 58-83) ------------------------------------------------
+
+    def recover(self) -> dict:
+        """Run on the NVM image by the system after a crash.
+
+        Returns stats incl. simulated recovery time (NVM touches x latency).
+        """
+        m, R = self.m, self.R
+        steps = 0
+        # line 60: Head <- max_i Head_i  (local persistence reconstruction)
+        if self.mode == "percrq":
+            head = max(m.peek_nvm(self.mirror(t)) or 0 for t in range(m.n))
+            steps += m.n
+        else:
+            head = m.peek_nvm(self.HEAD) or 0
+            steps += 1
+        # lines 61-68: recover Tail from the maximum index in the array
+        cb, _t = m.peek_nvm(self.TAIL) or (0, 0)
+        tail = 0
+        for u in range(R):
+            s, idx, v = m.peek_nvm(self.cell(u))
+            steps += 1
+            if v is not BOT:
+                tail = max(tail, idx + 1)
+            elif idx >= R:
+                # unoccupied cell with advanced index: a dequeued pair
+                # (Scenario 1/2) -- Tail must clear it
+                tail = max(tail, idx - R + 1)
+        if head > tail:  # line 69: empty queue
+            tail = head
+        else:
+            # lines 71-75: push Head up past persisted dequeue transitions.
+            # NB: the paper's line 73 reads "idx - R > max" with the
+            # assignment "max <- idx - R + 1"; Scenario 2 and Lemma 1(a)
+            # (a persisted deq_i forces Head > i) require the inclusive form
+            # "idx - R + 1 > max" -- we follow the proof, not the typo.
+            mx = head
+            for k in range(min(tail - head, R)):
+                u = (head + k) % R
+                s, idx, v = m.peek_nvm(self.cell(u))
+                steps += 1
+                if v is BOT and idx - R + 1 > mx:
+                    mx = idx - R + 1
+            head = mx
+            # lines 76-80: pull Head down to the smallest occupied index in
+            # range (Scenario 3: items below a stale persisted Head)
+            mn = tail
+            for k in range(min(tail - head, R)):
+                u = (head + k) % R
+                s, idx, v = m.peek_nvm(self.cell(u))
+                steps += 1
+                if v is not BOT and head <= idx < mn:
+                    mn = idx
+            if mn < tail:
+                head = mn
+        # lines 81-82: re-initialize cells outside the live range [head, tail)
+        live = min(max(tail - head, 0), R)
+        i = head - 1
+        for _ in range(R - live):
+            s, idx, v = m.peek_nvm(self.cell(i % R))
+            m.poke_nvm(self.cell(i % R), (1, i + R, BOT))
+            steps += 1
+            i -= 1
+        # line 83: reset all safe bits
+        for u in range(R):
+            s, idx, v = m.peek_nvm(self.cell(u))
+            if s != 1:
+                m.poke_nvm(self.cell(u), (1, idx, v))
+            steps += 1
+        m.poke_nvm(self.HEAD, head)
+        m.poke_nvm(self.TAIL, (cb, tail))
+        for t in range(m.n):
+            m.poke_nvm(self.mirror(t), head)
+        self.closed_flag = [False] * m.n
+        return {
+            "steps": steps,
+            "sim_time": steps * m.cm.shared_op + 2 * m.cm.flush_base,
+            "head": head,
+            "tail": tail,
+            "closed": cb,
+        }
+
+    # -- debugging helpers -----------------------------------------------------
+
+    def snapshot(self, nvm: bool = False) -> dict:
+        peek = self.m.peek_nvm if nvm else self.m.peek
+        return {
+            "tail": peek(self.TAIL),
+            "head": peek(self.HEAD),
+            "cells": [peek(self.cell(u)) for u in range(self.R)],
+        }

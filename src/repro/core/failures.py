@@ -1,0 +1,75 @@
+"""The paper's failure-simulation framework (Section 5, "Evaluation of the
+recovery cost").
+
+A shared ``recovery_steps`` counter is decremented as threads execute; when it
+reaches 0 all threads cease (full-system crash), the recovery function runs,
+and the recovery time is measured.  A (run, crash, recover) triple is a
+*cycle*; an evaluation is the average recovery time over ``n_cycles`` cycles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+from .harness import pairs_workload, random_schedule, run_epoch
+from .machine import Machine
+
+
+@dataclass
+class CycleResult:
+    cycle: int
+    ops_started: int
+    recovery_sim_time: float
+    recovery_wall_s: float
+    recovery_steps_scanned: int
+
+
+def run_cycles(
+    queue_factory: Callable[[Machine], Any],
+    n_threads: int,
+    recovery_steps: int,
+    n_cycles: int = 10,
+    ops_per_thread: int = 10_000,
+    seed: int = 0,
+    workload_factory: Optional[Callable[[int, int, str], Dict]] = None,
+    eviction_rate: float = 0.0,
+) -> List[CycleResult]:
+    """Run crash/recover cycles on ONE machine (state accumulates across
+    cycles, so recovery cost can grow with queue size -- paper Figures 4/5).
+
+    ``recovery_steps``: number of shared-memory steps before the simulated
+    full-system crash of each cycle.
+    """
+    m = Machine(n_threads, seed=seed, eviction_rate=eviction_rate)
+    m.trace_enabled = False
+    queue = queue_factory(m)
+    results: List[CycleResult] = []
+    wf = workload_factory or (lambda n, k, tag: pairs_workload(n, k, tag))
+    for cycle in range(n_cycles):
+        wl = wf(n_threads, ops_per_thread, f"c{cycle}.")
+        sched = random_schedule(n_threads, recovery_steps, seed=seed * 1000 + cycle)
+        run_epoch(m, queue, wl, sched, epoch=cycle, crash_at_step=recovery_steps)
+        t0 = time.perf_counter()
+        stats = queue.recover()
+        wall = time.perf_counter() - t0
+        m.restart()
+        results.append(
+            CycleResult(
+                cycle=cycle,
+                ops_started=m.step_count,
+                recovery_sim_time=stats.get("sim_time", 0.0),
+                recovery_wall_s=wall,
+                recovery_steps_scanned=stats.get("steps", 0),
+            )
+        )
+    return results
+
+
+def mean_recovery(results: List[CycleResult]) -> Dict[str, float]:
+    n = max(1, len(results))
+    return {
+        "sim_time": sum(r.recovery_sim_time for r in results) / n,
+        "wall_s": sum(r.recovery_wall_s for r in results) / n,
+        "steps": sum(r.recovery_steps_scanned for r in results) / n,
+    }

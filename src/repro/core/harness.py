@@ -1,0 +1,105 @@
+"""Test/benchmark harness: run op workloads against a queue on the machine,
+record per-op histories, crash, recover, drain."""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
+
+from .machine import EMPTY, Machine
+
+
+@dataclass
+class OpRecord:
+    tid: int
+    kind: str  # "enq" | "deq"
+    arg: Any = None
+    result: Any = None
+    completed: bool = False
+    epoch: int = 0
+    t_inv: float = 0.0
+    t_resp: float = 0.0
+
+
+def thread_program(
+    m: Machine, tid: int, queue, ops: Sequence[Tuple[str, Any]],
+    history: List[OpRecord], epoch: int,
+) -> Generator:
+    for kind, arg in ops:
+        rec = OpRecord(tid=tid, kind=kind, arg=arg, epoch=epoch, t_inv=m.global_time)
+        history.append(rec)
+        if kind == "enq":
+            r = yield from queue.enqueue(tid, arg)
+        else:
+            r = yield from queue.dequeue(tid)
+        rec.result, rec.completed, rec.t_resp = r, True, m.global_time
+
+
+def random_schedule(n_threads: int, length: int, seed: int) -> List[int]:
+    rng = random.Random(seed)
+    return [rng.randrange(n_threads) for _ in range(length)]
+
+
+def run_epoch(
+    m: Machine,
+    queue,
+    workloads: Dict[int, Sequence[Tuple[str, Any]]],
+    schedule: Sequence[int],
+    epoch: int = 0,
+    crash_at_step: Optional[int] = None,
+) -> List[OpRecord]:
+    """Run one epoch under an explicit interleaving; optionally crash."""
+    history: List[OpRecord] = []
+    programs = {
+        tid: thread_program(m, tid, queue, ops, history, epoch)
+        for tid, ops in workloads.items()
+    }
+    m.run_schedule(programs, schedule, max_steps=crash_at_step)
+    if crash_at_step is not None:
+        m.crash()
+    return history
+
+
+def drain(m: Machine, queue, tid: int = 0, limit: int = 1_000_000) -> List[Any]:
+    """Single-threaded post-recovery drain: dequeue until EMPTY."""
+    out: List[Any] = []
+
+    def prog():
+        while True:
+            v = yield from queue.dequeue(tid)
+            if v is EMPTY:
+                return
+            out.append(v)
+
+    m.run_schedule({tid: prog()}, itertools.repeat(tid, limit))
+    return out
+
+
+def pairs_workload(n_threads: int, ops_per_thread: int, tag: str = "") -> Dict[int, List[Tuple[str, Any]]]:
+    """The paper's standard benchmark: each thread performs pairs of
+    Enqueue(unique item) / Dequeue, starting from an empty queue."""
+    wl: Dict[int, List[Tuple[str, Any]]] = {}
+    for t in range(n_threads):
+        ops: List[Tuple[str, Any]] = []
+        for k in range(ops_per_thread // 2):
+            ops.append(("enq", f"{tag}t{t}.{k}"))
+            ops.append(("deq", None))
+        wl[t] = ops
+    return wl
+
+
+def random_workload(
+    n_threads: int, ops_per_thread: int, seed: int = 0, p_enq: float = 0.5, tag: str = ""
+) -> Dict[int, List[Tuple[str, Any]]]:
+    rng = random.Random(seed)
+    wl: Dict[int, List[Tuple[str, Any]]] = {}
+    for t in range(n_threads):
+        ops: List[Tuple[str, Any]] = []
+        for k in range(ops_per_thread):
+            if rng.random() < p_enq:
+                ops.append(("enq", f"{tag}t{t}.{k}"))
+            else:
+                ops.append(("deq", None))
+        wl[t] = ops
+    return wl

@@ -1,0 +1,186 @@
+"""LCRQ and PerLCRQ (paper Algorithm 5).
+
+A Michael-Scott-style lock-free linked list of CRQ nodes.  PerLCRQ adds
+exactly the paper's persistence instructions:
+
+  * node creation persists {nd.next, nd.crq.Q[0], nd.crq.Tail} with a SINGLE
+    pwb -- the three fields are placed on one cache line (line 18; we model
+    the layout through the machine's line map, see ``install_line_map``),
+  * the next-pointer is persisted BEFORE the append CAS can be observed
+    (line 23 helper path) and after a successful append (line 29),
+  * dequeues add NO persistence instructions at the list level.
+
+Modes mirror ``core.crq.MODES`` and give the Section 5 ablations
+(PerLCRQ-PHead / no-head / no-tail) plus plain LCRQ (mode="none").
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Generator, Optional
+
+from .crq import CRQ
+from .machine import (BOT, CLOSED, EMPTY, FAI, OK, CAS, LocalWork, Machine,
+                      PSync, PWB, Read)
+
+NULL = None
+FIRST = ("L", "First")
+LAST = ("L", "Last")
+
+
+def node_next(nid: int):
+    return ("node", nid, "next")
+
+
+def _node_line(var: Any) -> Any:
+    """Cache-line map: place node.next, crq.Tail and crq.Q[0] of each node on
+    one line so the single pwb of Algorithm 5 line 18 covers all three."""
+    if isinstance(var, tuple):
+        if var[0] == "node" and var[2] == "next":
+            return ("nodehdr", var[1])
+        if var[0] == "crq" and var[1][0] == "n":
+            if var[2] == "Tail" or (var[2] == "Q" and var[3] == 0):
+                return ("nodehdr", var[1][1])
+    return var
+
+
+def install_line_map(m: Machine) -> None:
+    assert not m.lines, "install the line map before touching memory"
+    m.line_of = _node_line
+
+
+class LCRQ:
+    """LCRQ / PerLCRQ, parameterized by persistence mode."""
+
+    def __init__(
+        self,
+        m: Machine,
+        R: int = 64,
+        mode: str = "percrq",
+        starvation_limit: Optional[int] = None,
+    ):
+        self.m, self.R, self.mode = m, R, mode
+        self.starvation_limit = starvation_limit
+        self._ids = itertools.count()
+        self._crqs = {}
+        nid = self._new_node_nvm()  # initial node, durably initialized
+        m.poke_nvm(FIRST, nid)
+        m.poke_nvm(LAST, nid)
+
+    @property
+    def persistent(self) -> bool:
+        return self.mode != "none"
+
+    # -- node management -------------------------------------------------------
+
+    def crq_of(self, nid: int) -> CRQ:
+        c = self._crqs.get(nid)
+        if c is None:
+            c = CRQ(
+                self.m,
+                self.R,
+                mode=self.mode,
+                ns=("n", nid),
+                starvation_limit=self.starvation_limit,
+            )
+            self._crqs[nid] = c
+        return c
+
+    def _new_node_nvm(self) -> int:
+        """Durably-initialized node (initial queue node at construction)."""
+        nid = next(self._ids)
+        crq = self.crq_of(nid)
+        crq.declare()
+        self.m.poke_nvm(node_next(nid), NULL)
+        self.m.poke_nvm(crq.TAIL, (0, 0))
+        self.m.poke_nvm(crq.HEAD, 0)
+        return nid
+
+    def _create_node(self, tid: int, x: Any) -> Generator:
+        """PerLCRQ lines 17-18: create a node seeded with x; persist header
+        (next + crq.Q[0] + crq.Tail share one cache line => one pwb)."""
+        nid = next(self._ids)
+        crq = self.crq_of(nid)
+        crq.declare()
+        m = self.m
+        m.poke(node_next(nid), NULL)
+        m.poke(crq.cell(0), (1, 0, x))
+        m.poke(crq.TAIL, (0, 1))
+        m.poke(crq.HEAD, 0)
+        yield LocalWork(4.0)  # allocation + initialization work
+        if self.persistent:
+            yield PWB(node_next(nid))  # one line: next + Q[0] + Tail
+            yield PSync()
+        return nid
+
+    # -- operations (Algorithm 5) -----------------------------------------------
+
+    def enqueue(self, tid: int, x: Any) -> Generator:
+        nd: Optional[int] = None  # lazily created on first CLOSED
+        while True:  # line 19
+            l = yield Read(LAST)  # line 20
+            crq = self.crq_of(l)  # line 21
+            nxt = yield Read(node_next(l))  # line 22
+            if nxt is not NULL:
+                # Last is falling behind: help (lines 23-25).  The next
+                # pointer must be durable before Last can move over it.
+                if self.persistent:
+                    yield PWB(node_next(l))
+                    yield PSync()
+                yield CAS(LAST, l, nxt)
+                continue
+            res = yield from crq.enqueue(tid, x)  # line 26
+            if res is not CLOSED:
+                return OK  # line 27
+            if nd is None:
+                nd = yield from self._create_node(tid, x)
+            if (yield CAS(node_next(l), NULL, nd)):  # line 28
+                if self.persistent:
+                    yield PWB(node_next(l))  # line 29
+                    yield PSync()
+                yield CAS(LAST, l, nd)  # line 30
+                return OK  # line 31
+
+    def dequeue(self, tid: int) -> Generator:
+        while True:  # line 7
+            f = yield Read(FIRST)  # line 8
+            crq = self.crq_of(f)  # line 9
+            v = yield from crq.dequeue(tid)  # line 10
+            if v is not EMPTY:
+                return v  # lines 11-12
+            nxt = yield Read(node_next(f))  # line 13
+            if nxt is NULL:
+                return EMPTY  # line 14
+            yield CAS(FIRST, f, nxt)  # line 15
+
+    # -- recovery (Algorithm 5 lines 32-40) ---------------------------------------
+
+    def recover(self) -> dict:
+        """System-run recovery: walk the durable list from First, run CRQ
+        recovery on every node, then advance Last to the true last node.
+        First never changes at recovery (paper Section 4.3)."""
+        m = self.m
+        stats = {"nodes": 0, "steps": 0, "sim_time": 0.0}
+        l = m.peek_nvm(FIRST)
+        last = m.peek_nvm(LAST)
+        while l != last:  # lines 34-36
+            r = self.crq_of(l).recover()
+            stats["nodes"] += 1
+            stats["steps"] += r["steps"]
+            stats["sim_time"] += r["sim_time"]
+            l = m.peek_nvm(node_next(l))
+            if l is NULL:  # durable Last was ahead of durable links
+                break
+        # lines 37-40: recover nodes from Last onwards, advancing Last
+        cur = last
+        while True:
+            r = self.crq_of(cur).recover()
+            stats["nodes"] += 1
+            stats["steps"] += r["steps"]
+            stats["sim_time"] += r["sim_time"]
+            nxt = m.peek_nvm(node_next(cur))
+            if nxt is NULL:
+                break
+            cur = nxt
+        m.poke_nvm(LAST, cur)
+        stats["sim_time"] += 2 * m.cm.flush_base
+        return stats

@@ -1,0 +1,301 @@
+"""Durable-linearizability checking.
+
+Two layers:
+
+1. ``periq_linearization`` -- a faithful implementation of the paper's
+   Algorithm 2 linearization procedure for PerIQ, driven by the machine's NVM
+   image at crash time.  For PerIQ the rules collapse to a crisp
+   characterization (Section 4.1):
+
+     * enq_t linearized  iff NVM[Q[t]] == x_t (enqueue persisted) or
+                              NVM[Q[t]] == ⊤ (its matching dequeue persisted)
+     * deq_t linearized  iff NVM[Q[t]] == ⊤, or (enq_t linearized and some
+                              following dequeue persisted: ∃ t' > t with
+                              NVM[Q[t']] == ⊤; ticket density makes deq_t
+                              active whenever a later ticket was handed out)
+
+   The durable queue state after recovery must therefore drain exactly
+   ``[x_t for t in sorted(E - D)]`` -- checked by ``check_periq_crash``.
+
+2. ``check_fifo_history`` -- an algorithm-agnostic checker for multi-epoch
+   histories with unique items: no duplication, no invention, real-time FIFO,
+   and conservation across crashes.  Used for PerCRQ / PerLCRQ / combining
+   queues under hypothesis-generated schedules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .harness import OpRecord
+from .iq import HEAD, TAIL, qcell
+from .machine import BOT, EMPTY, FAI, GetSet, Machine, TOP
+
+
+# ---------------------------------------------------------------------------
+# PerIQ: Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+def periq_linearization(m: Machine, max_index: Optional[int] = None) -> Tuple[Set[int], Set[int], Dict[int, Any]]:
+    """Compute linearized enqueue/dequeue index sets from the NVM image.
+
+    Returns (E, D, items) where E/D are linearized enqueue/dequeue indices and
+    items[t] is the value enqueued with ticket t (from the trace)."""
+    # ticket -> item from the trace (GetSet(Q[t], x) by enqueuers; dequeuers
+    # GetSet ⊤, distinguishable by the stored value)
+    items: Dict[int, Any] = {}
+    hi = 0
+    for _time, _tid, act, res in m.trace:
+        if isinstance(act, GetSet) and isinstance(act.var, tuple) and act.var[0] == "Q":
+            t = act.var[1]
+            hi = max(hi, t + 1)
+            if act.val is not TOP and res is BOT:
+                items[t] = act.val
+    if max_index is None:
+        max_index = hi
+    E: Set[int] = set()
+    D: Set[int] = set()
+    persisted_tops = sorted(
+        t for t in range(max_index) if m.peek_nvm(qcell(t)) is TOP
+    )
+    max_top = persisted_tops[-1] if persisted_tops else -1
+    for t in range(max_index):
+        v = m.peek_nvm(qcell(t))
+        if v is TOP:
+            E.add(t)  # matching dequeue persisted => enq linearized (rule 2)
+            D.add(t)
+        elif v is not BOT and t in items and v == items[t]:
+            E.add(t)  # enqueue persisted (rule 1)
+            if max_top > t:
+                D.add(t)  # following dequeue persisted (dequeue rule 2)
+    return E, D, items
+
+
+def expected_periq_drain(m: Machine) -> List[Any]:
+    """Canonical post-recovery queue contents per Algorithm 2.
+
+    MUST be called on the NVM image at crash time, BEFORE draining (the drain
+    itself persists ⊤s and would shift the linearization)."""
+    E, D, items = periq_linearization(m)
+    return [items[t] for t in sorted(E - D)]
+
+
+def check_periq_crash(expected: Sequence[Any], drained: Sequence[Any]) -> None:
+    """After crash + recovery + drain: drained must equal the linearized
+    queue contents (``expected_periq_drain`` snapshot), in FIFO order."""
+    assert list(drained) == list(expected), (
+        f"durable linearizability violated:\n  drained={list(drained)}\n  "
+        f"expected={list(expected)}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# PerCRQ: Algorithm 4 (single-CRQ linearization from the NVM image)
+# ---------------------------------------------------------------------------
+
+
+def percrq_linearization(m: Machine, crq) -> Tuple[Set[int], Set[int], Dict[int, Any]]:
+    """The paper's Algorithm 4 rules, evaluated on the NVM image at crash
+    time for ONE CRQ instance.  Returns (E, D, items):
+
+      * enq_i linearized iff its triplet (1, i, x_i) is persisted, OR a
+        matching dequeue is persisted (rules 1-2; CLOSED rules 3-4 concern
+        tantrum semantics, handled separately by the recovery tests),
+      * deq_i persisted iff a persisted Head mirror >= i+1, or some cell
+        persists an index idx >= i + R (dequeue/empty transition written
+        back) -- the paper's Section 4.2 definition,
+      * deq_i linearized iff persisted AND its matching enqueue is
+        linearized (successful dequeues; EMPTY dequeues checked separately).
+
+    items maps index -> enqueued value, recovered from the trace (the CAS
+    that installed (1, i, x)).
+    """
+    R = crq.R
+    items: Dict[int, Any] = {}
+    for _t, _tid, act, res in m.trace:
+        # enqueue transitions: CAS(cell, (s, i, BOT), (1, t, x)) succeeded
+        from .machine import CAS as CASAct
+        if isinstance(act, CASAct) and res is True and \
+                isinstance(act.var, tuple) and act.var[:2] == ("crq", crq.ns):
+            new = act.new
+            if isinstance(new, tuple) and len(new) == 3 and \
+                    new[2] is not BOT and act.old[2] is BOT:
+                items[new[1]] = new[2]
+    # persisted head bound: max over mirrors (NVM) -- line 60's source
+    head_p = max((m.peek_nvm(crq.mirror(t)) or 0) for t in range(m.n))
+    # persisted index evidence from cells
+    max_adv = -1
+    persisted_enq: Set[int] = set()
+    for u in range(R):
+        s, idx, v = m.peek_nvm(crq.cell(u))
+        if v is not BOT and idx in items and items[idx] == v:
+            persisted_enq.add(idx)
+        if v is BOT and idx >= R:
+            max_adv = max(max_adv, idx - R)
+
+    def deq_persisted(i: int) -> bool:
+        return head_p >= i + 1 or max_adv >= i
+
+    E: Set[int] = set()
+    D: Set[int] = set()
+    all_idx = set(items) | persisted_enq
+    for i in sorted(all_idx):
+        if i in persisted_enq:
+            E.add(i)
+            if deq_persisted(i):
+                D.add(i)
+        elif deq_persisted(i):
+            # enq not persisted but its matching dequeue is => both linearized
+            E.add(i)
+            D.add(i)
+    return E, D, items
+
+
+def expected_percrq_drain(m: Machine, crq) -> List[Any]:
+    """Canonical drain of one crashed CRQ instance per Algorithm 4: the
+    linearized-but-undequeued items in index order."""
+    E, D, items = percrq_linearization(m, crq)
+    return [items[i] for i in sorted(E - D) if i in items]
+
+
+# ---------------------------------------------------------------------------
+# Generic multi-epoch FIFO checker
+# ---------------------------------------------------------------------------
+
+
+class Consumption:
+    """Where/when an item was consumed: by a completed dequeue (epoch, times)
+    or by the final drain (position)."""
+
+    __slots__ = ("epoch", "t_inv", "t_resp", "drain_pos")
+
+    def __init__(self, epoch, t_inv, t_resp, drain_pos=None):
+        self.epoch, self.t_inv, self.t_resp = epoch, t_inv, t_resp
+        self.drain_pos = drain_pos
+
+    def surely_before(self, other: "Consumption") -> bool:
+        if self.epoch != other.epoch:
+            return self.epoch < other.epoch
+        if self.drain_pos is not None and other.drain_pos is not None:
+            return self.drain_pos < other.drain_pos
+        if self.drain_pos is None and other.drain_pos is None:
+            return self.t_resp < other.t_inv
+        # dequeue vs drain within an epoch: drain runs after recovery => after
+        return other.drain_pos is not None
+
+
+def check_fifo_history(
+    epochs: List[Dict[str, Any]],
+) -> Dict[str, Any]:
+    """Check a multi-epoch execution of a durable FIFO queue.
+
+    epochs: list of {"history": [OpRecord], "crashed": bool,
+                     "drained": [items] | None}
+    where "drained" are the items drained after the LAST epoch (only on the
+    final entry) or None.
+
+    Items must be globally unique.  Checks:
+      I1  no item is returned more than once (dequeues + drain),
+      I2  every returned item was the argument of some enqueue invocation,
+      I3  real-time FIFO: for completed enqueues a strictly-before b (both
+          consumed), a is not consumed strictly after b,
+      I4  conservation: an item of a COMPLETED enqueue that is never consumed
+          may only disappear in an epoch that CRASHED (linearized-but-
+          incomplete dequeues exist only around crashes),
+      I5  a completed-enqueue item may not be consumed before it was enqueued.
+    """
+    enq_by_item: Dict[Any, Tuple[int, OpRecord]] = {}
+    consumed: Dict[Any, Consumption] = {}
+    returned_counts: Dict[Any, int] = {}
+
+    for ei, ep in enumerate(epochs):
+        for rec in ep["history"]:
+            if rec.kind == "enq":
+                assert rec.arg not in enq_by_item, f"duplicate item {rec.arg}"
+                enq_by_item[rec.arg] = (ei, rec)
+    for ei, ep in enumerate(epochs):
+        for rec in ep["history"]:
+            if rec.kind == "deq" and rec.completed and rec.result is not EMPTY:
+                item = rec.result
+                returned_counts[item] = returned_counts.get(item, 0) + 1
+                consumed[item] = Consumption(ei, rec.t_inv, rec.t_resp)
+        if ep.get("drained") is not None:
+            for pos, item in enumerate(ep["drained"]):
+                returned_counts[item] = returned_counts.get(item, 0) + 1
+                consumed[item] = Consumption(ei, float("inf"), float("inf"), pos)
+
+    # I1
+    dups = {i: c for i, c in returned_counts.items() if c > 1}
+    assert not dups, f"items returned more than once: {dups}"
+    # I2
+    unknown = [i for i in returned_counts if i not in enq_by_item]
+    assert not unknown, f"items returned but never enqueued: {unknown}"
+    # I5
+    for item, cons in consumed.items():
+        eei, erec = enq_by_item[item]
+        assert (eei, 0 if cons.drain_pos is None else 1) >= (eei, 0), "impossible"
+        if cons.epoch < eei:
+            raise AssertionError(f"item {item} consumed before its enqueue epoch")
+    # I3: real-time FIFO among completed enqueues
+    completed_enqs = [
+        (ei, rec) for item, (ei, rec) in enq_by_item.items() if rec.completed
+    ]
+    for item_a, (ea, ra) in enq_by_item.items():
+        if not ra.completed:
+            continue
+        ca = consumed.get(item_a)
+        for item_b, (eb, rb) in enq_by_item.items():
+            if item_a is item_b or not rb.completed:
+                continue
+            # a strictly precedes b?
+            if not ((ea, ra.t_resp) < (eb, rb.t_inv)) or (ea == eb and ra.t_resp >= rb.t_inv):
+                continue
+            cb = consumed.get(item_b)
+            if cb is None:
+                continue
+            if ca is None:
+                # a vanished while b (enqueued later) was consumed: only legal
+                # if a's epoch crashed (a consumed by an unrecorded linearized
+                # dequeue around the crash)
+                assert epochs[ea]["crashed"] or any(
+                    epochs[k]["crashed"] for k in range(ea, cb.epoch + 1)
+                ), (
+                    f"FIFO violation: {item_a} (completed enqueue, earlier) lost "
+                    f"while later {item_b} was consumed, with no crash"
+                )
+            else:
+                assert not cb.surely_before(ca), (
+                    f"FIFO violation: {item_b} consumed before {item_a} "
+                    f"but enqueue({item_a}) completed before enqueue({item_b}) began"
+                )
+    # I4: conservation.  A completed enqueue's item that is never observed
+    # again ("vanished") is only legal if a linearized-but-incomplete dequeue
+    # could have consumed it around a crash: (a) some epoch >= its enqueue
+    # crashed, and (b) globally there are at least as many incomplete dequeue
+    # invocations in crashed epochs as vanished items.
+    final_crashes = [ep["crashed"] for ep in epochs]
+    drained_recorded = any(ep.get("drained") is not None for ep in epochs)
+    if drained_recorded:
+        vanished = []
+        for item, (ei, rec) in enq_by_item.items():
+            if rec.completed and item not in consumed:
+                assert any(final_crashes[ei:]), (
+                    f"item {item} from completed enqueue lost without any crash"
+                )
+                vanished.append(item)
+        incomplete_deqs = sum(
+            1
+            for ei, ep in enumerate(epochs)
+            if ep["crashed"]
+            for r in ep["history"]
+            if r.kind == "deq" and not r.completed
+        )
+        assert len(vanished) <= incomplete_deqs, (
+            f"{len(vanished)} completed-enqueue items vanished but only "
+            f"{incomplete_deqs} incomplete dequeues exist to account for them: "
+            f"{vanished}"
+        )
+    return {
+        "n_enqueued": len(enq_by_item),
+        "n_consumed": len(consumed),
+    }

@@ -1,0 +1,536 @@
+"""Simulated shared-memory machine with explicit-epoch persistency.
+
+This is the *faithful reproduction* substrate for the paper's algorithms
+(PerIQ / PerCRQ / PerLCRQ, Fatourou-Giachoudis-Mallis 2024).  It models:
+
+  * n asynchronous threads communicating through shared variables,
+  * the atomic primitives the paper assumes (Section 2): read/write,
+    Fetch&Increment, Get&Set, CAS, CAS2 (modelled as CAS on a packed cell),
+    Test&Set / Reset,
+  * TSO (writes become visible in program order -- trivially true here since
+    every shared step is executed atomically by the scheduler),
+  * explicit epoch persistency: ``pwb`` (asynchronous write-back request),
+    ``pfence`` (ordering), ``psync`` (blocking flush) -- plus the *eviction
+    adversary*: the system may write any cache line back to NVM at any time
+    (the paper's proofs rely on this, e.g. footnote 3 and Scenario 2),
+  * full-system crash failures: the volatile image is lost, the NVM image
+    survives; recovery functions run on the NVM image,
+  * a simulated-time cost model in which persistence instructions on highly
+    contended lines are expensive (the paper's "persistence principles" [1]) --
+    this is what lets the benchmarks reproduce Figures 2-6 qualitatively.
+
+Thread programs are Python generators that ``yield`` Action objects; the
+scheduler executes each action atomically and ``send``s the result back.  Two
+scheduling modes:
+
+  * ``schedule`` mode -- an explicit sequence of thread ids drives the
+    interleaving (adversarial schedules for linearizability tests, driven by
+    hypothesis),
+  * ``des`` mode -- discrete-event simulation: the runnable thread with the
+    smallest local clock steps next; contended lines serialize through a
+    per-line clock.  Used by the throughput benchmarks.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Generator, Iterable, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sentinels (the paper's special values)
+# ---------------------------------------------------------------------------
+
+
+class _Sentinel:
+    __slots__ = ("name",)
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return self.name
+
+
+BOT = _Sentinel("⊥")      # empty cell
+TOP = _Sentinel("⊤")      # dequeued cell (IQ)
+EMPTY = _Sentinel("EMPTY")
+CLOSED = _Sentinel("CLOSED")
+OK = _Sentinel("OK")
+
+
+# ---------------------------------------------------------------------------
+# Actions a thread program may yield
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Read:
+    var: Any
+
+
+@dataclass(frozen=True)
+class Write:
+    var: Any
+    val: Any
+
+
+@dataclass(frozen=True)
+class FAI:
+    """Fetch&Increment.  ``field`` selects a tuple element for packed vars
+    (e.g. CRQ's Tail = (closed_bit, t): FAI increments t, returns the whole
+    packed value -- matching ``(cb, t) <- FAI(Tail)``)."""
+
+    var: Any
+    field: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class GetSet:
+    var: Any
+    val: Any
+
+
+@dataclass(frozen=True)
+class CAS:
+    """CAS; the paper's CAS2 on a (safe, idx, val) cell is modelled as CAS on
+    the packed tuple (the paper packs the triple into one 16-byte line)."""
+
+    var: Any
+    old: Any
+    new: Any
+
+
+@dataclass(frozen=True)
+class TAS:
+    """Test&Set on a tuple field (e.g. Tail.cb) or a whole bit variable."""
+
+    var: Any
+    field: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PWB:
+    var: Any
+
+
+@dataclass(frozen=True)
+class PFence:
+    pass
+
+
+@dataclass(frozen=True)
+class PSync:
+    pass
+
+
+@dataclass(frozen=True)
+class LocalWork:
+    """Pure local computation -- advances the thread clock without touching
+    shared memory.  Used to model per-op private work so throughput is not
+    dominated entirely by shared steps."""
+
+    cost: float = 1.0
+
+
+Action = Any
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CostModel:
+    """Simulated-time costs (arbitrary units ~ ns).
+
+    The decisive structure (paper's persistence principles [1]):
+      * flushing a line with many distinct writers is expensive -- the line is
+        typically Modified in a remote cache, so the write-back pays coherence
+        + NVM write latency serialized across flushers;
+      * flushing a single-writer line (Head_i mirrors) or a two-writer line
+        (Q cells: one enqueuer + one dequeuer) is cheap;
+      * atomics on contended lines pay a coherence penalty that grows with the
+        number of concurrent writers.
+    Constants roughly calibrated to DCPMM literature (pwb ~ tens of ns, psync
+    wait ~100ns+, contended FAI up to several 100ns at 96 threads).
+    """
+
+    shared_op: float = 6.0          # uncontended shared read/write/atomic
+    local_op: float = 1.0
+    coherence: float = 3.5          # extra per *other* recent writer, atomics
+    pwb_issue: float = 4.0          # issuing the write-back request
+    flush_base: float = 60.0        # NVM write latency (paid at psync)
+    flush_contended: float = 26.0   # extra per other writer of the line
+    psync_base: float = 30.0        # drain overhead even with nothing pending
+    flush_pipeline: float = 10.0    # extra per additional line (flushes overlap)
+    nvm_port: float = 15.0          # serialized NVM write-port occupancy per line
+    contention_window: float = 2000.0  # "recent writer" horizon (sim time)
+
+    coherence_cap: int = 8          # FAI on a hot line saturates (hw pipelines)
+    flush_cap: int = 16             # snoop/flush penalty saturates
+
+    def atomic_cost(self, recent_writers: int) -> float:
+        return self.shared_op + self.coherence * min(
+            max(0, recent_writers - 1), self.coherence_cap
+        )
+
+    def flush_cost(self, distinct_writers: int) -> float:
+        return self.flush_base + self.flush_contended * min(
+            max(0, distinct_writers - 1), self.flush_cap
+        )
+
+
+# ---------------------------------------------------------------------------
+# Machine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Cell:
+    """One shared variable: NVM value + (optional) dirty volatile value."""
+
+    nvm: Any
+    vol: Any = None
+    dirty: bool = False
+
+
+@dataclass
+class _LineMeta:
+    """Cache-line metadata: flush granularity + contention tracking.  Several
+    variables may share a line (e.g. PerLCRQ's node header: next + crq.Tail +
+    crq.Q[0] persist together with one pwb)."""
+
+    vars: set = field(default_factory=set)
+    writers: set = field(default_factory=set)          # distinct writers ever
+    recent: Dict[int, float] = field(default_factory=dict)  # tid -> last write time
+
+
+class Crash(Exception):
+    """Raised inside thread steps when the machine has crashed."""
+
+
+class Machine:
+    def __init__(
+        self,
+        n_threads: int,
+        cost_model: Optional[CostModel] = None,
+        line_of: Optional[Callable[[Any], Any]] = None,
+        eviction_rate: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self.n = n_threads
+        self.cm = cost_model or CostModel()
+        # line_of maps a variable key -> cache-line key (defaults to identity);
+        # PerLCRQ places node.next / node.crq.Tail / node.crq.Q[0] on ONE line
+        # so they persist with a single pwb (paper Section 4.3).
+        self.line_of = line_of or (lambda v: v)
+        self.cells: Dict[Any, _Cell] = {}
+        self.lines: Dict[Any, _LineMeta] = {}
+        self.defaults: Dict[Any, Any] = {}
+        self.default_factory: Optional[Callable[[Any], Any]] = None
+        self.pending: Dict[int, set] = {t: set() for t in range(n_threads)}
+        self.clock: List[float] = [0.0] * n_threads
+        self.line_clock: Dict[Any, float] = {}
+        self.global_time: float = 0.0
+        self.crashed = False
+        self.rng = random.Random(seed)
+        self.eviction_rate = eviction_rate
+        self.trace: List[Tuple] = []      # (time, tid, action, result) events
+        self.trace_enabled = True
+        self.persist_count = 0            # pwb count (persistence-cost metric)
+        self.psync_count = 0
+        self.step_count = 0
+        self.time_in_psync = [0.0] * n_threads
+        self._last_flushed: List[Any] = []
+
+    # -- memory helpers -----------------------------------------------------
+
+    def declare(self, var: Any, init: Any) -> None:
+        self.defaults[var] = init
+
+    def _get_cell(self, var: Any) -> _Cell:
+        cell = self.cells.get(var)
+        if cell is None:
+            init = self.defaults.get(
+                var, self.default_factory(var) if self.default_factory else None
+            )
+            cell = _Cell(nvm=init)
+            self.cells[var] = cell
+            self._line_meta(var).vars.add(var)
+        return cell
+
+    def _line_meta(self, var: Any) -> _LineMeta:
+        lk = self.line_of(var)
+        meta = self.lines.get(lk)
+        if meta is None:
+            meta = _LineMeta()
+            self.lines[lk] = meta
+        return meta
+
+    def peek(self, var: Any) -> Any:
+        """Current architectural (volatile) value -- for assertions/tests."""
+        cell = self._get_cell(var)
+        return cell.vol if cell.dirty else cell.nvm
+
+    def peek_nvm(self, var: Any) -> Any:
+        return self._get_cell(var).nvm
+
+    def poke(self, var: Any, val: Any) -> None:
+        """Non-atomic store used by initialization / recovery code."""
+        cell = self._get_cell(var)
+        cell.vol, cell.dirty = val, True
+
+    def poke_nvm(self, var: Any, val: Any) -> None:
+        cell = self._get_cell(var)
+        cell.nvm = val
+        cell.vol, cell.dirty = None, False
+
+    # -- persistence --------------------------------------------------------
+
+    def _flush_line(self, lk: Any) -> None:
+        meta = self.lines.get(lk)
+        if meta is None:
+            return
+        for var in meta.vars:
+            cell = self.cells[var]
+            if cell.dirty:
+                cell.nvm = cell.vol
+                cell.dirty = False
+
+    def flush_var(self, var: Any) -> None:
+        self._flush_line(self.line_of(var))
+
+    def _line_dirty(self, lk: Any) -> bool:
+        meta = self.lines.get(lk)
+        return meta is not None and any(self.cells[v].dirty for v in meta.vars)
+
+    def evict_random(self, k: int = 1) -> None:
+        """The eviction adversary: system-initiated write-backs."""
+        dirty = [lk for lk in self.lines if self._line_dirty(lk)]
+        for lk in self.rng.sample(dirty, min(k, len(dirty))):
+            self._flush_line(lk)
+
+    def crash(self) -> None:
+        """Full-system crash: volatile image lost, NVM image survives."""
+        self.crashed = True
+        for cell in self.cells.values():
+            cell.vol, cell.dirty = None, False
+        for meta in self.lines.values():
+            meta.recent.clear()
+        for t in range(self.n):
+            self.pending[t].clear()
+
+    def restart(self) -> None:
+        self.crashed = False
+
+    # -- action execution ---------------------------------------------------
+
+    def _recent_writers(self, meta: _LineMeta, now: float) -> int:
+        horizon = now - self.cm.contention_window
+        return sum(1 for t in meta.recent.values() if t >= horizon)
+
+    def _note_write(self, meta: _LineMeta, tid: int, now: float) -> None:
+        meta.writers.add(tid)
+        meta.recent[tid] = now
+
+    def exec_action(self, tid: int, act: Action) -> Tuple[Any, float]:
+        """Execute one atomic action for thread ``tid``.
+
+        Returns (result, cost).  Serialization on contended lines is modelled
+        through per-line clocks in des mode (see ``run_des``)."""
+        if self.crashed:
+            raise Crash()
+        cm = self.cm
+        now = self.clock[tid]
+        if isinstance(act, LocalWork):
+            return None, cm.local_op * act.cost
+
+        if isinstance(act, (PFence,)):
+            return None, cm.local_op
+
+        if isinstance(act, PWB):
+            self._get_cell(act.var)  # materialize
+            self.pending[tid].add(self.line_of(act.var))
+            self.persist_count += 1
+            return None, cm.pwb_issue
+
+        if isinstance(act, PSync):
+            # Flushes of distinct lines overlap (pwb is asynchronous): pay the
+            # worst single-line flush + a small pipeline increment per extra
+            # line.  The DES scheduler additionally serializes the flushed
+            # lines' clocks and a global NVM write port (see run_des).
+            flushed = list(self.pending[tid])
+            worst = 0.0
+            for lk in flushed:
+                meta = self.lines.get(lk)
+                if meta is not None:
+                    worst = max(worst, cm.flush_cost(len(meta.writers)))
+                    self._flush_line(lk)
+            cost = cm.psync_base + worst + cm.flush_pipeline * max(0, len(flushed) - 1)
+            self.pending[tid].clear()
+            self.psync_count += 1
+            self.time_in_psync[tid] += cost
+            self._last_flushed = flushed
+            return None, cost
+
+        cell = self._get_cell(act.var)
+        meta = self._line_meta(act.var)
+        val = cell.vol if cell.dirty else cell.nvm
+
+        if isinstance(act, Read):
+            return val, cm.shared_op
+
+        cost = cm.atomic_cost(self._recent_writers(meta, now))
+        self._note_write(meta, tid, now)
+
+        if isinstance(act, Write):
+            cell.vol, cell.dirty = act.val, True
+            return None, cost
+        if isinstance(act, FAI):
+            if act.field is None:
+                cell.vol, cell.dirty = val + 1, True
+                return val, cost
+            new = list(val)
+            new[act.field] = val[act.field] + 1
+            cell.vol, cell.dirty = tuple(new), True
+            return val, cost
+        if isinstance(act, GetSet):
+            cell.vol, cell.dirty = act.val, True
+            return val, cost
+        if isinstance(act, CAS):
+            if val == act.old:
+                cell.vol, cell.dirty = act.new, True
+                return True, cost
+            return False, cost
+        if isinstance(act, TAS):
+            if act.field is None:
+                cell.vol, cell.dirty = 1, True
+                return val, cost
+            new = list(val)
+            new[act.field] = 1
+            cell.vol, cell.dirty = tuple(new), True
+            return val[act.field], cost
+        raise TypeError(f"unknown action {act!r}")
+
+    # -- schedulers ----------------------------------------------------------
+
+    def run_schedule(
+        self,
+        programs: Dict[int, Generator],
+        schedule: Iterable[int],
+        max_steps: Optional[int] = None,
+        stop_predicate: Optional[Callable[["Machine"], bool]] = None,
+    ) -> Dict[int, Any]:
+        """Adversarial interleaving: ``schedule`` is a sequence of thread ids.
+
+        Each scheduled id advances that thread's generator by ONE shared step.
+        Returns {tid: return_value} for completed programs.  Used by the
+        linearizability / crash property tests.
+        """
+        results: Dict[int, Any] = {}
+        pend_send: Dict[int, Any] = {t: None for t in programs}
+        started: set = set()
+        for step, tid in enumerate(schedule):
+            if max_steps is not None and step >= max_steps:
+                break
+            if self.crashed:
+                break
+            gen = programs.get(tid)
+            if gen is None or tid in results:
+                continue
+            try:
+                if tid not in started:
+                    act = next(gen)
+                    started.add(tid)
+                else:
+                    act = gen.send(pend_send[tid])
+                res, cost = self.exec_action(tid, act)
+                self.clock[tid] += cost
+                self.step_count += 1
+                self.global_time += 1.0  # logical linearization order
+                if self.trace_enabled:
+                    self.trace.append((self.global_time, tid, act, res))
+                pend_send[tid] = res
+                if self.eviction_rate > 0 and self.rng.random() < self.eviction_rate:
+                    self.evict_random()
+                if stop_predicate is not None and stop_predicate(self):
+                    break
+            except StopIteration as si:
+                results[tid] = si.value
+            except Crash:
+                break
+        return results
+
+    def run_des(
+        self,
+        thread_workloads: Dict[int, Callable[[], Generator]],
+        ops_per_thread: int,
+    ) -> Dict[str, float]:
+        """Discrete-event throughput run: each thread executes
+        ``ops_per_thread`` sequential operations (generator factories).
+
+        The runnable thread with the smallest local clock executes next; a
+        shared action on line L additionally serializes behind L's line clock
+        (start = max(thread, line); both advance to start+cost).  This models
+        contention-induced serialization (FAI queues on Tail serialize; Q-cell
+        ops in different cells proceed in parallel).
+        """
+        heap: List[Tuple[float, int]] = [(0.0, t) for t in thread_workloads]
+        heapq.heapify(heap)
+        gens: Dict[int, Generator] = {}
+        done_ops = {t: 0 for t in thread_workloads}
+        pend_send: Dict[int, Any] = {}
+        ops_done_total = 0
+        while heap:
+            now, tid = heapq.heappop(heap)
+            self.clock[tid] = now
+            gen = gens.get(tid)
+            try:
+                if gen is None:
+                    if done_ops[tid] >= ops_per_thread:
+                        continue
+                    gen = thread_workloads[tid]()
+                    gens[tid] = gen
+                    act = next(gen)
+                else:
+                    act = gen.send(pend_send.get(tid))
+            except StopIteration:
+                gens[tid] = None
+                done_ops[tid] += 1
+                ops_done_total += 1
+                heapq.heappush(heap, (self.clock[tid], tid))
+                continue
+            self._last_flushed = []
+            res, cost = self.exec_action(tid, act)
+            start = self.clock[tid]
+            if isinstance(act, (Read, Write, FAI, GetSet, CAS, TAS)):
+                lk = self.line_of(act.var)
+                start = max(start, self.line_clock.get(lk, 0.0))
+                self.line_clock[lk] = start + cost
+            elif isinstance(act, PSync) and self._last_flushed:
+                # A flush of a line serializes with other accesses to it (the
+                # line must be snooped/owned to write it back), and all
+                # flushes share the NVM write port's bandwidth.
+                for lk in self._last_flushed:
+                    start = max(start, self.line_clock.get(lk, 0.0))
+                start = max(start, self.line_clock.get("__nvm_port__", 0.0))
+                for lk in self._last_flushed:
+                    self.line_clock[lk] = start + cost
+                self.line_clock["__nvm_port__"] = start + self.cm.nvm_port * len(
+                    self._last_flushed
+                )
+            self.clock[tid] = start + cost
+            self.step_count += 1
+            self.global_time = max(self.global_time, self.clock[tid])
+            pend_send[tid] = res
+            heapq.heappush(heap, (self.clock[tid], tid))
+        makespan = max(self.clock[t] for t in thread_workloads)
+        return {
+            "ops": float(ops_done_total),
+            "makespan": makespan,
+            "throughput": ops_done_total / makespan if makespan > 0 else 0.0,
+            "pwbs": float(self.persist_count),
+            "psyncs": float(self.psync_count),
+        }

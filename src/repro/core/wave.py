@@ -1,0 +1,455 @@
+"""Wave engine: the TPU-native adaptation of PerLCRQ (see DESIGN.md §3).
+
+TPUs have no inter-core atomics, so the paper's FAI-per-operation becomes
+*batched ticketing*: a wave of W concurrent operations obtains pairwise-
+distinct, gap-free slots with an exclusive prefix-sum (``fai_ticket`` Pallas
+kernel).  The CRQ cell transitions (enqueue / dequeue / empty / unsafe) are
+applied data-parallel as masked scatters (``crq_wave`` kernel).  Persistence
+follows the paper's discipline exactly:
+
+  * per-wave, ONLY the touched ring cells and the per-shard Head mirrors are
+    flushed to the NVM image (low-contention persists),
+  * Tail / segment headers are persisted only when a segment closes or is
+    appended (closedFlag / node-header rules of Algorithm 3/5),
+  * global Head / Tail are NEVER flushed -- recovery reconstructs them with
+    the paper's scan (Algorithm 3 lines 58-83, vectorized; ``recovery_scan``
+    kernel).
+
+The queue is a pool of S ring segments (the LCRQ linked list flattened into
+allocation order -- append-only, so segment s's successor is s+1; the
+persisted ``allocated`` bit plays the role of the persisted next pointer).
+
+State arrays are a pytree => the whole step is jit/shard_map-able.  Payloads
+are int32 handles >= 0 (pointing into a payload slab owned by the caller);
+BOT = -1.  Per-lane dequeue results: >= 0 item, EMPTY_V (queue empty at this
+ticket), RETRY_V (transition failed, retry next wave), IDLE_V (lane inactive).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BOT = jnp.int32(-1)
+EMPTY_V = jnp.int32(-2)
+RETRY_V = jnp.int32(-3)
+IDLE_V = jnp.int32(-4)
+
+
+class WaveState(NamedTuple):
+    """Volatile image (the NVM image is a second WaveState)."""
+
+    vals: jnp.ndarray      # [S, R] int32, -1 = ⊥
+    idxs: jnp.ndarray      # [S, R] int32 cell indices
+    safes: jnp.ndarray     # [S, R] bool
+    heads: jnp.ndarray     # [S] int32 per-segment Head
+    tails: jnp.ndarray     # [S] int32 per-segment Tail
+    closed: jnp.ndarray    # [S] bool (tantrum closed bit)
+    allocated: jnp.ndarray  # [S] bool (segment appended to the list)
+    first: jnp.ndarray     # scalar int32 (dequeue segment)
+    last: jnp.ndarray      # scalar int32 (enqueue segment)
+    mirrors: jnp.ndarray   # [P] int32 per-shard local Head mirror
+    mirror_seg: jnp.ndarray  # [P] int32 which segment the mirror refers to
+
+
+def init_state(S: int, R: int, P: int = 1) -> WaveState:
+    st = WaveState(
+        vals=jnp.full((S, R), BOT, jnp.int32),
+        idxs=jnp.tile(jnp.arange(R, dtype=jnp.int32)[None, :], (S, 1)),
+        safes=jnp.ones((S, R), bool),
+        heads=jnp.zeros((S,), jnp.int32),
+        tails=jnp.zeros((S,), jnp.int32),
+        closed=jnp.zeros((S,), bool),
+        allocated=jnp.zeros((S,), bool).at[0].set(True),
+        first=jnp.int32(0),
+        last=jnp.int32(0),
+        mirrors=jnp.zeros((P,), jnp.int32),
+        mirror_seg=jnp.zeros((P,), jnp.int32),
+    )
+    return st
+
+
+def exclusive_cumsum(mask: jnp.ndarray) -> jnp.ndarray:
+    m = mask.astype(jnp.int32)
+    return jnp.cumsum(m) - m
+
+
+# ---------------------------------------------------------------------------
+# One wave (pure jnp reference path; kernels/ops.py provides the Pallas path)
+# ---------------------------------------------------------------------------
+
+
+def _enqueue_phase_kernel(st: WaveState, enq_vals: jnp.ndarray):
+    """Kernel-backed enqueue phase: fai_ticket + crq_wave Pallas kernels."""
+    from repro.kernels import ops as kops
+
+    S, R = st.vals.shape
+    L = st.last
+    active = enq_vals >= 0
+    tickets, new_tail = kops.fai_ticket(st.tails[L], active)
+    k = new_tail - st.tails[L]
+    head = st.heads[L]
+    not_full = (tickets - head) < R
+    ea = active & (~st.closed[L]) & not_full
+    W = enq_vals.shape[0]
+    vals_L, idxs_L, safes_L, ok_i, _ = kops.crq_wave(
+        st.vals[L], st.idxs[L], st.safes[L].astype(jnp.int32), head,
+        tickets, enq_vals, ea,
+        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), bool),
+    )
+    ok = ok_i != 0
+    tails = st.tails.at[L].set(new_tail)
+    must_close = jnp.any(active & (~ok) & ((tickets - head) >= R))
+    closed = st.closed.at[L].set(st.closed[L] | must_close)
+    st = st._replace(
+        vals=st.vals.at[L].set(vals_L),
+        idxs=st.idxs.at[L].set(idxs_L),
+        safes=st.safes.at[L].set(safes_L != 0),
+        tails=tails,
+        closed=closed,
+    )
+    return st, ok, tickets % R, jnp.any(active & (~ok))
+
+
+def _dequeue_phase_kernel(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray):
+    from repro.kernels import ops as kops
+
+    S, R = st.vals.shape
+    F = st.first
+    tickets, new_head = kops.fai_ticket(st.heads[F], deq_mask)
+    W = deq_mask.shape[0]
+    vals_F, idxs_F, safes_F, _, out = kops.crq_wave(
+        st.vals[F], st.idxs[F], st.safes[F].astype(jnp.int32), st.heads[F],
+        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), jnp.int32),
+        jnp.zeros((W,), bool),
+        tickets, deq_mask,
+    )
+    heads = st.heads.at[F].set(new_head)
+    st = st._replace(tails=st.tails.at[F].set(
+        jnp.maximum(st.tails[F], new_head)))  # FixState analog
+    mirrors = st.mirrors.at[shard].set(new_head)
+    mirror_seg = st.mirror_seg.at[shard].set(F)
+    st = st._replace(
+        vals=st.vals.at[F].set(vals_F),
+        idxs=st.idxs.at[F].set(idxs_F),
+        safes=st.safes.at[F].set(safes_F != 0),
+        heads=heads,
+        mirrors=mirrors,
+        mirror_seg=mirror_seg,
+    )
+    return st, out, tickets % R
+
+
+def _enqueue_phase(st: WaveState, enq_vals: jnp.ndarray):
+    """Apply a wave of enqueues to segment ``last``.  enq_vals: [W] int32,
+    -1 = inactive lane.  Returns (state, ok[W] bool, need_new_segment)."""
+    S, R = st.vals.shape
+    L = st.last
+    active = enq_vals >= 0
+    tickets = st.tails[L] + exclusive_cumsum(active)
+    k = jnp.sum(active.astype(jnp.int32))
+    slots = tickets % R
+    cell_idx = st.idxs[L, slots]
+    cell_val = st.vals[L, slots]
+    cell_safe = st.safes[L, slots]
+    head = st.heads[L]
+    # CRQ enqueue-transition condition (Algorithm 3 line 14)
+    cond = (cell_idx <= tickets) & (cell_val == BOT) & (cell_safe | (head <= tickets))
+    not_full = (tickets - head) < R
+    ok = active & (~st.closed[L]) & cond & not_full
+    # scatter the accepted triplets; tickets are pairwise distinct mod R
+    # within a wave (W <= R), so writes are conflict-free -- the invariant
+    # FAI gives the CPU algorithm, provided here by the prefix-sum.
+    w_slots = jnp.where(ok, slots, R)  # R = out-of-range drop
+    vals_L = st.vals[L].at[w_slots].set(jnp.where(ok, enq_vals, 0), mode="drop")
+    idxs_L = st.idxs[L].at[w_slots].set(tickets, mode="drop")
+    safes_L = st.safes[L].at[w_slots].set(True, mode="drop")
+    # every active lane consumed a ticket (FAI semantics): tail advances by k
+    tails = st.tails.at[L].add(k)
+    # tantrum close: an active lane failed because the ring is full / unsafe
+    must_close = jnp.any(active & (~ok) & ((tickets - head) >= R))
+    closed = st.closed.at[L].set(st.closed[L] | must_close)
+    st = st._replace(
+        vals=st.vals.at[L].set(vals_L),
+        idxs=st.idxs.at[L].set(idxs_L),
+        safes=st.safes.at[L].set(safes_L),
+        tails=tails,
+        closed=closed,
+    )
+    failed_any = jnp.any(active & (~ok))
+    return st, ok, slots, failed_any
+
+
+def _dequeue_phase(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray):
+    """Apply a wave of dequeues to segment ``first``.  Returns
+    (state, out[W] int32, touched slots)."""
+    S, R = st.vals.shape
+    F = st.first
+    active = deq_mask
+    tickets = st.heads[F] + exclusive_cumsum(active)
+    j = jnp.sum(active.astype(jnp.int32))
+    slots = tickets % R
+    cell_idx = st.idxs[F, slots]
+    cell_val = st.vals[F, slots]
+    occupied = cell_val != BOT
+    # transitions (Algorithm 3 lines 31-41)
+    deq_tr = active & occupied & (cell_idx == tickets)
+    empty_tr = active & (~occupied) & (cell_idx <= tickets)
+    unsafe_tr = active & occupied & (cell_idx < tickets)
+    future = active & (cell_idx > tickets)
+    out = jnp.where(
+        deq_tr,
+        cell_val,
+        jnp.where(empty_tr, EMPTY_V, jnp.where(unsafe_tr | future, RETRY_V, IDLE_V)),
+    )
+    out = jnp.where(active, out, IDLE_V)
+    # dequeue transition: (s, h+R, ⊥); empty transition: (s, h+R, ⊥) as well
+    adv = deq_tr | empty_tr
+    w_slots = jnp.where(adv, slots, R)
+    vals_F = st.vals[F].at[w_slots].set(BOT, mode="drop")
+    idxs_F = st.idxs[F].at[w_slots].set(tickets + R, mode="drop")
+    # unsafe transition: clear the safe bit
+    u_slots = jnp.where(unsafe_tr, slots, R)
+    safes_F = st.safes[F].at[u_slots].set(False, mode="drop")
+    heads = st.heads.at[F].add(j)
+    new_head = st.heads[F] + j
+    # FixState (Algorithm 3 lines 48-57): dequeuers that overran the tail on
+    # an empty segment push Tail up to Head so later enqueues skip the
+    # exhausted indices (bulk-synchronous CAS analog).
+    tails = st.tails.at[F].set(jnp.maximum(st.tails[F], new_head))
+    # local persistence: this shard's mirror tracks (segment, head)
+    mirrors = st.mirrors.at[shard].set(new_head)
+    mirror_seg = st.mirror_seg.at[shard].set(F)
+    st = st._replace(
+        vals=st.vals.at[F].set(vals_F),
+        idxs=st.idxs.at[F].set(idxs_F),
+        safes=st.safes.at[F].set(safes_F),
+        heads=heads,
+        tails=tails,
+        mirrors=mirrors,
+        mirror_seg=mirror_seg,
+    )
+    return st, out, slots
+
+
+def _advance_segments(st: WaveState) -> WaveState:
+    """Between waves: append a fresh segment if `last` closed (Michael-Scott
+    append, flattened), advance `first` past a drained closed segment."""
+    S = st.vals.shape[0]
+    L, F = st.last, st.first
+    can_append = st.closed[L] & (L + 1 < S)
+    new_last = jnp.where(can_append, L + 1, L)
+    allocated = st.allocated.at[new_last].set(True)
+    drained = (st.heads[F] >= st.tails[F]) & st.closed[F] & (F < new_last)
+    new_first = jnp.where(drained, F + 1, F)
+    return st._replace(last=new_last, first=new_first, allocated=allocated)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernels",))
+def wave_step(
+    vol: WaveState,
+    nvm: WaveState,
+    enq_vals: jnp.ndarray,   # [W] int32, -1 = idle lane
+    deq_mask: jnp.ndarray,   # [W] bool
+    shard: jnp.ndarray,      # scalar int32: which shard executes this wave
+    use_kernels: bool = False,
+) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
+    """One bulk-synchronous wave: enqueues, then dequeues, then the
+    persistence flush (cells + mirrors + segment headers ONLY -- never the
+    global Head/Tail, per the paper's persistence principles).
+
+    Returns (vol', nvm', enq_ok[W], deq_out[W])."""
+    L_before, F_before = vol.last, vol.first
+    if use_kernels:
+        vol, enq_ok, enq_slots, _failed = _enqueue_phase_kernel(vol, enq_vals)
+        vol, deq_out, deq_slots = _dequeue_phase_kernel(vol, deq_mask, shard)
+    else:
+        vol, enq_ok, enq_slots, _failed = _enqueue_phase(vol, enq_vals)
+        vol, deq_out, deq_slots = _dequeue_phase(vol, deq_mask, shard)
+    vol = _advance_segments(vol)
+
+    # ---- persistence (the pwb+psync analog) --------------------------------
+    # flush touched enqueue cells on segment L, touched dequeue cells on F
+    R = vol.vals.shape[1]
+    enq_w = jnp.where(enq_ok, enq_slots, R)
+    nvm_vals_L = nvm.vals[L_before].at[enq_w].set(vol.vals[L_before, enq_slots % R], mode="drop")
+    nvm_idxs_L = nvm.idxs[L_before].at[enq_w].set(vol.idxs[L_before, enq_slots % R], mode="drop")
+    nvm_safes_L = nvm.safes[L_before].at[enq_w].set(vol.safes[L_before, enq_slots % R], mode="drop")
+    nvm = nvm._replace(
+        vals=nvm.vals.at[L_before].set(nvm_vals_L),
+        idxs=nvm.idxs.at[L_before].set(nvm_idxs_L),
+        safes=nvm.safes.at[L_before].set(nvm_safes_L),
+    )
+    touched_d = deq_out != IDLE_V
+    deq_w = jnp.where(touched_d, deq_slots, R)
+    nvm_vals_F = nvm.vals[F_before].at[deq_w].set(vol.vals[F_before, deq_slots % R], mode="drop")
+    nvm_idxs_F = nvm.idxs[F_before].at[deq_w].set(vol.idxs[F_before, deq_slots % R], mode="drop")
+    nvm_safes_F = nvm.safes[F_before].at[deq_w].set(vol.safes[F_before, deq_slots % R], mode="drop")
+    nvm = nvm._replace(
+        vals=nvm.vals.at[F_before].set(nvm_vals_F),
+        idxs=nvm.idxs.at[F_before].set(nvm_idxs_F),
+        safes=nvm.safes.at[F_before].set(nvm_safes_F),
+        # local persistence: the shard's Head mirror (single-writer)
+        mirrors=nvm.mirrors.at[shard].set(vol.mirrors[shard]),
+        mirror_seg=nvm.mirror_seg.at[shard].set(vol.mirror_seg[shard]),
+        # segment headers: closed bits + allocation (the persisted "next
+        # pointer" / closed-Tail of Algorithm 3 line 20 & Algorithm 5 line 29)
+        closed=vol.closed,
+        allocated=vol.allocated,
+    )
+    return vol, nvm, enq_ok, deq_out
+
+
+# ---------------------------------------------------------------------------
+# Crash & recovery
+# ---------------------------------------------------------------------------
+
+
+def crash(nvm: WaveState) -> WaveState:
+    """Full-system crash: the volatile image is lost; computation restarts
+    from (a recovered version of) the NVM image."""
+    return nvm
+
+
+@jax.jit
+def recover(nvm: WaveState) -> WaveState:
+    """Vectorized Algorithm 3 recovery (lines 58-83) over every allocated
+    segment + Algorithm 5 list recovery (last = max allocated segment)."""
+    S, R = nvm.vals.shape
+
+    def recover_segment(vals, idxs, safes, mirrors, mirror_seg, seg_id, allocated):
+        occupied = vals != BOT
+        # line 60: Head <- max over this segment's persisted mirrors
+        mine = mirror_seg == seg_id
+        head0 = jnp.max(jnp.where(mine, mirrors, 0))
+        # lines 61-68: Tail from max persisted index
+        t_occ = jnp.where(occupied, idxs + 1, 0)
+        t_emp = jnp.where((~occupied) & (idxs >= R), idxs - R + 1, 0)
+        tail0 = jnp.maximum(jnp.max(t_occ), jnp.max(t_emp)).astype(jnp.int32)
+        empty_q = head0 > tail0
+        tail1 = jnp.where(empty_q, head0, tail0)
+        # lines 71-75: push Head past persisted dequeue transitions in range
+        u = jnp.arange(R, dtype=jnp.int32)
+        live = jnp.minimum(jnp.maximum(tail1 - head0, 0), R)
+        offset = (u - head0) % R
+        in_range = offset < live
+        mx_cand = jnp.where(in_range & (~occupied), idxs - R + 1, head0)
+        head1 = jnp.maximum(head0, jnp.max(mx_cand))
+        # lines 76-80: pull Head to the smallest occupied index in range
+        live2 = jnp.minimum(jnp.maximum(tail1 - head1, 0), R)
+        offset2 = (u - head1) % R
+        in_range2 = offset2 < live2
+        mn_cand = jnp.where(in_range2 & occupied & (idxs >= head1), idxs, tail1)
+        mn = jnp.min(mn_cand)
+        head2 = jnp.where(empty_q, head0, jnp.where(mn < tail1, mn, head1))
+        tail2 = jnp.where(empty_q, head0, tail1)
+        # lines 81-82: re-initialize cells outside the live range
+        live3 = jnp.minimum(jnp.maximum(tail2 - head2, 0), R)
+        offset3 = (u - head2) % R
+        dead = offset3 >= live3
+        # unwrapped backward position for a dead cell u: i = head-1-((head-1-u) mod R)
+        i_unwrapped = head2 - 1 - ((head2 - 1 - u) % R)
+        new_idx = jnp.where(dead, i_unwrapped + R, idxs)
+        new_val = jnp.where(dead, BOT, vals)
+        # line 83: all safe bits set
+        new_safe = jnp.ones_like(safes)
+        # unallocated segments stay pristine
+        new_idx = jnp.where(allocated, new_idx, u)
+        new_val = jnp.where(allocated, new_val, BOT)
+        head2 = jnp.where(allocated, head2, 0)
+        tail2 = jnp.where(allocated, tail2, 0)
+        return new_val, new_idx, new_safe, head2, tail2
+
+    seg_ids = jnp.arange(S, dtype=jnp.int32)
+    vals, idxs, safes, heads, tails = jax.vmap(
+        recover_segment, in_axes=(0, 0, 0, None, None, 0, 0)
+    )(nvm.vals, nvm.idxs, nvm.safes, nvm.mirrors, nvm.mirror_seg, seg_ids, nvm.allocated)
+    # Algorithm 5 list recovery: Last = furthest allocated segment; First
+    # stays (recovery never moves First; drained segments are skipped by the
+    # empty-advance rule during normal operation).
+    last = jnp.max(jnp.where(nvm.allocated, seg_ids, 0)).astype(jnp.int32)
+    first = jnp.minimum(nvm.first, last)
+    st = WaveState(
+        vals=vals, idxs=idxs, safes=safes, heads=heads, tails=tails,
+        closed=nvm.closed, allocated=nvm.allocated,
+        first=first, last=last,
+        mirrors=heads[jnp.minimum(nvm.mirror_seg, S - 1)] * 0 + nvm.mirrors,
+        mirror_seg=nvm.mirror_seg,
+    )
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Convenience driver (host loop): run op batches to completion
+# ---------------------------------------------------------------------------
+
+
+class WaveQueue:
+    """Host-side convenience wrapper: retries RETRY lanes across waves.
+
+    This is the single-shard engine used by tests/benchmarks; the sharded
+    pipeline (repro.pipeline) runs `wave_step` under shard_map."""
+
+    def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
+                 use_kernels: bool = False):
+        self.S, self.R, self.P, self.W = S, R, P, W
+        self.use_kernels = use_kernels
+        self.vol = init_state(S, R, P)
+        self.nvm = init_state(S, R, P)
+
+    def step(self, enq_vals, deq_mask, shard: int = 0):
+        ev = jnp.asarray(enq_vals, jnp.int32)
+        dm = jnp.asarray(deq_mask, bool)
+        self.vol, self.nvm, ok, out = wave_step(
+            self.vol, self.nvm, ev, dm, jnp.int32(shard),
+            use_kernels=self.use_kernels,
+        )
+        return ok, out
+
+    def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
+        """Enqueue a list of item handles (ints >= 0); retries until done."""
+        pending = list(items)
+        waves = 0
+        while pending and waves < max_waves:
+            batch = pending[: self.W]
+            ev = jnp.full((self.W,), -1, jnp.int32).at[: len(batch)].set(
+                jnp.asarray(batch, jnp.int32))
+            ok, _ = self.step(ev, jnp.zeros((self.W,), bool), shard)
+            okl = jax.device_get(ok)[: len(batch)]
+            pending = [b for b, o in zip(batch, okl) if not o] + pending[len(batch):]
+            waves += 1
+        assert not pending, "queue full: could not enqueue everything"
+        return waves
+
+    def dequeue_n(self, n, shard: int = 0, max_waves: int = 10_000):
+        """Dequeue until n items obtained or the queue is EMPTY."""
+        got, waves = [], 0
+        while len(got) < n and waves < max_waves:
+            w = min(self.W, n - len(got))
+            dm = jnp.zeros((self.W,), bool).at[:w].set(True)
+            _, out = self.step(jnp.full((self.W,), -1, jnp.int32), dm, shard)
+            outl = jax.device_get(out)[:w]
+            got.extend(int(v) for v in outl if v >= 0)
+            waves += 1
+            if all(v == EMPTY_V for v in outl):
+                # every lane found the segment drained: truly EMPTY only if
+                # this was the last segment and it holds nothing (the CRQ
+                # "Tail <= h+1" check, lifted to the driver)
+                first = int(jax.device_get(self.vol.first))
+                last = int(jax.device_get(self.vol.last))
+                if first == last and int(
+                    jax.device_get(self.vol.heads[first])
+                ) >= int(jax.device_get(self.vol.tails[first])):
+                    break
+        return got, waves
+
+    def drain(self, shard: int = 0, max_waves: int = 10_000):
+        out, _ = self.dequeue_n(self.S * self.R + 1, shard, max_waves)
+        return out
+
+    def crash_and_recover(self):
+        self.vol = recover(crash(self.nvm))
+        self.nvm = self.vol
+        return self.vol

@@ -1,0 +1,4 @@
+from .sharding import (batch_specs, cache_specs, param_specs,  # noqa: F401
+                       opt_state_specs, DP_AXES)
+from .steps import (make_train_step, make_prefill_step,  # noqa: F401
+                    make_serve_step)

@@ -1,0 +1,20 @@
+"""Explicit mesh context for modules that need shard_map inside a jit'd
+model function (the mesh object is static; set by the launcher/dry-run)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def dp_axis_names(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

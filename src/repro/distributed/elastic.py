@@ -1,0 +1,69 @@
+"""Elastic scaling + straggler mitigation hooks.
+
+Elastic re-shard: when a data-parallel worker set changes (node loss /
+re-add), the global batch is re-partitioned over the surviving workers and
+each worker's pipeline shard resumes from the queue (durable linearizability
+=> no sample loss/duplication across the resize).  Checkpoint shards are
+re-mapped by slicing the saved global arrays into the new mesh's shards.
+
+Straggler mitigation: bounded-staleness persistence -- the paper's
+persist_every_k tradeoff (Algorithm 6) generalized: a worker whose flush
+lags more than `k` steps stops blocking the step loop (the flush is the
+psync, so making it periodic bounds how long a slow NVM/storage node can
+stall the collective); recovery cost grows accordingly (paper Figs 4-6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WorkerSet:
+    alive: List[int]
+    world: int
+
+    def partition(self, global_batch: int) -> Dict[int, int]:
+        """Re-partition the global batch over the alive workers (remainder
+        to the lowest ranks)."""
+        n = len(self.alive)
+        per = global_batch // n
+        rem = global_batch - per * n
+        return {w: per + (1 if i < rem else 0)
+                for i, w in enumerate(sorted(self.alive))}
+
+
+def remap_shard(saved_global: np.ndarray, old_world: int, new_world: int,
+                new_rank: int, axis: int = 0) -> np.ndarray:
+    """Re-slice a (conceptually global) checkpoint array for a new world
+    size.  Requires the axis to divide both world sizes."""
+    dim = saved_global.shape[axis]
+    assert dim % new_world == 0, (dim, new_world)
+    per = dim // new_world
+    sl = [slice(None)] * saved_global.ndim
+    sl[axis] = slice(new_rank * per, (new_rank + 1) * per)
+    return saved_global[tuple(sl)]
+
+
+class BoundedStalenessFlusher:
+    """persist_every_k generalized: ``maybe_flush`` persists only when the
+    step counter crosses the cadence OR the caller forces it; tracks how
+    stale the persisted state may be (= worst-case recovery replay)."""
+
+    def __init__(self, flush_fn, every_k: int = 1):
+        self.flush_fn = flush_fn
+        self.every_k = every_k
+        self.last_flushed_step = -1
+
+    def maybe_flush(self, step: int, force: bool = False) -> bool:
+        if force or self.every_k <= 1 or self.last_flushed_step < 0 or \
+                step - self.last_flushed_step >= self.every_k:
+            self.flush_fn(step)
+            self.last_flushed_step = step
+            return True
+        return False
+
+    @property
+    def max_replay(self) -> int:
+        return self.every_k - 1

@@ -1,0 +1,50 @@
+"""Sequence-sharded flash-decode (shard_map): the beyond-paper optimization
+for decode cells whose KV cache dominates (decode_32k / long_500k).
+
+The KV cache's sequence axis is sharded over the "model" axis; each shard
+computes a PARTIAL attention (local max / sumexp / unnormalized output) and
+the partials are combined with a psum-based two-pass softmax merge
+(attention.flash_combine) -- one small collective of [B, H, hd+2] instead of
+all-gathering the whole cache.  Per-shard compute is T/16 of the baseline
+and the collective payload drops from O(T * KV * hd) to O(H * hd)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import decode_step_attention_partial
+
+
+def sharded_decode_attention(mesh, q, k_cache, v_cache, lengths,
+                             axis: str = "model"):
+    """q: [B,1,H,hd] replicated over `axis`; k/v: [B,T,KV,hd] with T sharded
+    over `axis`; lengths: [B].  Returns [B,1,H,hd]."""
+    n = mesh.shape[axis]
+    T = k_cache.shape[1]
+    Ts = T // n
+
+    def worker(q_, k_, v_, lengths_):
+        idx = jax.lax.axis_index(axis)
+        base = idx * Ts
+        pos = base + jnp.arange(Ts)[None, :]
+        valid = pos < lengths_[:, None]
+        o, m, l = decode_step_attention_partial(q_, k_, v_, valid)
+        # two-pass softmax combine across shards (3 small psums)
+        m_glob = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * corr, axis)
+        o_glob = jax.lax.psum(o * corr[..., None], axis)
+        out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return out[:, None].astype(q_.dtype)
+
+    return shard_map(
+        worker, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
+                  P()),
+        out_specs=P(),
+    )(q, k_cache, v_cache, lengths)

@@ -1,0 +1,187 @@
+"""Sharding rules: logical roles -> PartitionSpec, by param path + shape.
+
+Baseline layout (the hillclimbs in EXPERIMENTS.md §Perf modify these):
+  * batch / sequence-of-requests  -> ("pod", "data")   [DP, pod extends DP]
+  * attention heads / ffn hidden / experts / vocab -> "model"   [TP/EP]
+  * decode KV cache               -> batch over DP; sequence over "model"
+    (sequence-parallel flash-decode; see flash_decode.py)
+  * optimizer moments follow their parameter's spec (ZeRO-esque by TP, plus
+    DP-sharded via the `zero_dp` flag on 2D+ tensors).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def DP_AXES(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divisible(dim: int, mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0
+
+
+def _spec_for(path: str, shape, mesh, zero_dp: bool = False) -> P:
+    """Path-based sharding rules.  `path` is a '/'-joined key path."""
+    M = "model"
+    msize = mesh.shape[M]
+
+    def ok(i):  # dimension i shardable over model axis
+        return shape[i] % msize == 0
+
+    nd = len(shape)
+    # stacked stage params carry a leading repeat axis -> rules apply to the
+    # trailing dims; detect via path marker set by param_specs
+    lead = 1 if path.startswith("stages/stacked/") else 0
+
+    def pad(spec_tail):
+        return P(*([None] * lead + list(spec_tail)))
+
+    d = {i: shape[i] for i in range(nd)}
+    tail = nd - lead
+
+    if re.search(r"embed$", path):
+        return P(M, None) if ok(0) else P(None, None)
+    if re.search(r"lm_head$", path):
+        return P(None, M) if ok(1) else P(None, None)
+    if re.search(r"(wq|wk|wv|wi_gate|wi_up|gate_proj|x_proj|in_proj)$", path):
+        return pad([None, M] if ok(nd - 1) else [None, None])
+    if re.search(r"(wo|out_proj)$", path) and tail == 2:
+        return pad([M, None] if ok(nd - 2) else [None, None])
+    if re.search(r"moe/(wi_gate|wi_up|wo)$", path) or (
+            re.search(r"(wi_gate|wi_up|wo)$", path) and tail == 3):
+        # expert-stacked [E, d, f]: expert parallelism over model axis
+        return pad([M, None, None] if ok(nd - 3) else [None, None, None])
+    if re.search(r"router$", path):
+        return pad([None, None])
+    if re.search(r"(conv_w|conv_b|lam|wa|wx)$", path):
+        if tail >= 1 and ok(nd - 1):
+            return pad([None] * (tail - 1) + [M])
+        return pad([None] * tail)
+    if re.search(r"(A_log|D|dt_bias)$", path):
+        return pad([None] * tail)
+    if re.search(r"(scale|pos)$", path):  # norms / positional
+        return pad([None] * tail)
+    return pad([None] * tail)
+
+
+def _walk(tree, prefix, out):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            _walk(v, f"{prefix}/{k}" if prefix else k, out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _walk(v, f"{prefix}/{i}" if prefix else str(i), out)
+    else:
+        out.append((prefix, tree))
+
+
+def param_specs(params_shape, mesh) -> Any:
+    """PartitionSpec pytree matching the (abstract) param tree.  Stacked
+    stage leaves (scan-over-layers repeat axis) get a leading None: the rule
+    is matched against the TRAILING dims (ndim-based detection)."""
+    return _build(params_shape, mesh)
+
+
+def _build(tree, mesh, path=""):
+    if isinstance(tree, dict):
+        return {k: _build(v, mesh, f"{path}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_build(v, mesh, f"{path}/{i}")
+                          for i, v in enumerate(tree))
+    shape = tree.shape
+    clean = re.sub(r"/stages/\d+", "", path).lstrip("/")
+    base = _spec_for(clean, shape, mesh)
+    if len(base) < len(shape):      # stacked stage leaf: repeat axis leads
+        return P(*([None] * (len(shape) - len(base)) + list(base)))
+    if len(base) > len(shape):
+        return P(*list(base)[-len(shape):])
+    return base
+
+
+def opt_state_specs(opt_shape, pspecs, mesh) -> Any:
+    """Optimizer state follows its parameter's layout.  adamw: m/v mirror the
+    param tree; adafactor: flat list of factored dicts (row/col factors drop
+    the corresponding param dim's spec)."""
+    if "m" in opt_shape:  # adamw
+        return {"m": pspecs, "v": pspecs, "step": P()}
+    # adafactor: state["v"] is a flat list aligned with param leaves
+    leaves_spec = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    out = []
+    for st, ps in zip(opt_shape["v"], leaves_spec):
+        if "vr" in st:
+            out.append({"vr": P(*list(ps)[:-1]), "vc": P(*(list(ps)[:-2] + [list(ps)[-1]]))})
+        else:
+            out.append({"vf": ps})
+    return {"v": out, "step": P()}
+
+
+def dp_axes_for(mesh, batch: Optional[int]):
+    """DP axes that evenly divide the batch (None if batch too small --
+    long_500k has global_batch=1: batch is replicated, parallelism comes
+    from model/sequence sharding instead)."""
+    axes = []
+    rem = batch
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and rem is not None and rem % mesh.shape[a] == 0:
+            axes.append(a)
+            rem //= mesh.shape[a]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_specs(kind: str, mesh, cfg=None, batch: Optional[int] = None) -> Dict[str, P]:
+    dp = dp_axes_for(mesh, batch) if batch is not None else None
+    if batch is None:
+        dp = DP_AXES(mesh)
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if kind == "train":
+        s = {"tokens": P(dp, None), "labels": P(dp, None)}
+    elif kind == "prefill":
+        s = {"tokens": P(dp, None)}
+    else:
+        return {"token": P(dp), "lengths": P(dp)}
+    if cfg is not None and cfg.frontend == "audio":
+        s["frames"] = P(dp, None, None)
+    if cfg is not None and cfg.frontend == "vision":
+        s["patch_embeds"] = P(dp, None, None)
+    return s
+
+
+def cache_specs(cache_shape, mesh, stages=None, shard_seq: bool = False,
+                batch: Optional[int] = None) -> Any:
+    """Decode-cache layout: batch over DP.  Stacked stage caches (scan-over-
+    layers) carry a leading repeat axis (never sharded).  With ``shard_seq``
+    (the flash-decode hillclimb), attention K/V seq dims go over "model"."""
+    if batch is not None:
+        dp = dp_axes_for(mesh, batch)
+    else:
+        dp = DP_AXES(mesh)
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def leaf(x, stacked: bool):
+        nd = len(x.shape)
+        core = nd - (1 if stacked else 0)
+        lead = [None] if stacked else []
+        kv_like = core == 4  # [B, T, KV, hd]
+        if kv_like:
+            tdim = x.shape[1 + (1 if stacked else 0)]
+            if shard_seq and tdim % mesh.shape["model"] == 0:
+                return P(*lead, dp, "model", None, None)
+            return P(*lead, dp, None, None, None)
+        return P(*lead, dp, *([None] * (core - 1)))
+
+    if stages is None:
+        # structural fallback: stage entries whose leaves' leading dim
+        # matches across the stage and exceeds 1 are treated per-ndim
+        return jax.tree.map(lambda x: leaf(x, False), cache_shape)
+    out = []
+    for (kinds, _moes, n_rep), stage_cache in zip(stages, cache_shape):
+        out.append(jax.tree.map(lambda x: leaf(x, n_rep > 1), stage_cache))
+    return out

@@ -1,0 +1,132 @@
+"""``crq_wave`` -- one wave of CRQ cell transitions in VMEM.
+
+Applies W enqueue transitions then W dequeue/empty/unsafe transitions
+(Algorithm 3 lines 14/34/38/41) against the ring arrays held in a single
+VMEM block.  Tickets are pairwise distinct (guaranteed by ``fai_ticket``), so
+per-lane stores are conflict-free; lanes are walked with a sequential
+fori_loop (W is small -- tens to hundreds -- while R is the large axis; the
+ring block stays resident in VMEM across the whole wave, which is the point:
+one HBM round-trip per wave instead of one per operation).
+
+VMEM budget: 3 int32 arrays of R + 5 wave arrays of W: R=8192, W=512 =>
+~100KB + ~10KB, comfortably inside the ~16MB VMEM of a TPU core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BOT = -1
+
+
+def _crq_wave_kernel(
+    head_ref,        # SMEM (1,)
+    vals_ref, idxs_ref, safes_ref,           # [R] VMEM (inputs)
+    et_ref, ev_ref, ea_ref, dt_ref, da_ref,  # [W] VMEM
+    ovals_ref, oidxs_ref, osafes_ref,        # [R] VMEM (outputs)
+    eok_ref, dout_ref,                       # [W] VMEM (outputs)
+):
+    R = vals_ref.shape[0]
+    W = et_ref.shape[0]
+    ovals_ref[...] = vals_ref[...]
+    oidxs_ref[...] = idxs_ref[...]
+    osafes_ref[...] = safes_ref[...]
+    head = head_ref[0]
+
+    def enq_body(i, _):
+        t = et_ref[i]
+        active = ea_ref[i] != 0
+        slot = t % R
+        ci = oidxs_ref[slot]
+        cv = ovals_ref[slot]
+        cs = osafes_ref[slot]
+        ok = active & (ci <= t) & (cv == BOT) & ((cs == 1) | (head <= t))
+        ovals_ref[slot] = jnp.where(ok, ev_ref[i], cv)
+        oidxs_ref[slot] = jnp.where(ok, t, ci)
+        osafes_ref[slot] = jnp.where(ok, 1, cs)
+        eok_ref[i] = ok.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, W, enq_body, 0)
+
+    def deq_body(i, _):
+        t = dt_ref[i]
+        active = da_ref[i] != 0
+        slot = t % R
+        ci = oidxs_ref[slot]
+        cv = ovals_ref[slot]
+        cs = osafes_ref[slot]
+        occupied = cv != BOT
+        deq_tr = active & occupied & (ci == t)
+        empty_tr = active & (~occupied) & (ci <= t)
+        unsafe_tr = active & occupied & (ci < t)
+        out = jnp.where(
+            deq_tr, cv,
+            jnp.where(empty_tr, jnp.int32(-2),
+                      jnp.where(active, jnp.int32(-3), jnp.int32(-4))),
+        )
+        adv = deq_tr | empty_tr
+        ovals_ref[slot] = jnp.where(adv, BOT, cv)
+        oidxs_ref[slot] = jnp.where(adv, t + R, ci)
+        osafes_ref[slot] = jnp.where(unsafe_tr, 0, cs)
+        dout_ref[i] = out
+        return 0
+
+    jax.lax.fori_loop(0, W, deq_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def crq_wave(
+    vals, idxs, safes, head,
+    enq_tickets, enq_vals, enq_active,
+    deq_tickets, deq_active,
+    *,
+    interpret: bool = True,
+):
+    R = vals.shape[0]
+    W = enq_tickets.shape[0]
+    full = lambda: pl.BlockSpec(memory_space=pltpu.ANY) if False else None
+    outs = pl.pallas_call(
+        _crq_wave_kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # head
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((R,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(head, jnp.int32).reshape(1),
+        jnp.asarray(vals, jnp.int32),
+        jnp.asarray(idxs, jnp.int32),
+        jnp.asarray(safes, jnp.int32),
+        jnp.asarray(enq_tickets, jnp.int32),
+        jnp.asarray(enq_vals, jnp.int32),
+        jnp.asarray(enq_active, jnp.int32),
+        jnp.asarray(deq_tickets, jnp.int32),
+        jnp.asarray(deq_active, jnp.int32),
+    )
+    return tuple(outs)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode -- the kernel
+body runs as traced Python, validating the exact TPU program logic.  On a TPU
+backend set ``interpret=False`` (the default flips automatically)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import crq_wave as _crq_wave
+from . import fai_ticket as _fai_ticket
+from . import recovery_scan as _recovery_scan
+from . import ref as ref  # re-export for callers that want the oracle
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fai_ticket(base, mask, block: int = _fai_ticket.DEFAULT_BLOCK):
+    """tickets[W], new_base -- batched Fetch&Increment (prefix-sum kernel)."""
+    return _fai_ticket.fai_ticket(base, mask, block=block, interpret=_interpret())
+
+
+def crq_wave(vals, idxs, safes, head, enq_tickets, enq_vals, enq_active,
+             deq_tickets, deq_active):
+    """One CRQ transition wave in VMEM.  Returns
+    (vals', idxs', safes', enq_ok[W] int32, deq_out[W] int32)."""
+    return _crq_wave.crq_wave(
+        vals, idxs, safes, head, enq_tickets, enq_vals, enq_active,
+        deq_tickets, deq_active, interpret=_interpret(),
+    )
+
+
+def percrq_recovery_scan(vals, idxs, head0, block: int = 2048):
+    """(head, tail) recovered for one ring segment (Algorithm 3 lines 61-80)."""
+    R = vals.shape[0]
+    blk = block
+    while R % blk != 0:  # choose a divisor block
+        blk //= 2
+        if blk < 8:
+            blk = R
+            break
+    return _recovery_scan.percrq_recovery_scan(
+        vals, idxs, head0, block=blk, interpret=_interpret()
+    )
+
+
+def periq_streak(vals, n, block: int = 2048):
+    """First index of the first run of n consecutive ⊥ cells (PerIQ Tail scan)."""
+    return _recovery_scan.periq_streak(vals, n, block=block, interpret=_interpret())

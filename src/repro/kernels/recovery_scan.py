@@ -1,0 +1,191 @@
+"""``recovery_scan`` -- the paper's recovery scans as TPU reduction kernels.
+
+Two kernels:
+
+* ``percrq_recovery_scan``: Algorithm 3 lines 61-80 for one ring segment --
+  five masked reductions (max occupied idx+1, max advanced-empty idx-R+1,
+  in-range max/min passes) fused into one VMEM pass over the blocked ring.
+  The cross-pass data dependence (head1 depends on tail1, ...) is resolved by
+  computing ALL candidate reductions blockwise and combining the carries at
+  the end -- one HBM read of the segment instead of four.
+
+* ``periq_streak``: Algorithm 1 lines 19-23 -- find the first run of n
+  consecutive ⊥ cells.  Blocked scan carrying (current streak, found index)
+  in SMEM across sequential grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BOT = -1
+_NEG = -(2**30)  # python ints: inlined as literals (no captured constants)
+_POS = 2**30
+
+
+def _percrq_scan_kernel(
+    head0_ref,                      # SMEM (1,)
+    vals_ref, idxs_ref,             # [blk] VMEM
+    out_ref,                        # SMEM (2,): head, tail
+    acc_ref,                        # SMEM (4,): t_occ, t_emp, mx, mn
+):
+    """Three sequential sweeps over the blocked ring (grid = 3 * n_blocks):
+    sweep 0 accumulates the Tail candidates (lines 61-68), sweep 1 the
+    in-range empty-cell maximum (lines 71-75, needs Tail), sweep 2 the
+    in-range occupied minimum (lines 76-80, needs the updated Head).  Carries
+    live in SMEM; grid steps execute in order on TPU."""
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+    n_blocks = nb // 3
+    blk = vals_ref.shape[0]
+    R_total = n_blocks * blk
+    head0 = head0_ref[0]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = 0        # max(occupied idx + 1)
+        acc_ref[1] = 0        # max(empty advanced idx - R + 1)
+        acc_ref[2] = _NEG     # max in-range empty (idx - R + 1)
+        acc_ref[3] = _POS     # min in-range occupied >= head1
+
+    vals = vals_ref[...]
+    idxs = idxs_ref[...]
+    occupied = vals != BOT
+    phase = i // n_blocks
+    blk_i = i % n_blocks
+    u = blk_i * blk + jax.lax.iota(jnp.int32, blk)
+
+    @pl.when(phase == 0)
+    def _tail_pass():
+        t_occ = jnp.max(jnp.where(occupied, idxs + 1, 0))
+        t_emp = jnp.max(jnp.where((~occupied) & (idxs >= R_total),
+                                  idxs - R_total + 1, 0))
+        acc_ref[0] = jnp.maximum(acc_ref[0], t_occ)
+        acc_ref[1] = jnp.maximum(acc_ref[1], t_emp)
+
+    tail0 = jnp.maximum(acc_ref[0], acc_ref[1])
+    tail1 = jnp.where(head0 > tail0, head0, tail0)
+
+    @pl.when(phase == 1)
+    def _mx_pass():
+        live = jnp.minimum(jnp.maximum(tail1 - head0, 0), R_total)
+        in_range = ((u - head0) % R_total) < live
+        mx = jnp.max(jnp.where(in_range & (~occupied),
+                               idxs - R_total + 1, _NEG))
+        acc_ref[2] = jnp.maximum(acc_ref[2], mx)
+
+    @pl.when(phase == 2)
+    def _mn_pass():
+        head1 = jnp.maximum(head0, acc_ref[2])
+        live2 = jnp.minimum(jnp.maximum(tail1 - head1, 0), R_total)
+        in_range2 = ((u - head1) % R_total) < live2
+        mn = jnp.min(jnp.where(in_range2 & occupied & (idxs >= head1),
+                               idxs, _POS))
+        acc_ref[3] = jnp.minimum(acc_ref[3], mn)
+
+        @pl.when(i == nb - 1)
+        def _fini():
+            head1_f = jnp.maximum(head0, acc_ref[2])
+            mn_all = acc_ref[3]
+            head2 = jnp.where(head0 > tail0, head0,
+                              jnp.where(mn_all < tail1, mn_all, head1_f))
+            tail2 = jnp.where(head0 > tail0, head0, tail1)
+            out_ref[0] = head2
+            out_ref[1] = tail2
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def percrq_recovery_scan(vals, idxs, head0, *, block: int = 2048, interpret: bool = True):
+    """Returns (head, tail) recovered for one segment."""
+    R = vals.shape[0]
+    blk = min(block, R)
+    assert R % blk == 0, (R, blk)
+    n_blocks = R // blk
+    out, _acc = pl.pallas_call(
+        _percrq_scan_kernel,
+        grid=(3 * n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((blk,), lambda i, n=n_blocks: (i % n,)),
+            pl.BlockSpec((blk,), lambda i, n=n_blocks: (i % n,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+            jax.ShapeDtypeStruct((4,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(head0, jnp.int32).reshape(1),
+        jnp.asarray(vals, jnp.int32),
+        jnp.asarray(idxs, jnp.int32),
+    )
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# PerIQ streak scan
+# ---------------------------------------------------------------------------
+
+
+def _periq_streak_kernel(n_ref, vals_ref, out_ref, carry_ref):
+    """carry = (running streak length, found start or BIG)."""
+    i = pl.program_id(0)
+    nb = pl.num_programs(0)
+    blk = vals_ref.shape[0]
+    n = n_ref[0]
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = 0      # streak entering this block
+        carry_ref[1] = _POS   # first found start index
+
+    vals = vals_ref[...]
+    is_bot = (vals == BOT).astype(jnp.int32)
+
+    def body(j, state):
+        streak, found = state
+        streak = jnp.where(is_bot[j] == 1, streak + 1, 0)
+        pos = i * blk + j
+        hit = (streak >= n) & (found == _POS)
+        found = jnp.where(hit, pos - n + 1, found)
+        return streak, found
+
+    streak, found = jax.lax.fori_loop(0, blk, body, (carry_ref[0], carry_ref[1]))
+    carry_ref[0] = streak
+    carry_ref[1] = found
+
+    @pl.when(i == nb - 1)
+    def _fini():
+        out_ref[0] = jnp.where(carry_ref[1] == _POS,
+                               jnp.int32(nb * blk), carry_ref[1])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def periq_streak(vals, n, *, block: int = 2048, interpret: bool = True):
+    """Index of the first cell of the first run of n consecutive ⊥ values."""
+    N = vals.shape[0]
+    blk = min(block, N)
+    pad = (-N) % blk
+    vals_p = jnp.pad(jnp.asarray(vals, jnp.int32), (0, pad), constant_values=0)
+    n_blocks = vals_p.shape[0] // blk
+    out = pl.pallas_call(
+        _periq_streak_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(n, jnp.int32).reshape(1), vals_p)
+    return jnp.minimum(out[0], N)

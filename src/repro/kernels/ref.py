@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernels are
+validated against, shape/dtype-swept, in tests/test_kernels.py)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BOT = jnp.int32(-1)
+
+
+def fai_ticket(base: jnp.ndarray, mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched Fetch&Increment: lane i's ticket = base + #active lanes before
+    it; returns (tickets[W], new_base).  Inactive lanes get the ticket they
+    WOULD have had (callers mask on `mask`)."""
+    m = mask.astype(jnp.int32)
+    ex = jnp.cumsum(m) - m
+    return base + ex, base + jnp.sum(m)
+
+
+def crq_wave(
+    vals: jnp.ndarray,     # [R] int32, -1 = ⊥
+    idxs: jnp.ndarray,     # [R] int32
+    safes: jnp.ndarray,    # [R] int32 (0/1)
+    head: jnp.ndarray,     # scalar int32 (shared Head at wave start)
+    enq_tickets: jnp.ndarray,  # [W] int32 (pairwise distinct mod R among active)
+    enq_vals: jnp.ndarray,     # [W] int32
+    enq_active: jnp.ndarray,   # [W] bool (pre-masked: not closed, not full)
+    deq_tickets: jnp.ndarray,  # [W] int32
+    deq_active: jnp.ndarray,   # [W] bool
+):
+    """One CRQ wave: all enqueue transitions, then all dequeue/empty/unsafe
+    transitions (Algorithm 3 lines 14 / 34 / 38 / 41), data-parallel.
+
+    Returns (vals', idxs', safes', enq_ok[W] int32, deq_out[W] int32) with
+    deq_out: >=0 item, -2 EMPTY-candidate, -3 RETRY, -4 idle."""
+    R = vals.shape[0]
+    # -- enqueue transitions
+    slots = enq_tickets % R
+    ci = idxs[slots]
+    cv = vals[slots]
+    cs = safes[slots]
+    ok = enq_active & (ci <= enq_tickets) & (cv == BOT) & ((cs == 1) | (head <= enq_tickets))
+    w = jnp.where(ok, slots, R)
+    vals = vals.at[w].set(jnp.where(ok, enq_vals, 0), mode="drop")
+    idxs = idxs.at[w].set(enq_tickets, mode="drop")
+    safes = safes.at[w].set(1, mode="drop")
+    # -- dequeue transitions (observe post-enqueue state)
+    dslots = deq_tickets % R
+    di = idxs[dslots]
+    dv = vals[dslots]
+    occupied = dv != BOT
+    deq_tr = deq_active & occupied & (di == deq_tickets)
+    empty_tr = deq_active & (~occupied) & (di <= deq_tickets)
+    unsafe_tr = deq_active & occupied & (di < deq_tickets)
+    out = jnp.where(
+        deq_tr, dv,
+        jnp.where(empty_tr, jnp.int32(-2),
+                  jnp.where(deq_active, jnp.int32(-3), jnp.int32(-4))),
+    )
+    adv = deq_tr | empty_tr
+    dw = jnp.where(adv, dslots, R)
+    vals = vals.at[dw].set(BOT, mode="drop")
+    idxs = idxs.at[dw].set(deq_tickets + R, mode="drop")
+    uw = jnp.where(unsafe_tr, dslots, R)
+    safes = safes.at[uw].set(0, mode="drop")
+    return vals, idxs, safes, ok.astype(jnp.int32), out
+
+
+def recovery_scan(
+    vals: jnp.ndarray,   # [R] int32
+    idxs: jnp.ndarray,   # [R] int32
+    head0: jnp.ndarray,  # scalar int32 = max persisted mirror (line 60)
+):
+    """PerCRQ recovery reductions (Algorithm 3 lines 61-80), vectorized.
+
+    Returns (head, tail) recovered values."""
+    R = vals.shape[0]
+    occupied = vals != BOT
+    t_occ = jnp.where(occupied, idxs + 1, 0)
+    t_emp = jnp.where((~occupied) & (idxs >= R), idxs - R + 1, 0)
+    tail0 = jnp.maximum(jnp.max(t_occ), jnp.max(t_emp)).astype(jnp.int32)
+    empty_q = head0 > tail0
+    tail1 = jnp.where(empty_q, head0, tail0)
+    u = jnp.arange(R, dtype=jnp.int32)
+    live = jnp.minimum(jnp.maximum(tail1 - head0, 0), R)
+    in_range = ((u - head0) % R) < live
+    mx_cand = jnp.where(in_range & (~occupied), idxs - R + 1, head0)
+    head1 = jnp.maximum(head0, jnp.max(mx_cand))
+    live2 = jnp.minimum(jnp.maximum(tail1 - head1, 0), R)
+    in_range2 = ((u - head1) % R) < live2
+    mn_cand = jnp.where(in_range2 & occupied & (idxs >= head1), idxs, tail1)
+    mn = jnp.min(mn_cand)
+    head2 = jnp.where(empty_q, head0, jnp.where(mn < tail1, mn, head1))
+    tail2 = jnp.where(empty_q, head0, tail1)
+    return head2, tail2
+
+
+def periq_streak(vals: jnp.ndarray, n: jnp.ndarray):
+    """PerIQ recovery Tail scan: index of the FIRST cell of the first run of
+    n consecutive ⊥ (-1) values.  vals is the (bounded window of the) infinite
+    array; the caller guarantees a run exists (append n ⊥s).  Returns int32."""
+    N = vals.shape[0]
+    is_bot = (vals == BOT).astype(jnp.int32)
+    # streak[i] = length of ⊥-run ending at i  (associative scan)
+    def combine(a, b):
+        run_a, len_a = a
+        run_b, len_b = b
+        # run lengths compose: if b's run covers its whole span, extend a's
+        new_run = jnp.where(run_b == len_b, run_a + run_b, run_b)
+        return new_run, len_a + len_b
+    import jax
+    runs, _ = jax.lax.associative_scan(combine, (is_bot, jnp.ones_like(is_bot)))
+    hit = runs >= n
+    first_end = jnp.argmax(hit)  # first index where run >= n
+    found = jnp.any(hit)
+    start = first_end - n + 1
+    return jnp.where(found, start, N).astype(jnp.int32)

@@ -1,0 +1,430 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+#   backend initialization).
+
+"""Multi-pod dry-run (deliverable e) + roofline term extraction (g).
+
+For every (architecture x input shape) cell and both production meshes
+(single-pod 16x16 = 256 chips, multi-pod 2x16x16 = 512 chips):
+
+  1. GATE: lower + compile the full-depth step (scan-over-layers) against
+     ShapeDtypeStruct inputs; print memory_analysis() + cost_analysis().
+  2. ROOFLINE: XLA's cost_analysis counts while/scan bodies ONCE, so the
+     full-depth scanned module under-reports FLOPs by ~n_layers.  We derive
+     exact per-step terms by lowering UNROLLED modules at 1x and 2x the
+     layer-pattern period (at microbatch size): the difference is the exact
+     per-period cost; total = overhead + n_periods * per_period, scaled by
+     grad-accumulation (optimizer-update cost, which must NOT scale with
+     grad accumulation, is removed analytically).
+  3. Collective bytes are parsed from the partitioned compiled HLO
+     (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute), all-reduce weighted 2x (ring = reduce-scatter +
+     all-gather phases).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k [--multi-pod|--both-meshes] [--all] [--fast] \
+      [--out experiments/dryrun.jsonl]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import math
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import (ARCHS, GRAD_ACCUM, cell_is_applicable,
+                                    get_config, input_specs, skip_reason)
+from repro.distributed.sharding import (batch_specs, cache_specs, DP_AXES,
+                                        opt_state_specs, param_specs)
+from repro.distributed.steps import (make_prefill_step, make_serve_step,
+                                     make_train_step)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import Model, stages_of
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link per chip
+
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s32|u32|s64|u64|pred)\[([\d,]*)\]")
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+               "s32": 4, "u32": 4, "s64": 8, "u64": 8, "pred": 1}
+COLL_WEIGHT = {"all-reduce": 2.0}  # ring all-reduce moves ~2x the payload
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the partitioned HLO
+    (shapes sit on the RHS, before the opcode)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        for kind in COLL_KINDS:
+            pos = rhs.find(f" {kind}(")
+            if pos < 0:
+                pos = rhs.find(f"{kind}(")
+                if pos != 1 and not rhs.lstrip().startswith(kind + "("):
+                    continue
+            head = rhs[:pos] if pos > 0 else rhs
+            total = 0
+            for dm in SHAPE_RE.finditer(head):
+                dt, dims = dm.groups()
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                total += n * DTYPE_BYTES[dt]
+            if total:
+                out[kind] = out.get(kind, 0.0) + total * COLL_WEIGHT.get(kind, 1.0)
+            break
+    return out
+
+
+def abstract_params(model: Model, seed: int = 0):
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(seed))
+
+
+def _shard_like(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+VARIANTS = {
+    "baseline": {},
+    # §Perf hillclimb levers (see EXPERIMENTS.md §Perf for the hypothesis ->
+    # change -> measure log of each).  Keys starting with "_" configure the
+    # step builder rather than the model config.
+    "opt": dict(attn_probs_bf16=True, remat_policy="dots",
+                moe_shard_dispatch=True),  # accum_inside REFUTED, excluded
+    "attn_bf16": dict(attn_probs_bf16=True),
+    "remat_dots": dict(remat_policy="dots"),
+    "moe_shard": dict(moe_shard_dispatch=True),
+    "accum_inside": dict(_accum="inside"),
+    "moe_shard+accum": dict(moe_shard_dispatch=True, _accum="inside"),
+    "moe_shardmap": dict(moe_impl="shard_map"),
+}
+
+
+def apply_variant(cfg, variant: str):
+    over = {k: v for k, v in VARIANTS[variant].items()
+            if not k.startswith("_")}
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def variant_accum(variant: str) -> str:
+    return VARIANTS[variant].get("_accum", "outside")
+
+
+def build_cell(arch: str, shape: str, mesh, n_moe_groups: int,
+               cfg=None, batch_override: Optional[int] = None,
+               grad_accum: Optional[int] = None,
+               shard_kv: bool = False, accum: str = "outside"):
+    """Returns (fn, args, donate) ready for jit().lower().  cfg override and
+    batch_override support the roofline period-measurement modules."""
+    cfg = cfg or get_config(arch)
+    from repro.distributed import context as dctx
+    dctx.set_mesh(mesh)
+    sc = SHAPES[shape]
+    B = batch_override or sc.global_batch
+    model = Model(cfg, n_moe_groups=n_moe_groups)
+    pshape = abstract_params(model)
+    pspecs = param_specs(pshape, mesh)
+    ins = {k: jax.ShapeDtypeStruct((B,) + v.shape[1:], v.dtype)
+           for k, v in input_specs(arch, shape).items()}
+    bspecs = batch_specs(sc.kind, mesh, cfg, batch=B)
+
+    if sc.kind == "train":
+        ga = grad_accum if grad_accum is not None else GRAD_ACCUM.get(
+            (arch, shape), 1)
+        step, opt_init = make_train_step(model, grad_accum=ga, accum=accum)
+        oshape = jax.eval_shape(opt_init, pshape)
+        ospecs = opt_state_specs(oshape, pspecs, mesh)
+        args = (_shard_like(pshape, pspecs, mesh),
+                _shard_like(oshape, ospecs, mesh),
+                _shard_like(ins, bspecs, mesh))
+        return step, args, (0, 1)
+    if sc.kind == "prefill":
+        step = make_prefill_step(model, max_len=sc.seq_len)
+        args = (_shard_like(pshape, pspecs, mesh),
+                _shard_like(ins, bspecs, mesh))
+        return step, args, ()
+    enc_dec = cfg.enc_layers > 0
+    step = make_serve_step(model, with_enc_kv=enc_dec)
+    cshape = jax.eval_shape(lambda: model.init_cache(B, sc.seq_len))
+    cspecs = cache_specs(cshape, mesh, stages=model.stages, batch=B,
+                         shard_seq=shard_kv)
+    args = [_shard_like(pshape, pspecs, mesh),
+            _shard_like(cshape, cspecs, mesh),
+            _shard_like(ins["token"], bspecs["token"], mesh),
+            _shard_like(ins["lengths"], bspecs["lengths"], mesh)]
+    if enc_dec:
+        # precomputed cross-attention K/V (one [B, enc_ctx, KV, hd] pair per
+        # decoder layer), batch-sharded like the cache
+        dp = bspecs["token"]
+        kv_shape = jax.ShapeDtypeStruct(
+            (B, cfg.enc_ctx, cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype))
+        kv_spec = P(*(list(dp) + [None, None, None]))
+        ks = [_shard_like(kv_shape, kv_spec, mesh)] * cfg.n_layers
+        vs = [_shard_like(kv_shape, kv_spec, mesh)] * cfg.n_layers
+        args.append((ks, vs))
+    return step, tuple(args), (1,)
+
+
+def _compile_costs(arch, shape, mesh, n_moe_groups, cfg, batch, ga,
+                   shard_kv=False, accum="outside"):
+    fn, args, donate = build_cell(arch, shape, mesh, n_moe_groups, cfg=cfg,
+                                  batch_override=batch, grad_accum=ga,
+                                  shard_kv=shard_kv, accum=accum)
+    with mesh:
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll)
+
+
+def _sub(a, b):
+    return (a[0] - b[0], a[1] - b[1],
+            {k: a[2].get(k, 0.0) - b[2].get(k, 0.0)
+             for k in set(a[2]) | set(b[2])})
+
+
+def _addmul(base, per, n):
+    return (base[0] + per[0] * n, base[1] + per[1] * n,
+            {k: base[2].get(k, 0.0) + per[2].get(k, 0.0) * n
+             for k in set(base[2]) | set(per[2])})
+
+
+def measure_roofline(arch: str, shape: str, mesh, n_moe_groups: int,
+                     variant: str = "baseline", shard_kv: bool = False):
+    """Per-step per-device (flops, bytes, coll) via the period trick."""
+    cfg = apply_variant(get_config(arch), variant)
+    sc = SHAPES[shape]
+    period = len(stages_of(dataclasses.replace(cfg, scan_layers=True))[0][0]) \
+        if cfg.scan_layers else cfg.n_layers
+    ga = GRAD_ACCUM.get((arch, shape), 1) if sc.kind == "train" else 1
+    micro_B = max(sc.global_batch // ga, 1)
+
+    accum = variant_accum(variant)
+    if not cfg.scan_layers and ga == 1:
+        # already fully unrolled (whisper): direct measurement
+        total = _compile_costs(arch, shape, mesh, n_moe_groups, cfg,
+                               sc.global_batch, 1, shard_kv)
+        return total, {"method": "direct", "period": cfg.n_layers, "ga": 1}
+    if accum == "inside" and ga > 1:
+        # with in-loss accumulation the per-microbatch module ISN'T simply
+        # scaled by ga for collectives (that's the point) -- measure the
+        # period modules WITH the inner scan at full global batch
+        c1 = dataclasses.replace(cfg, n_layers=period, scan_layers=False)
+        c2 = dataclasses.replace(cfg, n_layers=2 * period, scan_layers=False)
+        cost1 = _compile_costs(arch, shape, mesh, n_moe_groups, c1,
+                               sc.global_batch, ga, shard_kv, 'inside_unrolled')
+        cost2 = _compile_costs(arch, shape, mesh, n_moe_groups, c2,
+                               sc.global_batch, ga, shard_kv, 'inside_unrolled')
+        per_period = _sub(cost2, cost1)
+        overhead = _sub(cost1, per_period)
+        n_periods = cfg.n_layers / period
+        total = _addmul(overhead, per_period, n_periods)
+        return total, {"method": "period-inside", "period": period, "ga": ga,
+                       "n_periods": n_periods}
+
+    c1 = dataclasses.replace(cfg, n_layers=period, scan_layers=False)
+    c2 = dataclasses.replace(cfg, n_layers=2 * period, scan_layers=False)
+    cost1 = _compile_costs(arch, shape, mesh, n_moe_groups, c1, micro_B, 1,
+                           shard_kv)
+    cost2 = _compile_costs(arch, shape, mesh, n_moe_groups, c2, micro_B, 1,
+                           shard_kv)
+    per_period = _sub(cost2, cost1)
+    overhead = _sub(cost1, per_period)  # embed/logits/loss/opt for 0 layers
+    n_periods = cfg.n_layers / period
+    micro_total = _addmul(overhead, per_period, n_periods)
+    if ga > 1:
+        # scale by grad accumulation, then remove the (ga-1) spurious
+        # optimizer updates: opt flops ~ negligible; opt bytes analytic.
+        n_p = cfg.n_params()
+        chips = math.prod(mesh.devices.shape)
+        if cfg.optimizer == "adamw":
+            opt_bytes = (2 * 2 + 4 * 4) * n_p / chips   # p rw + m,v rw fp32
+        else:
+            opt_bytes = (2 * 2 + 0.2) * n_p / chips     # adafactor factors
+        total = (micro_total[0] * ga,
+                 micro_total[1] * ga - (ga - 1) * opt_bytes,
+                 {k: v * ga for k, v in micro_total[2].items()})
+    else:
+        total = micro_total
+    return total, {"method": "period", "period": period, "ga": ga,
+                   "micro_batch": micro_B, "n_periods": n_periods}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, fast: bool = False,
+             verbose: bool = True, variant: str = "baseline",
+             shard_kv: bool = False,
+             mesh_shape: Optional[str] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh_label = ("2x16x16" if multi_pod else (mesh_shape or "16x16"))
+    result: Dict[str, Any] = {"arch": arch, "shape": shape,
+                              "variant": variant + ("+shard_kv" if shard_kv else ""),
+                              "mesh": mesh_label}
+    reason = skip_reason(arch, shape)
+    if reason:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        if verbose:
+            print(f"[{arch} x {shape} @ {result['mesh']}] SKIPPED: {reason}")
+        return result
+    if mesh_shape and not multi_pod:
+        d, mdl = (int(v) for v in mesh_shape.split("x"))
+        assert d * mdl == 256, "single-pod layout must use 256 chips"
+        mesh = jax.make_mesh((d, mdl), ("data", "model"))
+        dp_groups = d
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dp_groups = 32 if multi_pod else 16
+    n_chips = 512 if multi_pod else 256
+    try:
+        # ---- 1. the compile gate: full-depth scanned module ----
+        fn, args, donate = build_cell(
+            arch, shape, mesh, dp_groups,
+            cfg=apply_variant(get_config(arch), variant), shard_kv=shard_kv,
+            accum=variant_accum(variant))
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+        }
+        result["gate_cost_analysis"] = {
+            k: float(v) for k, v in compiled.cost_analysis().items()
+            if k in ("flops", "bytes accessed", "transcendentals")
+        }
+        result["compile_gate_seconds"] = time.time() - t0
+
+        # ---- 2. roofline terms (period measurement) ----
+        if not fast:
+            (flops, bytes_acc, coll), meta = measure_roofline(
+                arch, shape, mesh, dp_groups, variant=variant,
+                shard_kv=shard_kv)
+            coll_total = sum(coll.values())
+            cfg = get_config(arch)
+            sc = SHAPES[shape]
+            tokens = (sc.global_batch * sc.seq_len if sc.kind != "decode"
+                      else sc.global_batch)
+            mult = 6 if sc.kind == "train" else 2
+            model_flops = mult * cfg.n_active_params() * tokens
+            t_compute = flops / PEAK_FLOPS
+            t_memory = bytes_acc / HBM_BW
+            t_coll = coll_total / ICI_BW
+            dom = max([("compute", t_compute), ("memory", t_memory),
+                       ("collective", t_coll)], key=lambda kv: kv[1])
+            result.update({
+                "roofline_method": meta,
+                "flops_per_device": flops,
+                "bytes_per_device": bytes_acc,
+                "collective_bytes_per_device": coll_total,
+                "collectives": coll,
+                "t_compute_s": t_compute,
+                "t_memory_s": t_memory,
+                "t_collective_s": t_coll,
+                "bottleneck": dom[0],
+                "step_time_bound_s": dom[1],
+                "model_flops_total": model_flops,
+                "useful_flops_ratio": (model_flops / n_chips) / max(flops, 1.0),
+                "mfu_bound": (model_flops / n_chips / max(dom[1], 1e-12)) / PEAK_FLOPS,
+                "n_params": cfg.n_params(),
+                "n_active_params": cfg.n_active_params(),
+            })
+        result["status"] = "ok"
+        result["total_seconds"] = time.time() - t0
+        if verbose:
+            print(f"[{arch} x {shape} @ {result['mesh']}] OK "
+                  f"({result['total_seconds']:.0f}s)")
+            print(f"  memory_analysis: {result['memory_analysis']}")
+            if not fast:
+                print(f"  roofline/device: flops={flops:.3e} "
+                      f"bytes={bytes_acc:.3e} coll={coll_total:.3e}")
+                print(f"  terms: compute={t_compute*1e3:.2f}ms "
+                      f"memory={t_memory*1e3:.2f}ms coll={t_coll*1e3:.2f}ms "
+                      f"-> {result['bottleneck']}-bound, "
+                      f"MFU-bound={result['mfu_bound']*100:.1f}%")
+    except Exception as e:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2500:]
+        if verbose:
+            print(f"[{arch} x {shape} @ {result['mesh']}] FAILED: "
+                  f"{result['error']}", file=sys.stderr)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="compile gate only, skip roofline measurement")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    ap.add_argument("--variant", choices=sorted(VARIANTS), default="baseline")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single-pod mesh factorization, e.g. 64x4 "
+                         "(same 256 chips, different DP/TP split)")
+    ap.add_argument("--shard-kv", action="store_true",
+                    help="sequence-shard decode KV caches over the model axis")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in sorted(SHAPES):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            r = run_cell(arch, shape, mp, fast=args.fast,
+                         variant=args.variant, shard_kv=args.shard_kv,
+                         mesh_shape=args.mesh_shape)
+            results.append(r)
+            sys.stdout.flush()
+            if args.out:  # stream results (crash-safe, monitorable)
+                with open(args.out, "a") as f:
+                    rr = dict(r)
+                    rr.pop("traceback", None)
+                    f.write(json.dumps(rr) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model substrate: shared layers + the 10 assigned architectures."""
+from .transformer import Model, stages_of  # noqa: F401

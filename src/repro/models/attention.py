@@ -1,0 +1,178 @@
+"""GQA attention: q-chunked (flash-style) training/prefill path, windowed
+local attention, and a KV-cache decode step with a two-pass softmax combine
+that supports a SEQUENCE-SHARDED cache (flash-decode; see
+distributed/flash_decode.py for the shard_map wrapper).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg) -> Dict[str, jnp.ndarray]:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "wq": dense_init(k1, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _rope(cfg, x, positions, local: bool):
+    theta = cfg.rope_theta
+    if local and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(positions, (3,) + positions.shape)
+        return apply_mrope(x, pos3, theta)
+    return apply_rope(x, positions, theta)
+
+
+def qkv(params, cfg, x, positions, local: bool):
+    """x: [B, S, D] -> q [B,S,H,hd], k/v [B,S,KV,hd] (RoPE applied)."""
+    hd = cfg.hd
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    q = _rope(cfg, q, positions, local)
+    k = _rope(cfg, k, positions, local)
+    return q, k, v
+
+
+def gqa_chunked(
+    q: jnp.ndarray,        # [B, S, H, hd]
+    k: jnp.ndarray,        # [B, S, KV, hd]
+    v: jnp.ndarray,        # [B, S, KV, hd]
+    window: Optional[int] = None,   # None => causal global
+    q_chunk: int = 512,
+    probs_bf16: bool = False,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) GQA with q-chunking: peak score
+    memory is [B, H, q_chunk, S] instead of [B, H, S, S].  fp32 softmax.
+
+    ``probs_bf16`` (§Perf hillclimb): QK^T accumulates in fp32 via
+    preferred_element_type (MXU-exact) but the score/probability buffers are
+    stored bf16 -- halves the dominant HBM traffic of the training step."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    n_chunks = (S + q_chunk - 1) // q_chunk
+    pad = n_chunks * q_chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, q_chunk, H, hd)
+    kpos = jnp.arange(S)
+
+    banded = window is not None and window + q_chunk < S
+    band = window + q_chunk if banded else S
+
+    def chunk_fn(carry, inputs):
+        ci, qi = inputs  # chunk idx, [B, q_chunk, H, hd]
+        qpos = ci * q_chunk + jnp.arange(q_chunk)
+        qg = qi.reshape(B, q_chunk, KV, G, hd)
+        if banded:
+            # exact banded local attention: only the [band] key columns a
+            # sliding-window chunk can see are gathered -- score traffic is
+            # O(q_chunk * (window + q_chunk)) instead of O(q_chunk * S)
+            start = jnp.clip(ci * q_chunk + q_chunk - band, 0, S - band)
+            kk = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kcols = start + jnp.arange(band)
+        else:
+            kk, vv, kcols = k, v, kpos
+        # scores: [B, KV, G, q_chunk, band]
+        if probs_bf16:
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kk,
+                           preferred_element_type=jnp.float32) * scale
+        else:
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                           kk.astype(jnp.float32)) * scale
+        mask = kcols[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kcols[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if probs_bf16:
+            o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(jnp.bfloat16), vv,
+                           preferred_element_type=jnp.float32)
+        else:
+            o = jnp.einsum("bkgqs,bskh->bqkgh", p, vv.astype(jnp.float32))
+        return carry, o.reshape(B, q_chunk, H, hd)
+
+    _, out = jax.lax.scan(chunk_fn, None,
+                          (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * q_chunk, H, hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def decode_step_attention(
+    q: jnp.ndarray,          # [B, 1, H, hd] (new token)
+    k_cache: jnp.ndarray,    # [B, T, KV, hd]
+    v_cache: jnp.ndarray,    # [B, T, KV, hd]
+    lengths: jnp.ndarray,    # [B] valid cache lengths
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a cache.  Linear in T (memory-bound)."""
+    B, T, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(T)[None, :]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_step_attention_partial(
+    q: jnp.ndarray,          # [B, 1, H, hd]
+    k_shard: jnp.ndarray,    # [B, Ts, KV, hd]  (a SHARD of the cache)
+    v_shard: jnp.ndarray,
+    valid: jnp.ndarray,      # [B, Ts] bool validity of this shard's slots
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Flash-decode pass 1: per-shard partial attention.  Returns
+    (o_partial [B,H,hd] fp32 UNNORMALIZED, m [B,H] max, l [B,H] sumexp).
+    Combine across shards with ``flash_combine`` (psum-able)."""
+    B, Ts, KV, hd = k_shard.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k_shard.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # [B,KV,G]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_shard.astype(jnp.float32))
+    return (o.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+
+
+def flash_combine(o_parts, m_parts, l_parts):
+    """Combine flash-decode partials across shards (axis 0 = shard axis)."""
+    m_glob = jnp.max(m_parts, axis=0)                    # [B,H]
+    corr = jnp.exp(m_parts - m_glob[None])               # [P,B,H]
+    l_glob = jnp.sum(l_parts * corr, axis=0)
+    o_glob = jnp.sum(o_parts * corr[..., None], axis=0)
+    return o_glob / jnp.maximum(l_glob, 1e-30)[..., None]

@@ -1,0 +1,108 @@
+"""Shared model layers: norms, RoPE variants, MLPs, embeddings.
+
+Everything is functional: ``init_*`` returns a param pytree, ``apply``-style
+functions are pure.  Params are stored in the config dtype (bf16); norms and
+softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dt(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard, dual-theta local/global, M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the head dim is split into (temporal, height, width)
+    sections, each rotated by its own position stream.
+    x: [..., S, H, hd]; positions3: [3, ..., S] (t/h/w positions; for pure
+    text all three are the text position)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    # section s of the (hd/2) frequency slots uses positions3[s]
+    sec = jnp.concatenate([
+        jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)
+    ])[: hd // 2]
+    pos = positions3[sec]                      # [hd/2, ..., S] via fancy index
+    pos = jnp.moveaxis(pos, 0, -1)             # [..., S, hd/2]
+    angles = pos[..., None, :].astype(jnp.float32) * freqs  # [..., S, 1, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, dtype) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d, f, dtype),
+        "wi_up": dense_init(k2, d, f, dtype),
+        "wo": dense_init(k3, f, d, dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = x @ params["wi_gate"]
+    u = x @ params["wi_up"]
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (a * u) @ params["wo"]

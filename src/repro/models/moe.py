@@ -1,0 +1,212 @@
+"""Mixture-of-Experts layer: grouped, sort-based, capacity-bounded dispatch.
+
+Design constraints (kimi-k2 scale: 384 experts, top-8, 61 layers):
+
+  * NO [T, E, C] dispatch one-hot (Switch-style einsum) -- at 384 experts it
+    would materialize terabytes.  Instead: per-group argsort of the (T_g * k)
+    assignments, conflict-free scatter into an [E, C_g, d] buffer (the slot
+    uniqueness comes from position-in-expert prefix sums -- the same
+    fai_ticket idea the queue uses, applied to routing).
+  * Token groups (G) align with the data-parallel shards so the sort is LOCAL
+    to a shard under pjit (no global sort collectives); the dispatch buffer
+    is sharded over experts (model axis), so the scatter lowers to the MoE
+    all-to-all.
+  * Static capacity C_g = ceil(T_g * k / E * capacity_factor): dropped tokens
+    pass through the residual (standard dropping MoE semantics).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def moe_init(key, cfg) -> Dict[str, jnp.ndarray]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    keys = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "router": dense_init(keys[0], d, E, jnp.float32),
+        "wi_gate": (jax.random.normal(keys[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wi_up": (jax.random.normal(keys[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(keys[3], (E, f, d), jnp.float32) / math.sqrt(f)).astype(dtype),
+    }
+    if m.shared_expert:
+        fs = m.d_ff_shared or f
+        from .layers import mlp_init
+        params["shared"] = mlp_init(keys[4], d, fs, dtype)
+    return params
+
+
+def capacity(T_g: int, k: int, E: int, cf: float) -> int:
+    return max(4, int(math.ceil(T_g * k / E * cf)))
+
+
+def moe_apply_shard_map(params, cfg, x: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """Expert-local MoE (§Perf round 3, the shard_map formulation).
+
+    Key observation: under the baseline layout the token activations are
+    already REPLICATED across the model axis (they are sharded over data
+    only), so no dispatch communication is needed at all -- each model shard
+    routes the (replicated) tokens, keeps only ITS experts' assignments,
+    runs its local experts, and scatter-adds its partial outputs; ONE psum
+    over the model axis reassembles the token outputs.  Per-layer collective
+    traffic: 2 x T_local x d bytes (the psum) instead of all-gathered
+    dispatch buffers.  The prefix-sum position-in-expert ticketing is the
+    same fai_ticket idea as everywhere else in this framework."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import context as dctx
+
+    mesh = dctx.get_mesh()
+    assert mesh is not None, "set repro.distributed.context.set_mesh(mesh)"
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    G = n_groups
+    while T % G != 0:
+        G //= 2
+    T_g = T // G
+    C = capacity(T_g, k, E, m.capacity_factor)
+    dp = dctx.dp_axis_names(mesh)
+    n_mp = mesh.shape["model"]
+    E_loc = E // n_mp
+    xg = x.reshape(G, T_g, D)
+
+    def worker(xg_, router, wg, wu, wo):
+        mp = jax.lax.axis_index("model")
+
+        def group_fn(xt):
+            logits = xt.astype(jnp.float32) @ router
+            probs = jax.nn.softmax(logits, axis=-1)
+            gv, gi = jax.lax.top_k(probs, k)
+            gv = gv / jnp.maximum(jnp.sum(gv, axis=-1, keepdims=True), 1e-9)
+            flat_e = gi.reshape(-1)
+            flat_w = gv.reshape(-1)
+            flat_tok = jnp.repeat(jnp.arange(T_g), k)
+            order = jnp.argsort(flat_e, stable=True)
+            e_sorted = flat_e[order]
+            tok_sorted = flat_tok[order]
+            w_sorted = flat_w[order]
+            counts = jnp.bincount(e_sorted, length=E)
+            starts = jnp.cumsum(counts) - counts
+            pos = jnp.arange(T_g * k) - starts[e_sorted]
+            keep = pos < C
+            mine = (e_sorted >= mp * E_loc) & (e_sorted < (mp + 1) * E_loc)
+            slot = jnp.where(keep & mine,
+                             (e_sorted - mp * E_loc) * C + pos, E_loc * C)
+            buf = jnp.zeros((E_loc * C, D), xt.dtype)
+            buf = buf.at[slot].set(xt[tok_sorted], mode="drop",
+                                   unique_indices=True)
+            buf = buf.reshape(E_loc, C, D)
+            g = jnp.einsum("ecd,edf->ecf", buf, wg)
+            u = jnp.einsum("ecd,edf->ecf", buf, wu)
+            a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+            y = jnp.einsum("ecf,efd->ecd", a * u, wo).reshape(E_loc * C, D)
+            y_tok = y.at[jnp.minimum(slot, E_loc * C - 1)].get() * (
+                (keep & mine) * w_sorted)[:, None].astype(y.dtype)
+            return jnp.zeros((T_g, D), y.dtype).at[tok_sorted].add(y_tok)
+
+        out = jax.vmap(group_fn)(xg_)
+        return jax.lax.psum(out, "model")
+
+    g_spec = P(dp if len(dp) > 1 else dp[0], None, None) if dp else P(None, None, None)
+    out = shard_map(
+        worker, mesh=mesh,
+        in_specs=(g_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=g_spec,
+    )(xg, params["router"],
+      params["wi_gate"], params["wi_up"], params["wo"])
+    out = out.reshape(B, S, D).astype(x.dtype)
+    if m.shared_expert:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x, cfg.act)
+    return out
+
+
+def moe_apply(params, cfg, x: jnp.ndarray, n_groups: int = 1) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D].  n_groups splits tokens into independent
+    routing groups (aligned with data shards by the caller)."""
+    if getattr(cfg, "moe_impl", "pjit") == "shard_map":
+        return moe_apply_shard_map(params, cfg, x, n_groups)
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    G = n_groups
+    while T % G != 0:
+        G //= 2
+    T_g = T // G
+    C = capacity(T_g, k, E, m.capacity_factor)
+    xg = x.reshape(G, T_g, D)
+
+    # --- routing (fp32) ---
+    logits = (xg.astype(jnp.float32) @ params["router"])        # [G, T_g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [G, T_g, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    def group_fn(xg_, gv, gi):
+        # flatten assignments and sort by expert (local to the group)
+        flat_e = gi.reshape(-1)                                  # [T_g*k]
+        flat_w = gv.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(T_g), k)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        tok_sorted = flat_tok[order]
+        w_sorted = flat_w[order]
+        # position-in-expert via running index minus segment start
+        # (prefix-sum ticketing, cf. fai_ticket)
+        counts = jnp.bincount(e_sorted, length=E)                # [E]
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(T_g * k) - starts[e_sorted]
+        keep = pos < C
+        slot = jnp.where(keep, e_sorted * C + pos, E * C)        # drop slot
+        # conflict-free scatter into the dispatch buffer
+        buf = jnp.zeros((E * C, D), xg_.dtype)
+        buf = buf.at[slot].set(xg_[tok_sorted], mode="drop",
+                               unique_indices=True)
+        buf = buf.reshape(E, C, D)
+        return buf, (slot, keep, w_sorted, tok_sorted)
+
+    def expert_ffn(buf):
+        g = jnp.einsum("gecd,edf->gecf", buf, params["wi_gate"])
+        u = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"])
+        a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+        return jnp.einsum("gecf,efd->gecd", a * u, params["wo"])
+
+    def combine_fn(y, aux):
+        slot, keep, w_sorted, tok_sorted = aux
+        y = y.reshape(E * C, D)
+        y_tok = y.at[jnp.minimum(slot, E * C - 1)].get() * (
+            keep * w_sorted)[:, None].astype(y.dtype)
+        return jnp.zeros((T_g, D), y.dtype).at[tok_sorted].add(y_tok)
+
+    buf, aux = jax.vmap(group_fn)(xg, gate_vals, gate_idx)   # [G, E, C, D]
+    if cfg.moe_shard_dispatch:
+        # §Perf hillclimb: pin the dispatch buffer to expert-parallel layout
+        # (groups over DP, experts over the model axis).  Without this the
+        # SPMD partitioner replicates the buffer through all-gathers; with it
+        # the scatter/gather lower to the MoE all-to-all.
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(buf, P("data", "model", None, None))
+    y = expert_ffn(buf)                                       # [G, E, C, D]
+    if cfg.moe_shard_dispatch:
+        from jax.sharding import PartitionSpec as P
+        y = jax.lax.with_sharding_constraint(y, P("data", "model", None, None))
+    out = jax.vmap(combine_fn)(y, aux)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    if m.shared_expert:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x, cfg.act)
+    return out

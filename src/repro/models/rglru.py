@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: RMSNorm'd input -> two branches:
+  branch A: linear -> GeLU  (gate)
+  branch B: linear -> causal conv1d(4) -> RG-LRU
+merged by elementwise product -> output linear.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+  r_t = sigmoid(W_a x_t)                    (recurrence gate)
+  i_t = sigmoid(W_x x_t)                    (input gate)
+  a_t = exp(-c * softplus(Lambda) * r_t)    (per-channel decay, c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the linear recurrence (log-time on
+TPU); decode is an O(1) state update -- which is why recurrentgemma runs the
+long_500k cell."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+
+
+def rglru_init(key, cfg) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    w = (cfg.rglru.lru_width or d) if cfg.rglru else d
+    keys = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "gate_proj": dense_init(keys[0], d, w, dtype),     # branch A
+        "x_proj": dense_init(keys[1], d, w, dtype),        # branch B
+        "conv_w": (jax.random.normal(keys[2], (cfg.rglru.d_conv, w), jnp.float32)
+                   / math.sqrt(cfg.rglru.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(keys[3], w, w, dtype),
+        "wx": dense_init(keys[4], w, w, dtype),
+        "lam": jnp.full((w,), 0.65, jnp.float32),           # Lambda param
+        "out_proj": dense_init(keys[5], w, d, dtype),
+    }
+
+
+def _conv(x, w, b, state=None):
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(K)[None, :]
+    y = jnp.einsum("bskc,kc->bsc", xp[:, idx], w) + b
+    return y, (xp[:, -(K - 1):] if K > 1 else state)
+
+
+def rglru_scan(a, bx, h0):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan.  a, bx: [B, S, W]."""
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, b1 * a2 + b2
+
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(bx, 1, 0)
+    # fold h0 into the first element
+    bT = bT.at[0].add(aT[0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (aT, bT), axis=0)
+    return jnp.moveaxis(hh, 0, 1)
+
+
+def rglru_apply(params, cfg, x, conv_state=None, lru_state=None,
+                decode: bool = False):
+    """x: [B, S, D] -> (y [B, S, D], conv_state', lru_state')."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ params["gate_proj"])
+    xb = x @ params["x_proj"]
+    xb, new_conv = _conv(xb, params["conv_w"], params["conv_b"], conv_state)
+    r = jax.nn.sigmoid((xb @ params["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ params["wx"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # [B,S,W] fp32
+    a = jnp.exp(log_a)
+    gated_x = i * xb.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    if lru_state is None:
+        lru_state = jnp.zeros((B, xb.shape[-1]), jnp.float32)
+    if decode:
+        h = a[:, 0] * lru_state + bx[:, 0]
+        hs = h[:, None]
+        new_state = h
+    else:
+        hs = rglru_scan(a, bx, lru_state)
+        new_state = hs[:, -1]
+    y = (hs.astype(x.dtype) * gate) @ params["out_proj"]
+    return y, new_conv, new_state

@@ -1,0 +1,171 @@
+"""Mamba2 (SSD -- state-space duality) block.
+
+Structurally complete Mamba2: fused in_proj -> (z, x, B, C, dt), causal
+conv1d over (x, B, C), chunked SSD with inter-chunk state recurrence, gated
+RMSNorm, out_proj.  Training uses the chunk-parallel SSD form (quadratic
+within a chunk, linear across chunks); decode carries the [H, P, N]
+recurrent state -- O(1) per token, which is why mamba2 runs the long_500k
+cell."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba_init(key, cfg) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = di // s.head_dim
+    N = s.d_state
+    G = s.n_groups
+    conv_dim = di + 2 * G * N
+    keys = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        # fused input projection: z, x, B, C, dt
+        "in_proj": dense_init(keys[0], d, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(keys[1], (s.d_conv, conv_dim), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(keys[2], di, d, dtype),
+    }
+
+
+def _segsum(a):
+    """a: [..., L] -> [..., L, L] lower-tri cumulative sums
+    (segsum[i,j] = sum a[j+1..i], -inf above diagonal)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B, C, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD core (mamba2 'minimal' algorithm).
+
+    x:   [b, s, h, p]  (already multiplied by dt)
+    dtA: [b, s, h]     (dt * A, negative decay logs)
+    B,C: [b, s, g, n]  (g broadcast over heads)
+    Returns y [b, s, h, p], final_state [b, h, p, n]."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = s // chunk
+    assert s % chunk == 0
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # [b,s,h,n]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    Ac = dtA.reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+
+    # 1. intra-chunk (quadratic, "attention-like")
+    L = jnp.exp(_segsum(jnp.moveaxis(Ac, -1, -2)))          # [b,nc,h,cl,cl]
+    Y_diag = jnp.einsum("bzlhn,bzshn,bzhls,bzshp->bzlhp",
+                        Cc.astype(jnp.float32), Bc.astype(jnp.float32),
+                        L, xc.astype(jnp.float32))
+    # 2. per-chunk final states
+    A_cum = jnp.cumsum(Ac, axis=2)                           # [b,nc,cl,h]
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)      # [b,nc,cl,h]
+    states = jnp.einsum("bzshn,bzsh,bzshp->bzhpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))              # [b,nc,h,p,n]
+    # 3. inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])                # [b,nc,h]
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                        # [b,h,p,n], [b,h]
+        new = st + prev * dec[..., None, None]
+        return new, prev                                     # emit PREVIOUS
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,h,p,n]
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(A_cum)                             # [b,nc,cl,h]
+    Y_off = jnp.einsum("bzlhn,bzhpn,bzlh->bzlhp",
+                       Cc.astype(jnp.float32), prev_states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B, S, C]; w: [K, C] depthwise.  Returns (y, new_state[K-1])."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(K)[None, :]
+    patches = xp[:, idx]                                     # [B, S, K, C]
+    y = jnp.einsum("bskc,kc->bsc", patches, w) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def mamba_apply(params, cfg, x, conv_state=None, ssd_state=None,
+                decode: bool = False):
+    """x: [B, S, D].  Training/prefill: decode=False (returns states for
+    cache priming).  Decode: S == 1, states required."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.expand * d
+    H = di // s_cfg.head_dim
+    P = s_cfg.head_dim
+    N, G = s_cfg.d_state, s_cfg.n_groups
+    B_, S_, _ = x.shape
+
+    proj = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B_, S_, H, P)
+    Bc = Bc.reshape(B_, S_, G, N)
+    Cc = Cc.reshape(B_, S_, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                     # [H]
+
+    if decode:
+        # recurrent step: state [B, H, P, N]
+        dtA = jnp.exp(dt[:, 0] * A)                                   # [B,H]
+        Bx = jnp.einsum("bgn,bhp,bh->bhpn",
+                        Bc[:, 0].astype(jnp.float32),
+                        xs[:, 0].astype(jnp.float32), dt[:, 0])
+        state = ssd_state * dtA[..., None, None] + Bx
+        y = jnp.einsum("bgn,bhpn->bhp",
+                       Cc[:, 0].astype(jnp.float32), state)
+        y = y + params["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B_, 1, di)
+        new_state = state
+    else:
+        chunk = min(s_cfg.chunk, S_)
+        while S_ % chunk != 0:
+            chunk //= 2
+        xdt = xs.astype(jnp.float32) * dt[..., None]
+        y, new_state = ssd_chunked(xdt, dt * A, Bc, Cc, chunk,
+                                   init_state=ssd_state)
+        y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B_, S_, di)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"], new_conv_state, new_state

@@ -1,0 +1,510 @@
+"""Model composition: decoder-only LMs (dense / MoE / hybrid / SSM) and the
+whisper-style encoder-decoder, built from the shared substrate.
+
+Layer heterogeneity (gemma3's 5 local : 1 global, recurrentgemma's
+rglru-rglru-attn, MoE-every-k) is handled by grouping layers into *stages*:
+a stage is a block of layers matching the config's pattern period, scanned
+over its repeat count (scan-over-layers keeps the lowered HLO O(1) in depth
+-- essential for compiling 62-layer models on the dry-run host), with any
+remainder layers unrolled.
+
+Entry points:
+  init(key)                          -> params
+  forward(params, batch)             -> logits            (training path)
+  loss(params, batch)                -> scalar
+  prefill(params, tokens, max_len)   -> (logits, cache)   (inference)
+  decode_step(params, cache, token, lengths) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_init, decode_step_attention, gqa_chunked, qkv)
+from .layers import dense_init, embed_init, mlp, mlp_init, rmsnorm, rmsnorm_init
+from .moe import moe_apply, moe_init
+from .rglru import rglru_apply, rglru_init
+from .ssm import mamba_apply, mamba_init
+
+
+# ---------------------------------------------------------------------------
+# stage structure
+# ---------------------------------------------------------------------------
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def stages_of(cfg) -> List[Tuple[Tuple[str, ...], Tuple[bool, ...], int]]:
+    kinds = [cfg.kind_of_layer(i) for i in range(cfg.n_layers)]
+    moes = [cfg.layer_is_moe(i) for i in range(cfg.n_layers)]
+    period = _lcm(len(cfg.pattern), cfg.moe_every if cfg.moe else 1)
+    stages = []
+    if cfg.scan_layers and cfg.n_layers >= period:
+        n_full = cfg.n_layers // period
+        stages.append((tuple(kinds[:period]), tuple(moes[:period]), n_full))
+        rem = n_full * period
+    else:
+        rem = 0
+    for i in range(rem, cfg.n_layers):
+        stages.append(((kinds[i],), (moes[i],), 1))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# one layer (sub-block)
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg, kind: str, is_moe: bool) -> Dict[str, Any]:
+    keys = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind in ("global", "local"):
+        p["attn"] = attn_init(keys[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru_init(keys[0], cfg)
+    elif kind == "ssm":
+        p["mamba"] = mamba_init(keys[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm" and cfg.d_ff:
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if is_moe:
+            p["moe"] = moe_init(keys[1], cfg)
+        else:
+            p["mlp"] = mlp_init(keys[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _layer_cache_init(cfg, kind: str, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    if kind == "global":
+        T = max_len
+        return {"k": jnp.zeros((batch, T, kv, hd), dtype),
+                "v": jnp.zeros((batch, T, kv, hd), dtype)}
+    if kind == "local":
+        T = min(cfg.window, max_len)
+        return {"k": jnp.zeros((batch, T, kv, hd), dtype),
+                "v": jnp.zeros((batch, T, kv, hd), dtype)}
+    if kind == "rglru":
+        w = (cfg.rglru.lru_width or cfg.d_model)
+        return {"conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype),
+                "h": jnp.zeros((batch, w), jnp.float32)}
+    if kind == "ssm":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        H = di // s.head_dim
+        conv_dim = di + 2 * s.n_groups * s.d_state
+        return {"conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+                "state": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32)}
+    raise ValueError(kind)
+
+
+def _apply_layer_train(p, cfg, kind, is_moe, x, positions, n_moe_groups):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("global", "local"):
+        q, k, v = qkv(p["attn"], cfg, h, positions, local=(kind == "local"))
+        o = gqa_chunked(q, k, v, window=cfg.window if kind == "local" else None,
+                        probs_bf16=cfg.attn_probs_bf16)
+        x = x + o.reshape(*o.shape[:2], -1) @ p["attn"]["wo"]
+    elif kind == "rglru":
+        y, _, _ = rglru_apply(p["rec"], cfg, h)
+        x = x + y
+    elif kind == "ssm":
+        y, _, _ = mamba_apply(p["mamba"], cfg, h)
+        x = x + y
+    if kind != "ssm" and cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            x = x + moe_apply(p["moe"], cfg, h2, n_groups=n_moe_groups)
+        else:
+            x = x + mlp(p["mlp"], h2, cfg.act)
+    return x
+
+
+def _apply_layer_prefill(p, cfg, kind, is_moe, x, positions, cache,
+                         n_moe_groups):
+    """Training-shaped forward that ALSO fills the decode cache."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("global", "local"):
+        q, k, v = qkv(p["attn"], cfg, h, positions, local=(kind == "local"))
+        o = gqa_chunked(q, k, v, window=cfg.window if kind == "local" else None,
+                        probs_bf16=cfg.attn_probs_bf16)
+        x = x + o.reshape(*o.shape[:2], -1) @ p["attn"]["wo"]
+        T = cache["k"].shape[1]
+        S = k.shape[1]
+        if S >= T:
+            # keep the last T keys, placed at their pos%T slots so the
+            # rolling decode eviction (slot = length % T) evicts the OLDEST
+            cache = {"k": jnp.roll(k[:, S - T:], (S - T) % T, axis=1),
+                     "v": jnp.roll(v[:, S - T:], (S - T) % T, axis=1)}
+        else:
+            cache = {"k": cache["k"].at[:, :S].set(k),
+                     "v": cache["v"].at[:, :S].set(v)}
+    elif kind == "rglru":
+        y, conv, hstate = rglru_apply(p["rec"], cfg, h,
+                                      cache["conv"], cache["h"])
+        x = x + y
+        cache = {"conv": conv, "h": hstate}
+    elif kind == "ssm":
+        y, conv, state = mamba_apply(p["mamba"], cfg, h,
+                                     cache["conv"], cache["state"])
+        x = x + y
+        cache = {"conv": conv, "state": state}
+    if kind != "ssm" and cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            x = x + moe_apply(p["moe"], cfg, h2, n_groups=n_moe_groups)
+        else:
+            x = x + mlp(p["mlp"], h2, cfg.act)
+    return x, cache
+
+
+def _apply_layer_decode(p, cfg, kind, is_moe, x, lengths, cache):
+    """x: [B, 1, D]; advances the cache by one token."""
+    B = x.shape[0]
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("global", "local"):
+        positions = lengths[:, None]  # [B, 1]
+        q, k, v = qkv(p["attn"], cfg, h, positions, local=(kind == "local"))
+        T = cache["k"].shape[1]
+        slot = (lengths % T)  # rolling for local; exact for global (T=max)
+        kc = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(
+            c, kk, s, axis=0))(cache["k"], k, slot)
+        vc = jax.vmap(lambda c, vv, s: jax.lax.dynamic_update_slice_in_dim(
+            c, vv, s, axis=0))(cache["v"], v, slot)
+        valid_len = jnp.minimum(lengths + 1, T)
+        o = decode_step_attention(q, kc, vc, valid_len, window=None)
+        x = x + o.reshape(B, 1, -1) @ p["attn"]["wo"]
+        cache = {"k": kc, "v": vc}
+    elif kind == "rglru":
+        y, conv, hstate = rglru_apply(p["rec"], cfg, h, cache["conv"],
+                                      cache["h"], decode=True)
+        x = x + y
+        cache = {"conv": conv, "h": hstate}
+    elif kind == "ssm":
+        y, conv, state = mamba_apply(p["mamba"], cfg, h, cache["conv"],
+                                     cache["state"], decode=True)
+        x = x + y
+        cache = {"conv": conv, "state": state}
+    if kind != "ssm" and cfg.d_ff:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            x = x + moe_apply(p["moe"], cfg, h2, n_groups=1)
+        else:
+            x = x + mlp(p["mlp"], h2, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_init(key, cfg):
+    keys = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(keys[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(keys[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _enc_layer_apply(p, cfg, x):
+    """Bidirectional self-attention encoder layer."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    hd = cfg.hd
+    q = (h @ p["attn"]["wq"]).reshape(*h.shape[:2], cfg.n_heads, hd)
+    k = (h @ p["attn"]["wk"]).reshape(*h.shape[:2], cfg.n_kv_heads, hd)
+    v = (h @ p["attn"]["wv"]).reshape(*h.shape[:2], cfg.n_kv_heads, hd)
+    B, S, H, _ = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pz = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pz, v.astype(jnp.float32))
+    o = o.reshape(B, S, H * hd).astype(x.dtype)
+    x = x + o @ p["attn"]["wo"]
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h2, cfg.act)
+
+
+def _xattn_init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(key, cfg)}
+
+
+def _xattn_apply(p, cfg, x, enc_k, enc_v):
+    """Cross-attention: queries from decoder x, K/V precomputed from enc."""
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    hd = cfg.hd
+    q = (h @ p["attn"]["wq"]).reshape(*h.shape[:2], cfg.n_heads, hd)
+    B, S, H, _ = q.shape
+    KV = enc_k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   enc_k.astype(jnp.float32)) / math.sqrt(hd)
+    pz = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pz, enc_v.astype(jnp.float32))
+    o = o.reshape(B, S, H * hd).astype(x.dtype)
+    return x + o @ p["attn"]["wo"]
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, cfg, n_moe_groups: int = 1):
+        self.cfg = cfg
+        self.stages = stages_of(cfg)
+        self.n_moe_groups = n_moe_groups
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        dtype = jnp.dtype(cfg.dtype)
+        params: Dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+        stage_params = []
+        for si, (kinds, moes, n_rep) in enumerate(self.stages):
+            def block_init(k):
+                ks = jax.random.split(k, len(kinds))
+                return {f"sub{j}": _layer_init(ks[j], cfg, kinds[j], moes[j])
+                        for j in range(len(kinds))}
+            if n_rep == 1:
+                stage_params.append(block_init(jax.random.fold_in(keys[2], si)))
+            else:
+                rep_keys = jax.random.split(jax.random.fold_in(keys[2], si), n_rep)
+                stage_params.append(jax.vmap(block_init)(rep_keys))
+        params["stages"] = stage_params
+        if cfg.enc_layers:
+            enc_keys = jax.random.split(keys[3], cfg.enc_layers)
+            params["enc"] = {
+                "pos": (jax.random.normal(keys[4], (cfg.enc_ctx, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dtype),
+                "layers": [_enc_layer_init(k, cfg) for k in enc_keys],
+                "norm": rmsnorm_init(cfg.d_model, dtype),
+            }
+            xa_keys = jax.random.split(keys[5], cfg.n_layers)
+            params["xattn"] = [_xattn_init(k, cfg) for k in xa_keys]
+        return params
+
+    # -- shared stage runner ---------------------------------------------------
+
+    def _run_stages(self, params, x, positions, mode: str,
+                    caches=None, lengths=None):
+        """mode: train | prefill | decode.  Returns (x, caches')."""
+        cfg = self.cfg
+        new_caches = [] if caches is not None else None
+        for si, (kinds, moes, n_rep) in enumerate(self.stages):
+            sp = params["stages"][si]
+
+            def block(x_, p_, cache_):
+                outc = {} if cache_ is not None else None
+                for j, kind in enumerate(kinds):
+                    pj = p_[f"sub{j}"]
+                    if mode == "train":
+                        x_ = _apply_layer_train(pj, cfg, kind, moes[j], x_,
+                                                positions, self.n_moe_groups)
+                    elif mode == "prefill":
+                        x_, cj = _apply_layer_prefill(
+                            pj, cfg, kind, moes[j], x_, positions,
+                            cache_[f"sub{j}"], self.n_moe_groups)
+                        outc[f"sub{j}"] = cj
+                    else:
+                        x_, cj = _apply_layer_decode(
+                            pj, cfg, kind, moes[j], x_, lengths,
+                            cache_[f"sub{j}"])
+                        outc[f"sub{j}"] = cj
+                return x_, outc
+
+            if cfg.remat:
+                if cfg.remat_policy == "dots":
+                    block = jax.checkpoint(
+                        block,
+                        policy=jax.checkpoint_policies
+                        .dots_with_no_batch_dims_saveable)
+                else:
+                    block = jax.checkpoint(block)
+
+            if n_rep == 1:
+                cache_i = caches[si] if caches is not None else None
+                x, outc = block(x, sp, cache_i)
+                if new_caches is not None:
+                    new_caches.append(outc)
+            else:
+                cache_i = caches[si] if caches is not None else None
+
+                def scan_fn(x_, inp):
+                    p_, c_ = inp
+                    x_, outc = block(x_, p_, c_)
+                    return x_, outc
+
+                x, outcs = jax.lax.scan(scan_fn, x, (sp, cache_i))
+                if new_caches is not None:
+                    new_caches.append(outcs)
+        return x, new_caches
+
+    # -- embeddings / head -------------------------------------------------------
+
+    def _embed(self, params, tokens, patch_embeds=None):
+        x = params["embed"][tokens]
+        x = x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+        if patch_embeds is not None:
+            P = patch_embeds.shape[1]
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:]], axis=1)
+        return x
+
+    def _head(self, params, x):
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"].T
+        return x @ params["lm_head"]
+
+    def _encode(self, params, frames):
+        x = frames.astype(jnp.dtype(self.cfg.dtype)) + params["enc"]["pos"][None]
+        for lp in params["enc"]["layers"]:
+            x = _enc_layer_apply(lp, self.cfg, x)
+        return rmsnorm(params["enc"]["norm"], x, self.cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        cfg = self.cfg
+        hd = cfg.hd
+        ks, vs = [], []
+        for xp in params["xattn"]:
+            k = (enc_out @ xp["attn"]["wk"]).reshape(
+                *enc_out.shape[:2], cfg.n_kv_heads, hd)
+            v = (enc_out @ xp["attn"]["wv"]).reshape(
+                *enc_out.shape[:2], cfg.n_kv_heads, hd)
+            ks.append(k)
+            vs.append(v)
+        return ks, vs
+
+    # -- public entry points ------------------------------------------------------
+
+    def forward(self, params, tokens, frames=None, patch_embeds=None):
+        """Training forward: [B, S] -> logits [B, S, V]."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self._embed(params, tokens, patch_embeds)
+        if cfg.enc_layers:
+            enc_out = self._encode(params, frames)
+            ks, vs = self._cross_kv(params, enc_out)
+            # interleave: self-attn layer then cross-attn (whisper structure);
+            # with scan stages we apply cross-attn after each stage layer --
+            # enc-dec configs use scan_layers=False so layers are unrolled.
+            li = 0
+            for si, (kinds, moes, n_rep) in enumerate(self.stages):
+                assert n_rep == 1, "enc-dec requires scan_layers=False"
+                sp = params["stages"][si]
+                for j, kind in enumerate(kinds):
+                    x = _apply_layer_train(sp[f"sub{j}"], cfg, kind, moes[j],
+                                           x, positions, self.n_moe_groups)
+                    x = _xattn_apply(params["xattn"][li], cfg, x, ks[li], vs[li])
+                    li += 1
+            return self._head(params, x)
+        x, _ = self._run_stages(params, x, positions, "train")
+        return self._head(params, x)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits = self.forward(
+            params, batch["tokens"],
+            frames=batch.get("frames"), patch_embeds=batch.get("patch_embeds"))
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = (lse - ll) * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def init_cache(self, batch: int, max_len: int):
+        caches = []
+        for kinds, moes, n_rep in self.stages:
+            c = {f"sub{j}": _layer_cache_init(self.cfg, kinds[j], batch, max_len)
+                 for j in range(len(kinds))}
+            if n_rep > 1:
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), c)
+            caches.append(c)
+        return caches
+
+    def prefill(self, params, tokens, max_len: int,
+                frames=None, patch_embeds=None):
+        """Process the prompt, build the decode cache.  Returns
+        (last-position logits [B, V], caches, enc_kv or None)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :]
+        x = self._embed(params, tokens, patch_embeds)
+        caches = self.init_cache(B, max_len)
+        enc_kv = None
+        if cfg.enc_layers:
+            enc_out = self._encode(params, frames)
+            ks, vs = self._cross_kv(params, enc_out)
+            enc_kv = (ks, vs)
+            li = 0
+            new_caches = []
+            for si, (kinds, moes, n_rep) in enumerate(self.stages):
+                sp = params["stages"][si]
+                outc = {}
+                for j, kind in enumerate(kinds):
+                    x, cj = _apply_layer_prefill(
+                        sp[f"sub{j}"], cfg, kind, moes[j], x, positions,
+                        caches[si][f"sub{j}"], self.n_moe_groups)
+                    x = _xattn_apply(params["xattn"][li], cfg, x, ks[li], vs[li])
+                    outc[f"sub{j}"] = cj
+                    li += 1
+                new_caches.append(outc)
+            caches = new_caches
+        else:
+            x, caches = self._run_stages(params, x, positions, "prefill",
+                                         caches=caches)
+        logits = self._head(params, x[:, -1:])[:, 0]
+        return logits, caches, enc_kv
+
+    def decode_step(self, params, caches, token, lengths, enc_kv=None):
+        """token: [B] int32; lengths: [B] current cache fill.  Returns
+        (logits [B, V], caches')."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+        if cfg.enc_layers:
+            ks, vs = enc_kv
+            li = 0
+            new_caches = []
+            for si, (kinds, moes, n_rep) in enumerate(self.stages):
+                sp = params["stages"][si]
+                outc = {}
+                for j, kind in enumerate(kinds):
+                    x, cj = _apply_layer_decode(
+                        sp[f"sub{j}"], cfg, kind, moes[j], x, lengths,
+                        caches[si][f"sub{j}"])
+                    x = _xattn_apply(params["xattn"][li], cfg, x, ks[li], vs[li])
+                    outc[f"sub{j}"] = cj
+                    li += 1
+                new_caches.append(outc)
+            caches = new_caches
+        else:
+            x, caches = self._run_stages(params, x, None, "decode",
+                                         caches=caches, lengths=lengths)
+        return self._head(params, x)[:, 0], caches

@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update  # noqa: F401
+from .adafactor import adafactor_init, adafactor_update  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401
+from .api import make_optimizer  # noqa: F401

@@ -1,0 +1,65 @@
+"""Adafactor (factored second moments, no first moment) -- the optimizer for
+the 1T-param kimi-k2 config: Adam's fp32 m+v (8 bytes/param = 8TB) cannot fit
+a 256-chip v5e pod; Adafactor's row+col factors are ~0.03 bytes/param.
+
+State layout: a flat list aligned with jax.tree.leaves(params) (robust to
+arbitrary param-tree nesting)."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"vf": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": [init(p) for p in jax.tree.leaves(params)],
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr, *, decay=0.8, eps=1e-30,
+                     clip=1.0, weight_decay=0.0) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / (jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)[..., None]))
+            u = g / jnp.maximum(denom, eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["vf"] + (1 - beta) * g2
+            u = g / jnp.sqrt(jnp.maximum(v, eps))
+            new_s = {"vf": v}
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+    leaves_p, tree = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    outs = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, state["v"])]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in outs])
+    return new_p, {"v": [o[1] for o in outs], "step": step}

@@ -1,0 +1,37 @@
+"""AdamW with fp32 moments (params may be bf16)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    new_m = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+    new_v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    new_p = jax.tree.map(
+        lambda p, m, v: (p.astype(jnp.float32)
+                         - lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                                 + weight_decay * p.astype(jnp.float32))
+                         ).astype(p.dtype),
+        params, new_m, new_v)
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,15 @@
+"""Optimizer factory keyed by config."""
+from __future__ import annotations
+
+from .adafactor import adafactor_init, adafactor_update
+from .adamw import adamw_init, adamw_update
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn(params) -> state, update_fn(params, grads, state, lr)
+    -> (params, state))."""
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name}")

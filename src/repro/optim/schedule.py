@@ -1,0 +1,11 @@
+"""LR schedules."""
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, base_lr=3e-4, warmup=200, total=10_000,
+                  min_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)

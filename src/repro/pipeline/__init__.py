@@ -1,0 +1,2 @@
+from .queue_pipeline import PersistentDataPipeline  # noqa: F401
+from .sources import synthetic_token_source  # noqa: F401

@@ -1,0 +1,156 @@
+"""Property-based durable-linearizability tests (hypothesis).
+
+Random schedules, random crash points, random eviction adversary -- every
+execution must satisfy:
+  * PerIQ: the post-recovery drain equals the paper's Algorithm 2
+    linearization exactly,
+  * all persistent queues: the generic multi-epoch FIFO invariants
+    (no duplication / no invention / real-time FIFO / conservation).
+"""
+import random
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.harness import (drain, pairs_workload, random_schedule,
+                                random_workload, run_epoch)
+from repro.core.iq import PerIQ
+from repro.core.lcrq import LCRQ, install_line_map
+from repro.core.combining import PBQueue
+from repro.core.linearize import (check_fifo_history, check_periq_crash,
+                                  expected_periq_drain)
+from repro.core.machine import Machine
+
+FAST = dict(
+    max_examples=30,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.filter_too_much],
+)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    crash_at=st.integers(20, 3000),
+    eviction=st.sampled_from([0.0, 0.01, 0.05]),
+    n_threads=st.integers(2, 6),
+)
+@settings(**FAST)
+def test_periq_durable_linearizability(seed, crash_at, eviction, n_threads):
+    m = Machine(n_threads, eviction_rate=eviction, seed=seed)
+    q = PerIQ(m)
+    h = run_epoch(
+        m, q, pairs_workload(n_threads, 30), random_schedule(n_threads, 100_000, seed),
+        crash_at_step=crash_at,
+    )
+    m.restart()
+    q.recover()
+    expected = expected_periq_drain(m)
+    d = drain(m, q)
+    check_periq_crash(expected, d)
+    check_fifo_history([{"history": h, "crashed": True, "drained": d}])
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    crash_at=st.integers(50, 5000),
+    eviction=st.sampled_from([0.0, 0.02]),
+    ring=st.sampled_from([4, 8, 16]),
+    mode=st.sampled_from(["percrq", "phead"]),
+)
+@settings(**FAST)
+def test_perlcrq_durable_linearizability(seed, crash_at, eviction, ring, mode):
+    m = Machine(4, eviction_rate=eviction, seed=seed)
+    install_line_map(m)
+    q = LCRQ(m, R=ring, mode=mode)
+    h = run_epoch(
+        m, q, pairs_workload(4, 30), random_schedule(4, 400_000, seed),
+        crash_at_step=crash_at,
+    )
+    m.restart()
+    q.recover()
+    d = drain(m, q)
+    check_fifo_history([{"history": h, "crashed": True, "drained": d}])
+
+
+@given(seed=st.integers(0, 10_000), crash1=st.integers(50, 2500), crash2=st.integers(50, 2500))
+@settings(**FAST)
+def test_perlcrq_multi_epoch_crashes(seed, crash1, crash2):
+    """Crash, recover, keep operating, crash again, recover, drain."""
+    m = Machine(4, eviction_rate=0.01, seed=seed)
+    install_line_map(m)
+    q = LCRQ(m, R=8, mode="percrq")
+    epochs = []
+    h1 = run_epoch(m, q, pairs_workload(4, 20, "e1."),
+                   random_schedule(4, 400_000, seed), epoch=0, crash_at_step=crash1)
+    m.restart()
+    q.recover()
+    epochs.append({"history": h1, "crashed": True, "drained": None})
+    h2 = run_epoch(m, q, pairs_workload(4, 20, "e2."),
+                   random_schedule(4, 400_000, seed + 1), epoch=1, crash_at_step=crash2)
+    m.restart()
+    q.recover()
+    d = drain(m, q)
+    epochs.append({"history": h2, "crashed": True, "drained": d})
+    check_fifo_history(epochs)
+
+
+@given(seed=st.integers(0, 10_000), n_threads=st.integers(2, 6))
+@settings(**FAST)
+def test_no_crash_linearizability_random_ops(seed, n_threads):
+    """Random (not paired) op mixes without crash: plain linearizability."""
+    m = Machine(n_threads)
+    install_line_map(m)
+    q = LCRQ(m, R=8, mode="percrq")
+    h = run_epoch(
+        m, q, random_workload(n_threads, 25, seed=seed),
+        random_schedule(n_threads, 500_000, seed),
+    )
+    assert all(r.completed for r in h)
+    check_fifo_history([{"history": h, "crashed": False, "drained": drain(m, q)}])
+
+
+@given(seed=st.integers(0, 10_000), crash_at=st.integers(100, 4000))
+@settings(**FAST)
+def test_pbqueue_durable_linearizability(seed, crash_at):
+    m = Machine(4, eviction_rate=0.01, seed=seed)
+    q = PBQueue(m)
+    h = run_epoch(m, q, pairs_workload(4, 20), random_schedule(4, 400_000, seed),
+                  crash_at_step=crash_at)
+    m.restart()
+    q.recover()
+    d = drain(m, q)
+    check_fifo_history([{"history": h, "crashed": True, "drained": d}])
+
+
+def test_periq_algorithm2_bulk():
+    """Dense deterministic sweep of crash points (regression net beyond the
+    hypothesis samples)."""
+    for seed in range(25):
+        m = Machine(4, eviction_rate=0.02, seed=seed)
+        q = PerIQ(m)
+        run_epoch(m, q, pairs_workload(4, 30), random_schedule(4, 100_000, seed),
+                  crash_at_step=random.Random(seed).randrange(50, 2000))
+        m.restart()
+        q.recover()
+        expected = expected_periq_drain(m)
+        check_periq_crash(expected, drain(m, q))
+
+
+@given(seed=st.integers(0, 10_000), crash_at=st.integers(20, 3000),
+       k=st.sampled_from([2, 8, 32]))
+@settings(**FAST)
+def test_periq_algorithm6_variant_durable(seed, crash_at, k):
+    """The Algorithm 6 variant (periodic Tail/Head persists) must remain
+    durably linearizable -- extra persists may only SHRINK the recovery scan,
+    never change the linearized contents."""
+    m = Machine(4, eviction_rate=0.01, seed=seed)
+    q = PerIQ(m, persist_tail_every=k)
+    h = run_epoch(m, q, pairs_workload(4, 30),
+                  random_schedule(4, 100_000, seed), crash_at_step=crash_at)
+    m.restart()
+    q.recover()
+    expected = expected_periq_drain(m)
+    d = drain(m, q)
+    check_periq_crash(expected, d)
+    check_fifo_history([{"history": h, "crashed": True, "drained": d}])

@@ -1,0 +1,69 @@
+"""Tests for the paper's failure/recovery-cost framework (Section 5) and the
+persistence-vs-recovery tradeoff (Algorithm 6)."""
+import pytest
+
+from repro.core.failures import mean_recovery, run_cycles
+from repro.core.iq import PerIQ
+from repro.core.lcrq import LCRQ, install_line_map
+from repro.core.machine import Machine
+
+
+def test_cycles_run_and_measure():
+    res = run_cycles(lambda m: PerIQ(m), n_threads=4, recovery_steps=500,
+                     n_cycles=3, ops_per_thread=100)
+    assert len(res) == 3
+    stats = mean_recovery(res)
+    assert stats["steps"] > 0
+    assert stats["sim_time"] > 0
+
+
+def test_periq_recovery_cost_grows_without_tail_persistence():
+    """Paper Figures 4/5: without persisting Tail, the recovery scan grows
+    with the number of operations executed before the crash."""
+    small = run_cycles(lambda m: PerIQ(m), n_threads=4, recovery_steps=400,
+                       n_cycles=4, ops_per_thread=10_000, seed=1)
+    big = run_cycles(lambda m: PerIQ(m), n_threads=4, recovery_steps=6000,
+                     n_cycles=4, ops_per_thread=10_000, seed=1)
+    assert mean_recovery(big)["steps"] > 2 * mean_recovery(small)["steps"]
+
+
+def test_periq_persist_tail_bounds_recovery():
+    """Algorithm 6: periodically persisting Tail keeps the recovery scan
+    short at the price of extra persistence instructions."""
+    no_tail = run_cycles(lambda m: PerIQ(m), n_threads=4, recovery_steps=6000,
+                         n_cycles=4, ops_per_thread=10_000, seed=2)
+    with_tail = run_cycles(lambda m: PerIQ(m, persist_tail_every=8),
+                           n_threads=4, recovery_steps=6000,
+                           n_cycles=4, ops_per_thread=10_000, seed=2)
+    assert mean_recovery(with_tail)["steps"] < mean_recovery(no_tail)["steps"]
+
+
+def test_periq_persist_tail_costs_throughput():
+    """The other side of the tradeoff: Algorithm 6 executes MORE persistence
+    instructions per op."""
+    m1 = Machine(4)
+    q1 = PerIQ(m1)
+
+    def wl(q, tid):
+        def gen():
+            yield from q.enqueue(tid, object())
+            yield from q.dequeue(tid)
+        return gen
+
+    m1.run_des({t: wl(q1, t) for t in range(4)}, ops_per_thread=100)
+    m2 = Machine(4)
+    q2 = PerIQ(m2, persist_tail_every=2)
+    m2.run_des({t: wl(q2, t) for t in range(4)}, ops_per_thread=100)
+    assert m2.persist_count > m1.persist_count
+    assert max(m2.clock) > max(m1.clock)  # slower normal execution
+
+
+def test_perlcrq_cycles():
+    def factory(m):
+        install_line_map(m)
+        return LCRQ(m, R=8, mode="percrq")
+
+    res = run_cycles(factory, n_threads=4, recovery_steps=2000, n_cycles=3,
+                     ops_per_thread=1000, seed=3)
+    assert len(res) == 3
+    assert all(r.recovery_steps_scanned > 0 for r in res)

@@ -1,0 +1,218 @@
+"""Framework-layer tests: pipeline exactly-once across crashes, checkpoint
+local-persistence recovery, serving continuous batching + crash recovery,
+elastic remap, optimizers, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, CounterMirrors
+from repro.configs.registry import get_config
+from repro.distributed.elastic import (BoundedStalenessFlusher, WorkerSet,
+                                       remap_shard)
+from repro.models.transformer import Model
+from repro.optim import make_optimizer
+from repro.optim.compress import compress_grad, dequantize_int8, quantize_int8
+from repro.pipeline import PersistentDataPipeline, synthetic_token_source
+from repro.serving import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_delivers_batches():
+    src = synthetic_token_source(vocab=64, seq_len=16)
+    p = PersistentDataPipeline(src, batch_size=4, seq_len=16, R=64)
+    p.produce(16)
+    b = p.next_batch()
+    assert b["tokens"].shape == (4, 16)
+    assert b["labels"].shape == (4, 16)
+
+
+def test_pipeline_exactly_once_across_crash():
+    src = synthetic_token_source(vocab=64, seq_len=8)
+    p = PersistentDataPipeline(src, batch_size=4, seq_len=8, R=64)
+    p.produce(24)
+    b1 = p.next_batch()
+    b2 = p.next_batch()
+    delivered_before = list(p.delivered_ids)
+    p.crash_and_recover()
+    while p.next_batch() is not None:
+        pass
+    all_ids = list(p.delivered_ids)
+    assert len(all_ids) == len(set(all_ids)), "sample delivered twice"
+    assert len(all_ids) >= 20  # nothing acknowledged was lost (24 minus <1 batch)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_counter_mirrors_max_recovery(tmp_path):
+    for w, v in [(0, 10), (1, 14), (2, 12)]:
+        CounterMirrors(str(tmp_path), "step", w).persist(v)
+    assert CounterMirrors(str(tmp_path), "step", 0).recover() == 14
+
+
+def test_checkpoint_roundtrip_and_recovery(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    mgr = CheckpointManager(str(tmp_path), worker=0, n_workers=1,
+                            async_flush=False)
+    mgr.save(5, tree)
+    mgr.save(7, tree)
+    assert mgr.latest_step() == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    got = mgr.restore(7, like)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(got["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_async_overlap(tmp_path):
+    tree = {"w": jnp.ones((64, 64), jnp.float32)}
+    mgr = CheckpointManager(str(tmp_path), async_flush=True)
+    mgr.save(1, tree)   # returns immediately
+    mgr.wait()          # the psync
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_torn_write_detected(tmp_path):
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    mgr = CheckpointManager(str(tmp_path), async_flush=False)
+    mgr.save(3, tree)
+    # corrupt the shard file
+    d = mgr._shard_dir(3)
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, victim), "r+b") as f:
+        f.seek(40)
+        f.write(b"\xff\xff\xff")
+    with pytest.raises(IOError):
+        mgr.restore(3, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_checkpoint_incomplete_step_skipped(tmp_path):
+    """A crash mid-checkpoint (mirror says s but shards missing) must fall
+    back to the previous complete step -- the paper's recovery-validates-
+    the-array principle."""
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    mgr = CheckpointManager(str(tmp_path), async_flush=False, n_workers=1)
+    mgr.save(5, tree)
+    # simulate: mirror persisted for step 9 but shard dir never landed
+    mgr.mirrors.persist(9)
+    assert mgr.latest_step() == 5
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _tiny_engine(max_new=4):
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, max_batch=3, max_len=64), cfg
+
+
+def test_serving_continuous_batching():
+    eng, cfg = _tiny_engine()
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, 5), max_new=4)
+            for _ in range(7)]
+    done = eng.run_until_drained()
+    assert sorted(done) == sorted(rids)
+    assert all(len(v) == 4 for v in done.values())
+
+
+def test_serving_crash_recovery_exactly_once():
+    eng, cfg = _tiny_engine()
+    rng = np.random.default_rng(1)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, 5), max_new=3)
+            for _ in range(6)]
+    eng.step()
+    eng.step()
+    completed_before = dict(eng.completed)
+    eng.crash_and_recover()
+    done = eng.run_until_drained()
+    # every request completes exactly once; completed-before survive
+    assert sorted(done) == sorted(rids)
+    for rid, toks in completed_before.items():
+        assert done[rid] == toks  # not replayed/overwritten
+
+
+# ---------------------------------------------------------------------------
+# elastic / straggler
+# ---------------------------------------------------------------------------
+
+
+def test_worker_set_partition():
+    ws = WorkerSet(alive=[0, 1, 3], world=4)
+    part = ws.partition(32)
+    assert sum(part.values()) == 32
+    assert max(part.values()) - min(part.values()) <= 1
+
+
+def test_remap_shard():
+    g = np.arange(32).reshape(16, 2)
+    old = remap_shard(g, 4, 4, 1)
+    new = remap_shard(g, 4, 8, 3)
+    assert old.shape == (4, 2)
+    assert new.shape == (2, 2)
+    np.testing.assert_array_equal(new, g[6:8])
+
+
+def test_bounded_staleness_flusher():
+    flushed = []
+    f = BoundedStalenessFlusher(lambda s: flushed.append(s), every_k=4)
+    for s in range(10):
+        f.maybe_flush(s)
+    assert flushed == [0, 4, 8]
+    assert f.max_replay == 3
+
+
+# ---------------------------------------------------------------------------
+# optimizers + compression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_descends(name):
+    init, update = make_optimizer(name)
+    params = {"w": jnp.array([[1.0, -2.0], [3.0, 4.0]], jnp.float32),
+              "b": jnp.array([0.5, -0.5], jnp.float32)}
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.sum(jnp.square(p["b"]))
+
+    l0 = float(loss(params))
+    for _ in range(20):
+        g = jax.grad(loss)(params)
+        params, state = update(params, g, state, 0.05)
+    assert float(loss(params)) < l0 * 0.7
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale, g.shape)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.05
+    # error feedback: accumulated error stays bounded, mean error -> 0
+    err = jnp.zeros_like(g)
+    total_true = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for i in range(20):
+        gi = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+        _, deq, err = compress_grad(gi, err)
+        total_true += gi
+        total_sent += deq
+    drift = float(jnp.linalg.norm(total_sent + err - total_true))
+    assert drift < 1e-3  # sent + residual == truth (no gradient lost)

@@ -1,0 +1,161 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle (ref.py),
+swept over shapes, plus hypothesis-driven random states."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_array_equal
+
+from repro.kernels import ops, ref
+
+FAST = dict(max_examples=25, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# fai_ticket
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("W", [1, 7, 8, 64, 129, 1024, 4097])
+@pytest.mark.parametrize("block", [8, 256, 1024])
+def test_fai_ticket_shapes(W, block):
+    rng = np.random.default_rng(W * 31 + block)
+    mask = jnp.asarray(rng.random(W) < 0.6)
+    base = jnp.int32(rng.integers(0, 1000))
+    t_k, b_k = ops.fai_ticket(base, mask, block=block)
+    t_r, b_r = ref.fai_ticket(base, mask)
+    assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+    assert int(b_k) == int(b_r)
+
+
+@given(seed=st.integers(0, 10_000), W=st.integers(1, 300))
+@settings(**FAST)
+def test_fai_ticket_property(seed, W):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(W) < rng.random())
+    base = jnp.int32(rng.integers(0, 10_000))
+    t, b = ops.fai_ticket(base, mask)
+    tn = np.asarray(t)[np.asarray(mask)]
+    # FAI guarantees: active tickets are distinct, contiguous from base
+    assert_array_equal(np.sort(tn), np.arange(int(base), int(base) + len(tn)))
+    assert int(b) == int(base) + len(tn)
+
+
+# ---------------------------------------------------------------------------
+# crq_wave
+# ---------------------------------------------------------------------------
+
+
+def random_ring(rng, R, base=0):
+    """A plausible CRQ ring state: mixture of live items, advanced-empty and
+    stale cells."""
+    idxs = np.arange(R, dtype=np.int32) + base
+    vals = np.full(R, -1, np.int32)
+    occupied = rng.random(R) < 0.5
+    vals[occupied] = rng.integers(0, 1000, occupied.sum())
+    advanced = (~occupied) & (rng.random(R) < 0.3)
+    idxs[advanced] += R
+    safes = (rng.random(R) < 0.9).astype(np.int32)
+    return jnp.asarray(vals), jnp.asarray(idxs), jnp.asarray(safes)
+
+
+@pytest.mark.parametrize("R,W", [(8, 4), (64, 16), (256, 64), (1024, 128)])
+def test_crq_wave_shapes(R, W):
+    rng = np.random.default_rng(R + W)
+    vals, idxs, safes = random_ring(rng, R)
+    head = jnp.int32(rng.integers(0, R))
+    tail = int(rng.integers(0, R))
+    ea = jnp.asarray(rng.random(W) < 0.7)
+    # distinct tickets mod R within the wave (the fai_ticket invariant)
+    et, _ = ref.fai_ticket(jnp.int32(tail), ea)
+    ev = jnp.asarray(rng.integers(0, 1000, W), jnp.int32)
+    da = jnp.asarray(rng.random(W) < 0.7)
+    dt, _ = ref.fai_ticket(head, da)
+    out_k = ops.crq_wave(vals, idxs, safes, head, et, ev, ea, dt, da)
+    out_r = ref.crq_wave(vals, idxs, safes, head, et, ev, ea, dt, da)
+    for k, r, name in zip(out_k, out_r, ["vals", "idxs", "safes", "ok", "out"]):
+        assert_array_equal(np.asarray(k), np.asarray(r), err_msg=name)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**FAST)
+def test_crq_wave_property(seed):
+    rng = np.random.default_rng(seed)
+    R = int(rng.choice([8, 16, 64]))
+    W = int(rng.integers(1, R + 1))
+    base = int(rng.integers(0, 3 * R))
+    vals, idxs, safes = random_ring(rng, R, base=base - R // 2)
+    head = jnp.int32(base - rng.integers(0, R))
+    ea = jnp.asarray(rng.random(W) < 0.6)
+    et, _ = ref.fai_ticket(jnp.int32(base), ea)
+    ev = jnp.asarray(rng.integers(0, 1000, W), jnp.int32)
+    da = jnp.asarray(rng.random(W) < 0.6)
+    dt, _ = ref.fai_ticket(head, da)
+    out_k = ops.crq_wave(vals, idxs, safes, head, et, ev, ea, dt, da)
+    out_r = ref.crq_wave(vals, idxs, safes, head, et, ev, ea, dt, da)
+    for k, r in zip(out_k, out_r):
+        assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+# ---------------------------------------------------------------------------
+# recovery_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("R", [8, 64, 256, 2048, 4096])
+@pytest.mark.parametrize("block", [8, 512, 2048])
+def test_percrq_recovery_scan_shapes(R, block):
+    if block > R:
+        pytest.skip("block larger than ring")
+    rng = np.random.default_rng(R * 7 + block)
+    vals, idxs, _ = random_ring(rng, R, base=int(rng.integers(0, 2 * R)))
+    head0 = jnp.int32(rng.integers(0, 2 * R))
+    h_k, t_k = ops.percrq_recovery_scan(vals, idxs, head0, block=block)
+    h_r, t_r = ref.recovery_scan(vals, idxs, head0)
+    assert (int(h_k), int(t_k)) == (int(h_r), int(t_r))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**FAST)
+def test_percrq_recovery_scan_property(seed):
+    rng = np.random.default_rng(seed)
+    R = int(rng.choice([8, 16, 64, 128]))
+    vals, idxs, _ = random_ring(rng, R, base=int(rng.integers(0, 3 * R)))
+    head0 = jnp.int32(rng.integers(0, 3 * R))
+    h_k, t_k = ops.percrq_recovery_scan(vals, idxs, head0, block=R)
+    h_r, t_r = ref.recovery_scan(vals, idxs, head0)
+    assert (int(h_k), int(t_k)) == (int(h_r), int(t_r))
+    assert int(h_k) <= int(t_k)  # recovery invariant
+
+
+@pytest.mark.parametrize("N,n", [(64, 4), (1000, 7), (4096, 16), (5000, 3)])
+def test_periq_streak_shapes(N, n):
+    rng = np.random.default_rng(N + n)
+    vals = np.where(rng.random(N) < 0.5, -1, rng.integers(0, 9, N)).astype(np.int32)
+    vals[-n:] = -1  # guarantee a run exists at the end
+    got = int(ops.periq_streak(jnp.asarray(vals), n))
+    want = int(ref.periq_streak(jnp.asarray(vals), jnp.int32(n)))
+    assert got == want
+    # and verify directly
+    run = 0
+    first = None
+    for i, v in enumerate(vals):
+        run = run + 1 if v == -1 else 0
+        if run >= n:
+            first = i - n + 1
+            break
+    assert got == first
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8))
+@settings(**FAST)
+def test_periq_streak_property(seed, n):
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(n, 600))
+    vals = np.where(rng.random(N) < 0.6, -1, 1).astype(np.int32)
+    got = int(ops.periq_streak(jnp.asarray(vals), n))
+    want = int(ref.periq_streak(jnp.asarray(vals), jnp.int32(n)))
+    assert got == want

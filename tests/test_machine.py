@@ -1,0 +1,149 @@
+"""Unit tests for the simulated shared-memory machine + persistency model."""
+import itertools
+
+import pytest
+
+from repro.core.machine import (BOT, CAS, FAI, GetSet, Machine, PSync, PWB,
+                                Read, TAS, Write)
+
+
+def run1(m, gen):
+    """Drive a single-thread generator to completion."""
+    res = m.run_schedule({0: gen}, itertools.repeat(0, 100000))
+    return res.get(0)
+
+
+def test_read_write_fai_cas():
+    m = Machine(1)
+    m.declare("x", 0)
+
+    def prog():
+        v0 = yield FAI("x")
+        v1 = yield FAI("x")
+        ok = yield CAS("x", 2, 10)
+        bad = yield CAS("x", 2, 99)
+        old = yield GetSet("x", 7)
+        v = yield Read("x")
+        return (v0, v1, ok, bad, old, v)
+
+    assert run1(m, prog()) == (0, 1, True, False, 10, 7)
+
+
+def test_packed_fai_and_tas():
+    m = Machine(1)
+    m.declare("T", (0, 5))
+
+    def prog():
+        old = yield FAI("T", field=1)
+        cb = yield TAS("T", field=0)
+        now = yield Read("T")
+        return (old, cb, now)
+
+    assert run1(m, prog()) == ((0, 5), 0, (1, 6))
+
+
+def test_persistence_pwb_psync_and_crash():
+    m = Machine(1)
+    m.declare("x", 0)
+
+    def prog():
+        yield Write("x", 42)
+        yield PWB("x")
+        yield PSync()
+        yield Write("x", 43)  # dirty, never persisted
+
+    run1(m, prog())
+    assert m.peek("x") == 43
+    assert m.peek_nvm("x") == 42
+    m.crash()
+    assert m.peek("x") == 42  # volatile image lost, NVM survives
+
+
+def test_unpersisted_write_lost_on_crash():
+    m = Machine(1)
+    m.declare("x", 0)
+
+    def prog():
+        yield Write("x", 99)
+
+    run1(m, prog())
+    m.crash()
+    assert m.peek("x") == 0
+
+
+def test_eviction_adversary_can_persist_without_pwb():
+    m = Machine(1, seed=3)
+    m.declare("x", 0)
+
+    def prog():
+        yield Write("x", 5)
+
+    run1(m, prog())
+    m.evict_random(k=10)
+    m.crash()
+    assert m.peek("x") == 5  # system-initiated write-back took effect
+
+
+def test_line_grouping_flushes_together():
+    # Three variables on one cache line persist with a single pwb
+    m = Machine(1, line_of=lambda v: "L" if v in ("a", "b", "c") else v)
+    for v in ("a", "b", "c", "d"):
+        m.declare(v, 0)
+
+    def prog():
+        yield Write("a", 1)
+        yield Write("b", 2)
+        yield Write("c", 3)
+        yield Write("d", 4)
+        yield PWB("a")
+        yield PSync()
+
+    run1(m, prog())
+    m.crash()
+    assert (m.peek("a"), m.peek("b"), m.peek("c")) == (1, 2, 3)
+    assert m.peek("d") == 0  # separate line, not flushed
+
+
+def test_psync_only_flushes_own_pending():
+    m = Machine(2)
+    m.declare("x", 0)
+    m.declare("y", 0)
+
+    def p0():
+        yield Write("x", 1)
+        yield PWB("x")
+
+    def p1():
+        yield Write("y", 2)
+        yield PSync()  # thread 1 has no pending pwbs
+
+    m.run_schedule({0: p0(), 1: p1()}, [0, 0, 1, 1])
+    m.crash()
+    assert m.peek("x") == 0  # pwb without psync: not guaranteed durable
+    assert m.peek("y") == 0
+
+
+def test_contended_flush_costs_more():
+    m = Machine(4)
+    cm = m.cm
+    assert cm.flush_cost(1) < cm.flush_cost(4) <= cm.flush_cost(100)
+    assert cm.atomic_cost(1) < cm.atomic_cost(4) <= cm.atomic_cost(100)
+
+
+def test_des_mode_contention_serializes():
+    """n threads doing FAI on one line must serialize; on distinct lines they
+    run in parallel -- makespans must reflect that."""
+    def run(shared: bool, n=8, k=40):
+        m = Machine(n)
+        for t in range(n):
+            m.declare(("v", 0 if shared else t), 0)
+
+        def wl(t):
+            def gen():
+                yield FAI(("v", 0 if shared else t))
+            return gen
+
+        r = m.run_des({t: wl(t) for t in range(n)}, ops_per_thread=k)
+        return r["makespan"]
+
+    assert run(shared=True) > 3 * run(shared=False)

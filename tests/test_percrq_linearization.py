@@ -1,0 +1,75 @@
+"""Algorithm 4: the PerCRQ linearization procedure vs the recovery function.
+
+For random schedules + crash points on a single CRQ instance, the paper's
+linearization rules (E = linearized enqueues, D = linearized dequeues,
+computed from the NVM image) must agree with what RECOVERY + drain produce:
+``drain == [x_i for i in sorted(E - D)]``.
+"""
+import itertools
+import random
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.crq import CRQ
+from repro.core.harness import pairs_workload, random_schedule, run_epoch
+from repro.core.linearize import expected_percrq_drain, percrq_linearization
+from repro.core.machine import BOT, EMPTY, Machine
+
+
+def fresh(R, n=4):
+    m = Machine(n)
+    c = CRQ(m, R=R, mode="percrq")
+    c.declare()
+    m.poke_nvm(c.TAIL, (0, 0))
+    m.poke_nvm(c.HEAD, 0)
+    for u in range(R):
+        m.poke_nvm(c.cell(u), (1, u, BOT))
+    for t in range(n):
+        m.poke_nvm(c.mirror(t), 0)
+    return m, c
+
+
+def drain(m, c):
+    out = []
+
+    def prog():
+        while True:
+            v = yield from c.dequeue(0)
+            if v is EMPTY:
+                return
+            out.append(v)
+
+    m.run_schedule({0: prog()}, itertools.repeat(0, 200_000))
+    return out
+
+
+@given(seed=st.integers(0, 8000), crash_at=st.integers(30, 2500),
+       R=st.sampled_from([8, 16, 32]))
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_algorithm4_matches_recovery(seed, crash_at, R):
+    m, c = fresh(R)
+    # keep the workload small enough that the CRQ does not close (the closed
+    # path belongs to PerLCRQ, where the next node takes over)
+    run_epoch(m, c, pairs_workload(4, 10), random_schedule(4, 200_000, seed),
+              crash_at_step=crash_at)
+    m.restart()
+    expect = expected_percrq_drain(m, c)
+    c.recover()
+    got = drain(m, c)
+    assert got == expect, (got, expect)
+
+
+def test_algorithm4_deterministic_sweep():
+    for seed in range(40):
+        m, c = fresh(16)
+        run_epoch(m, c, pairs_workload(4, 10),
+                  random_schedule(4, 200_000, seed),
+                  crash_at_step=random.Random(seed).randrange(30, 1500))
+        m.restart()
+        expect = expected_percrq_drain(m, c)
+        c.recover()
+        got = drain(m, c)
+        assert got == expect, (seed, got, expect)

@@ -1,0 +1,77 @@
+"""Sequential semantics for every queue implementation (single thread)."""
+import itertools
+
+import pytest
+
+from repro.core.combining import PBQueue, PWFQueue
+from repro.core.harness import run_epoch
+from repro.core.iq import IQ, PerIQ
+from repro.core.lcrq import LCRQ, install_line_map
+from repro.core.machine import EMPTY, OK, Machine
+
+
+def make(queue_name):
+    m = Machine(2)
+    if queue_name in ("lcrq", "perlcrq", "perlcrq_phead", "perlcrq_nohead", "perlcrq_notail"):
+        install_line_map(m)
+        mode = {
+            "lcrq": "none",
+            "perlcrq": "percrq",
+            "perlcrq_phead": "phead",
+            "perlcrq_nohead": "nohead",
+            "perlcrq_notail": "notail",
+        }[queue_name]
+        return m, LCRQ(m, R=4, mode=mode)  # tiny ring => exercises node chaining
+    if queue_name == "iq":
+        return m, IQ(m)
+    if queue_name == "periq":
+        return m, PerIQ(m)
+    if queue_name == "pbqueue":
+        return m, PBQueue(m)
+    if queue_name == "pwfqueue":
+        return m, PWFQueue(m)
+    raise ValueError(queue_name)
+
+
+ALL = ["iq", "periq", "lcrq", "perlcrq", "perlcrq_phead", "perlcrq_nohead",
+       "perlcrq_notail", "pbqueue", "pwfqueue"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fifo_sequential(name):
+    m, q = make(name)
+    ops = [("enq", i) for i in range(10)] + [("deq", None)] * 11
+    h = run_epoch(m, q, {0: ops}, itertools.repeat(0, 10_000_000), epoch=0)
+    assert all(r.completed for r in h)
+    deqs = [r.result for r in h if r.kind == "deq"]
+    assert deqs == list(range(10)) + [EMPTY]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_interleaved_sequential(name):
+    m, q = make(name)
+    ops = []
+    for i in range(30):
+        ops.append(("enq", i))
+        ops.append(("deq", None))
+    h = run_epoch(m, q, {0: ops}, itertools.repeat(0, 10_000_000))
+    deqs = [r.result for r in h if r.kind == "deq"]
+    assert deqs == list(range(30))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_empty_on_fresh_queue(name):
+    m, q = make(name)
+    h = run_epoch(m, q, {0: [("deq", None)] * 3}, itertools.repeat(0, 100_000))
+    assert [r.result for r in h] == [EMPTY] * 3
+
+
+def test_lcrq_spills_across_nodes():
+    """Ring of size 4; enqueue 20 items without dequeuing -> the tantrum CRQ
+    closes and new nodes are appended (Michael-Scott chaining)."""
+    m, q = make("perlcrq")
+    ops = [("enq", i) for i in range(20)] + [("deq", None)] * 21
+    h = run_epoch(m, q, {0: ops}, itertools.repeat(0, 10_000_000))
+    deqs = [r.result for r in h if r.kind == "deq"]
+    assert deqs == list(range(20)) + [EMPTY]
+    assert m.peek(("L", "First")) != 0 or m.peek(("L", "Last")) != 0  # chained

@@ -1,0 +1,167 @@
+"""The paper's Scenarios 1-3 (Section 4.2) as executable recovery tests, plus
+Lemma 1 as a property.
+
+Each scenario constructs the exact NVM image of Fig. 1 and checks that
+RECOVERY (Algorithm 3 lines 58-83) restores the Head/Tail values the paper's
+durable-linearizability argument requires.
+Cells are (safe, idx, val); the paper's figure notation is (safe, val, idx).
+"""
+import itertools
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.crq import CRQ
+from repro.core.harness import drain, pairs_workload, random_schedule, run_epoch
+from repro.core.lcrq import LCRQ, install_line_map, FIRST, node_next
+from repro.core.machine import BOT, EMPTY, Machine
+
+
+def fresh_crq(R, n=4, mode="percrq"):
+    m = Machine(n)
+    c = CRQ(m, R=R, mode=mode)
+    c.declare()
+    m.poke_nvm(c.TAIL, (0, 0))
+    m.poke_nvm(c.HEAD, 0)
+    for u in range(R):
+        m.poke_nvm(c.cell(u), (1, u, BOT))
+    for t in range(n):
+        m.poke_nvm(c.mirror(t), 0)
+    return m, c
+
+
+def drain_crq(m, c, limit=1000):
+    out = []
+
+    def prog():
+        while True:
+            v = yield from c.dequeue(0)
+            if v is EMPTY:
+                return
+            out.append(v)
+
+    m.run_schedule({0: prog()}, itertools.repeat(0, 100_000))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1 (Fig 1a): indistinguishable states without persisted Head
+# ---------------------------------------------------------------------------
+
+
+def _scenario1_image(m, c):
+    m.poke_nvm(c.cell(0), (1, 0, "x0"))
+    m.poke_nvm(c.cell(1), (1, 1, "x1"))
+    m.poke_nvm(c.cell(2), (1, 2, "x2"))
+    m.poke_nvm(c.cell(3), (1, 8, "x8"))  # enq_8 wrapped into Q[3]
+    m.poke_nvm(c.cell(4), (1, 4, BOT))
+
+
+def test_scenario1_case_b_no_dequeues():
+    """Case (b): no dequeue ever ran (all mirrors 0) => Head=0; every
+    persisted item is drained in FIFO index order."""
+    m, c = fresh_crq(R=5)
+    _scenario1_image(m, c)
+    st_ = c.recover()
+    assert st_["head"] == 0
+    assert st_["tail"] == 9
+    assert drain_crq(m, c) == ["x0", "x1", "x2", "x8"]
+
+
+def test_scenario1_case_a_with_persisted_head():
+    """Case (a): deq_0..deq_3 ran and Head=4 was persisted through a local
+    mirror => recovery must NOT resurrect x0..x2 (their dequeues linearized);
+    only x8 survives."""
+    m, c = fresh_crq(R=5)
+    _scenario1_image(m, c)
+    m.poke_nvm(c.mirror(2), 4)  # deq_3 persisted Head_i = 4
+    st_ = c.recover()
+    assert st_["tail"] == 9
+    assert st_["head"] == 8  # smallest occupied index >= persisted Head
+    assert drain_crq(m, c) == ["x8"]
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2 (Fig 1b): enqueue's own pwb persists the DEQUEUED cell state
+# ---------------------------------------------------------------------------
+
+
+def test_scenario2_unoccupied_cell_forces_head():
+    """enq_0 completed (its pwb flushed the cell AFTER deq_0's dequeue
+    transition, so NVM holds (1, 4, ⊥)); deq_0 itself never persisted.
+    deq_0 must still be linearized: recovered Head must be 1 (Lemma 1), and
+    nothing must be drained -- x0 must NOT reappear."""
+    m, c = fresh_crq(R=4)
+    m.poke_nvm(c.cell(0), (1, 4, BOT))
+    st_ = c.recover()
+    assert st_["tail"] == 1
+    assert st_["head"] == 1  # paper: "the value of Head must be set to 1"
+    assert drain_crq(m, c) == []
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3 (Fig 1c): occupied cells BELOW the persisted Head
+# ---------------------------------------------------------------------------
+
+
+def test_scenario3_min_occupied_pulls_head():
+    m, c = fresh_crq(R=4)
+    m.poke_nvm(c.cell(0), (1, 0, "x0"))  # enq_0 persisted; deq_0 slow
+    m.poke_nvm(c.cell(1), (1, 5, "x5"))  # enq_5 persisted (second lap)
+    m.poke_nvm(c.cell(2), (1, 6, "x6"))  # enq_6 persisted
+    m.poke_nvm(c.cell(3), (1, 7, BOT))  # deq_3's dequeue transition persisted
+    m.poke_nvm(c.mirror(3), 4)  # deq_3 persisted Head_i = 4
+    st_ = c.recover()
+    assert st_["tail"] == 7, st_
+    assert st_["head"] == 5, st_  # paper: "Head = 5 and Tail = 7"
+    assert drain_crq(m, c) == ["x5", "x6"]  # x0 legally consumed by deq_0
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 as a property: persisted mirrors bound the recovered endpoints
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 5000), crash_at=st.integers(50, 4000))
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lemma1_recovered_head_tail_dominate_persisted_mirrors(seed, crash_at):
+    m = Machine(4, eviction_rate=0.01, seed=seed)
+    install_line_map(m)
+    q = LCRQ(m, R=8, mode="percrq")
+    run_epoch(m, q, pairs_workload(4, 30), random_schedule(4, 400_000, seed),
+              crash_at_step=crash_at)
+    m.restart()
+    # per-node persisted mirror maxima BEFORE recovery
+    node_mirrors = {}
+    nid = m.peek_nvm(FIRST)
+    seen = set()
+    while nid is not None and nid not in seen:
+        seen.add(nid)
+        c = q.crq_of(nid)
+        node_mirrors[nid] = max(m.peek_nvm(c.mirror(t)) or 0 for t in range(4))
+        nid = m.peek_nvm(node_next(nid))
+    q.recover()
+    for nid, mx in node_mirrors.items():
+        c = q.crq_of(nid)
+        head = m.peek_nvm(c.HEAD)
+        _cb, tail = m.peek_nvm(c.TAIL)
+        assert head >= mx, (nid, head, mx)       # Lemma 1 (a)
+        assert tail >= head or tail >= mx, (nid, tail, head, mx)  # Lemma 1 (b)
+
+
+# ---------------------------------------------------------------------------
+# Safe-bit reset (line 83) and cell re-initialization (lines 81-82)
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_resets_safe_bits_and_dead_cells():
+    m, c = fresh_crq(R=4)
+    m.poke_nvm(c.cell(0), (0, 0, "x0"))  # unsafe-marked occupied cell
+    m.poke_nvm(c.cell(2), (0, 2, BOT))   # unsafe empty cell
+    c.recover()
+    for u in range(4):
+        s, idx, v = m.peek_nvm(c.cell(u))
+        assert s == 1
+    assert drain_crq(m, c) == ["x0"]
