@@ -1,7 +1,10 @@
 """Benchmark harness entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows + the paper-claim checks.
+Prints ``name,us_per_call,derived`` CSV rows for the paper figures, then one
+JSON row per wave-engine/fabric configuration (the --backend/--shards
+sweep), then the paper-claim checks on stderr.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--backend jnp|pallas|all]
+      [--shards 1,2,4,8]
 """
 from __future__ import annotations
 
@@ -15,12 +18,34 @@ def _emit(name, us, derived=""):
     print(f"{name},{us:.3f},{derived}")
 
 
+def _shard_list(text: str):
+    try:
+        counts = tuple(int(s) for s in text.split(",") if s.strip())
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--shards wants comma-separated positive ints, got {text!r}")
+    if not counts or any(c < 1 for c in counts):
+        raise argparse.ArgumentTypeError(
+            f"--shards wants at least one positive int, got {text!r}")
+    return counts
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller workloads (CI)")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "all"),
+                    default="all",
+                    help="queue backend(s) for the wave-engine sweep")
+    ap.add_argument("--shards", type=_shard_list, default=(1, 4),
+                    metavar="N,N,...",
+                    help="comma-separated fabric shard counts to sweep, "
+                         "e.g. 1,2,4,8")
     args = ap.parse_args()
     pairs = 60 if args.fast else 150
+    backends = (("jnp", "pallas") if args.backend == "all"
+                else (args.backend,))
+    shard_counts = args.shards
 
     from . import (fig2_throughput, fig3_persist_cost, fig45_recovery,
                    fig6_tradeoff, wave_engine)
@@ -80,11 +105,19 @@ def main() -> None:
           f"pwbs_per_op={naive['pwbs_per_op']:.2f}")
     claims["fig6"] = fig6_tradeoff.check_claims(rows6, naive)
 
-    # --- wave engine wall-clock ---
-    rowsw = wave_engine.run(iters=50 if args.fast else 200)
+    # --- wave engine / fabric sweep: one JSON row per configuration ---
+    rowsw = wave_engine.run(iters=50 if args.fast else 200,
+                            backends=backends, shard_counts=shard_counts)
     for r in rowsw:
-        _emit(f"wave/{r['path']}", r["us_per_wave"],
-              f"ops_per_sec={r['ops_per_sec']:.0f}")
+        print(json.dumps(r, default=float))
+    drivers = [r for r in rowsw if r["path"].startswith("wave_driver")]
+    claims["fabric"] = {}
+    for be in backends:
+        mine = {r["shards"]: r["ops_per_sec"] for r in drivers
+                if r["backend"] == be}
+        if len(mine) > 1:
+            claims["fabric"][f"claim_shards_scale_{be}"] = (
+                mine[max(mine)] > mine[min(mine)])
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

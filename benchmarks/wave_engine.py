@@ -1,50 +1,100 @@
-"""Wall-clock throughput of the TPU-native wave engine (real JAX timings on
-this host), jnp path vs Pallas-kernel (interpret) path, plus recovery cost.
-This is the engine the data pipeline / serving queue run on."""
+"""Wall-clock throughput of the wave engine / sharded fabric (real JAX
+timings on this host), swept over queue backend (jnp vs Pallas-interpret)
+and shard count (Q internal queues behind one endpoint).  Two measurements
+per configuration:
+
+  * raw fused-wave latency (``fabric_step``: one jit call, Q x W enqueues +
+    Q x W dequeues),
+  * end-to-end driver throughput (``enqueue_all`` + ``dequeue_n``: includes
+    the scan-batched host loop), at EQUAL TOTAL OPS across configurations --
+    the number the serving/pipeline consumers actually see.
+
+Recovery cost is timed once per backend on the Q=max fabric (one vectorized
+recovery scan across every shard)."""
 from __future__ import annotations
 
 import time
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.wave import WaveQueue, init_state, recover, wave_step
+from repro.core.fabric import ShardedWaveQueue, fabric_init, fabric_recover, fabric_step
+from repro.core.wave import WaveQueue
 
 
-def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200):
-    rows = []
-    for use_kernels, label in ((False, "wave_jnp"), (True, "wave_pallas_interpret")):
-        vol = nvm = init_state(S, R, 1)
-        ev = jnp.arange(W, dtype=jnp.int32)
-        dm = jnp.zeros((W,), bool).at[:].set(True)
-        shard = jnp.int32(0)
-        # warmup + compile
-        vol, nvm, _, _ = wave_step(vol, nvm, ev, dm, shard,
-                                   use_kernels=use_kernels)
-        jax.block_until_ready(vol.vals)
-        n = iters if not use_kernels else max(4, iters // 50)
-        t0 = time.perf_counter()
-        for _ in range(n):
-            vol, nvm, ok, out = wave_step(vol, nvm, ev, dm, shard,
-                                          use_kernels=use_kernels)
-        jax.block_until_ready(vol.vals)
-        dt = time.perf_counter() - t0
-        ops = 2 * W * n  # W enqueues + W dequeues per wave
-        rows.append({
-            "path": label,
-            "us_per_wave": dt / n * 1e6,
-            "ops_per_sec": ops / dt,
-        })
-    # recovery wall-clock
-    q = WaveQueue(S=S, R=R, W=W)
-    q.enqueue_all(list(range(2 * R)))
-    st = recover(q.nvm)
-    jax.block_until_ready(st.vals)
+def _time(fn, n: int) -> float:
+    jax.block_until_ready(fn())  # warmup + compile, fully drained
     t0 = time.perf_counter()
-    for _ in range(20):
-        st = recover(q.nvm)
-    jax.block_until_ready(st.vals)
-    rows.append({"path": "wave_recovery",
-                 "us_per_wave": (time.perf_counter() - t0) / 20 * 1e6,
-                 "ops_per_sec": 0.0})
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
+        backends: Sequence[str] = ("jnp", "pallas"),
+        shard_counts: Sequence[int] = (1, 4)):
+    rows = []
+    for backend in backends:
+        # Pallas interpret mode traces the kernel body in Python: keep the
+        # op count honest but the wall-clock bounded.
+        n = iters if backend == "jnp" else max(4, iters // 50)
+        w = W if backend == "jnp" else min(W, 64)
+        r = R if backend == "jnp" else min(R, 512)
+        for Q in shard_counts:
+            # ---- raw fused wave: Q*W enq + Q*W deq per jit call ----------
+            vol = nvm = fabric_init(Q, S, r, 1)
+            ev = jnp.tile(jnp.arange(w, dtype=jnp.int32)[None], (Q, 1))
+            dm = jnp.ones((Q, w), bool)
+            shard = jnp.int32(0)
+
+            def fused(vol=vol, nvm=nvm):
+                v, m, ok, out = fabric_step(vol, nvm, ev, dm, shard,
+                                            backend=backend)
+                return out
+
+            dt = _time(fused, n)
+            rows.append({
+                "path": f"wave_step/{backend}/q{Q}",
+                "backend": backend, "shards": Q,
+                "us_per_wave": dt * 1e6,
+                "ops_per_sec": 2 * w * Q / dt,
+            })
+
+            # ---- end-to-end driver at equal total ops --------------------
+            total_items = (8 if backend == "jnp" else 2) * w * max(shard_counts)
+            if Q == 1:
+                q = WaveQueue(S=S, R=r, W=w, backend=backend)
+            else:
+                q = ShardedWaveQueue(Q=Q, S=S, R=r, W=w, backend=backend)
+            items = list(range(total_items))
+            q.enqueue_all(items)              # warm pass: compiles every
+            q.dequeue_n(total_items)          # scan length the drivers use
+            t0 = time.perf_counter()
+            q.enqueue_all(items)
+            got, _ = q.dequeue_n(total_items)
+            dt = time.perf_counter() - t0
+            assert len(got) == total_items, (backend, Q, len(got))
+            st = q.persist_stats()
+            rows.append({
+                "path": f"wave_driver/{backend}/q{Q}",
+                "backend": backend, "shards": Q,
+                "us_per_wave": dt * 1e6 / max(1, total_items // (w * Q)),
+                "ops_per_sec": 2 * total_items / dt,
+                "pwbs_per_op": float(st["pwbs"].sum() / max(1, st["ops"].sum())),
+                "psyncs_per_op": float(st["psyncs"].sum() / max(1, st["ops"].sum())),
+            })
+
+        # ---- recovery wall-clock: one vectorized scan over all shards ----
+        Qmax = max(shard_counts)
+        q = ShardedWaveQueue(Q=Qmax, S=S, R=r, W=w, backend=backend)
+        q.enqueue_all(list(range(2 * r)))
+        n_rec = 20 if backend == "jnp" else 3
+        dt = _time(lambda: fabric_recover(q.nvm, backend=backend).vals, n_rec)
+        rows.append({
+            "path": f"wave_recovery/{backend}/q{Qmax}",
+            "backend": backend, "shards": Qmax,
+            "us_per_wave": dt * 1e6, "ops_per_sec": 0.0,
+        })
     return rows

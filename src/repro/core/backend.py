@@ -1,0 +1,186 @@
+"""Queue backend registry: the primitive layer under the wave engine.
+
+The wave engine (core/wave.py, DESIGN.md §3-4) is ONE phase implementation
+parameterized by a ``QueueBackend`` that supplies the three contended
+primitives of the paper's algorithms:
+
+  * ``ticket``      -- batched Fetch&Increment (Algorithm 3 lines 12/30): a
+                       wave of W ops obtains pairwise-distinct, gap-free slots,
+  * ``transition``  -- the CRQ cell transitions (enqueue / dequeue / empty /
+                       unsafe, Algorithm 3 lines 14/34/38/41) applied
+                       data-parallel against one ring segment,
+  * ``recover_scan``-- the per-segment Head/Tail recovery reductions
+                       (Algorithm 3 lines 61-80).
+
+Two backends ship:
+
+  * ``jnp``    -- pure jax.numpy reference (gathers + conflict-free scatters),
+  * ``pallas`` -- the Pallas TPU kernels in repro.kernels (interpret mode on
+                  CPU, compiled on TPU).
+
+Both are registered here; ``get_backend`` resolves a name (or passes an
+already-constructed backend through), so `wave_step(..., backend="pallas")`
+is the whole switch -- no duplicated phase implementations anywhere.
+"""
+from __future__ import annotations
+
+from typing import Dict, Protocol, Tuple, Union, runtime_checkable
+
+import jax.numpy as jnp
+
+# Sentinels shared by every layer (re-exported by core.wave).
+BOT = jnp.int32(-1)      # empty cell
+EMPTY_V = jnp.int32(-2)  # dequeue found the queue empty at its ticket
+RETRY_V = jnp.int32(-3)  # transition failed; retry next wave
+IDLE_V = jnp.int32(-4)   # inactive lane
+
+
+@runtime_checkable
+class QueueBackend(Protocol):
+    """The three primitives a wave-engine backend must provide."""
+
+    name: str
+
+    def ticket(self, base: jnp.ndarray, mask: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched FAI: (tickets[W], new_base).  Active lanes receive
+        ``base + #active-lanes-before-me``; new_base = base + #active."""
+        ...
+
+    def transition(self, vals, idxs, safes, head,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active):
+        """One CRQ transition wave against a single ring segment: enqueue
+        transitions first, then dequeue/empty/unsafe transitions against the
+        post-enqueue cells.  Tickets are pairwise distinct mod R within a
+        wave (W <= R), so per-lane stores are conflict-free.
+
+        Returns (vals', idxs', safes'[bool], enq_ok[W] bool, deq_out[W])."""
+        ...
+
+    def recover_scan(self, vals, idxs, head0
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(head, tail) recovered for one ring segment from the persisted
+        cells + the mirror-derived head0 (Algorithm 3 lines 61-80)."""
+        ...
+
+
+class JnpBackend:
+    """Pure jax.numpy reference backend (the oracle for the Pallas path)."""
+
+    name = "jnp"
+
+    def ticket(self, base, mask):
+        m = mask.astype(jnp.int32)
+        return base + jnp.cumsum(m) - m, base + jnp.sum(m)
+
+    def transition(self, vals, idxs, safes, head,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active):
+        R = vals.shape[0]
+        # -- enqueue transitions (Algorithm 3 line 14) ----------------------
+        eslot = enq_tickets % R
+        ci, cv, cs = idxs[eslot], vals[eslot], safes[eslot]
+        enq_ok = (enq_active & (ci <= enq_tickets) & (cv == BOT)
+                  & (cs | (head <= enq_tickets)))
+        w = jnp.where(enq_ok, eslot, R)  # R = out-of-range drop
+        vals = vals.at[w].set(jnp.where(enq_ok, enq_vals, 0), mode="drop")
+        idxs = idxs.at[w].set(enq_tickets, mode="drop")
+        safes = safes.at[w].set(True, mode="drop")
+        # -- dequeue transitions read the post-enqueue cells ----------------
+        dslot = deq_tickets % R
+        ci, cv = idxs[dslot], vals[dslot]
+        occupied = cv != BOT
+        deq_tr = deq_active & occupied & (ci == deq_tickets)
+        empty_tr = deq_active & (~occupied) & (ci <= deq_tickets)
+        unsafe_tr = deq_active & occupied & (ci < deq_tickets)
+        deq_out = jnp.where(
+            deq_tr, cv,
+            jnp.where(empty_tr, EMPTY_V,
+                      jnp.where(deq_active, RETRY_V, IDLE_V)))
+        # dequeue + empty transitions both install (s, t+R, ⊥)
+        adv = deq_tr | empty_tr
+        w = jnp.where(adv, dslot, R)
+        vals = vals.at[w].set(BOT, mode="drop")
+        idxs = idxs.at[w].set(deq_tickets + R, mode="drop")
+        u = jnp.where(unsafe_tr, dslot, R)
+        safes = safes.at[u].set(False, mode="drop")
+        return vals, idxs, safes, enq_ok, deq_out
+
+    def recover_scan(self, vals, idxs, head0):
+        R = vals.shape[0]
+        occupied = vals != BOT
+        # Tail from max persisted index (lines 61-68)
+        t_occ = jnp.where(occupied, idxs + 1, 0)
+        t_emp = jnp.where((~occupied) & (idxs >= R), idxs - R + 1, 0)
+        tail0 = jnp.maximum(jnp.max(t_occ), jnp.max(t_emp)).astype(jnp.int32)
+        empty_q = head0 > tail0
+        tail1 = jnp.where(empty_q, head0, tail0)
+        # push Head past persisted dequeue transitions in range (lines 71-75)
+        u = jnp.arange(R, dtype=jnp.int32)
+        live = jnp.minimum(jnp.maximum(tail1 - head0, 0), R)
+        in_range = ((u - head0) % R) < live
+        mx_cand = jnp.where(in_range & (~occupied), idxs - R + 1, head0)
+        head1 = jnp.maximum(head0, jnp.max(mx_cand))
+        # pull Head to the smallest occupied in-range index (lines 76-80)
+        live2 = jnp.minimum(jnp.maximum(tail1 - head1, 0), R)
+        in_range2 = ((u - head1) % R) < live2
+        mn_cand = jnp.where(in_range2 & occupied & (idxs >= head1), idxs, tail1)
+        mn = jnp.min(mn_cand)
+        head2 = jnp.where(empty_q, head0, jnp.where(mn < tail1, mn, head1))
+        tail2 = jnp.where(empty_q, head0, tail1)
+        return head2, tail2
+
+
+class PallasBackend:
+    """Pallas TPU-kernel backend (repro.kernels; interpret mode on CPU)."""
+
+    name = "pallas"
+
+    def ticket(self, base, mask):
+        from repro.kernels import ops as kops
+        return kops.fai_ticket(base, mask)
+
+    def transition(self, vals, idxs, safes, head,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active):
+        from repro.kernels import ops as kops
+        v, i, s, eok, dout = kops.crq_wave(
+            vals, idxs, safes.astype(jnp.int32), head,
+            enq_tickets, enq_vals, enq_active, deq_tickets, deq_active)
+        return v, i, s != 0, eok != 0, dout
+
+    def recover_scan(self, vals, idxs, head0):
+        from repro.kernels import ops as kops
+        return kops.percrq_recovery_scan(vals, idxs, head0)
+
+
+_REGISTRY: Dict[str, QueueBackend] = {}
+
+
+def register_backend(name: str, backend: QueueBackend) -> None:
+    _REGISTRY[name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+BackendLike = Union[str, QueueBackend]
+
+
+def get_backend(backend: BackendLike = "jnp") -> QueueBackend:
+    """Resolve a backend name to its registered instance; a backend object
+    passes through unchanged (so callers can hand in a custom one)."""
+    if not isinstance(backend, str):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise KeyError(
+            f"unknown queue backend {backend!r}; "
+            f"registered: {available_backends()}") from None
+
+
+register_backend("jnp", JnpBackend())
+register_backend("pallas", PallasBackend())

@@ -1,0 +1,284 @@
+"""Sharded queue fabric: Q independent wave queues behind one interface.
+
+The BlockFIFO/MultiFIFO scaling move (Sanders & Williams) applied to the
+paper's persistent queue: throughput scales by running Q independent
+``WaveState`` pairs as ONE stacked pytree, with ``wave_step`` vmapped over
+the queue axis (and shard_map-able over a device mesh --
+repro.distributed.fabric_map).  Each internal queue keeps the paper's full
+persistence discipline -- per-shard Head mirrors, cell-only flushes, never
+the global Head/Tail -- so the fabric-level ``crash``/``recover`` is one
+vectorized recovery scan across all shards.
+
+Ordering contract (MultiFIFO): items are placed round-robin across the Q
+internal queues and each internal queue is strictly FIFO, so the fabric is a
+Q-relaxed FIFO -- an item can overtake at most Q-1 later-placed items.
+Consumers that need per-stream FIFO pin a stream to a queue via the
+placement cursor.
+
+Work stealing: ``dequeue_n`` plans each device call from the per-queue
+backlogs and reassigns the lanes of empty shards to loaded ones, so a
+drained shard never idles the wave while siblings hold items.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import BackendLike, get_backend
+from repro.core.wave import (EMPTY_V, WaveState, _dequeue_scan_impl,
+                             _enqueue_scan_impl, _recover_impl, _wave_step,
+                             crash, fold_dequeue_block, fold_enqueue_results,
+                             init_state, plan_waves, quantize_waves,
+                             state_empty)
+
+
+def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
+    """Stacked WaveState: every leaf gains a leading queue axis of length Q."""
+    one = init_state(S, R, P)
+    return jax.tree.map(
+        lambda x: jnp.tile(jnp.asarray(x)[None], (Q,) + (1,) * jnp.ndim(x)),
+        one)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fabric_step(vol, nvm, enq_vals, deq_mask, shard,
+                backend: BackendLike = "jnp"):
+    """One fused wave across all Q queues: enq_vals [Q, W], deq_mask [Q, W],
+    shard scalar (the consumer shard driving this wave).  Returns
+    (vol', nvm', enq_ok[Q, W], deq_out[Q, W])."""
+    b = get_backend(backend)
+    return jax.vmap(
+        lambda v, n, e, d: _wave_step(v, n, e, d, shard, b)
+    )(vol, nvm, enq_vals, deq_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fabric_enqueue_scan(vol, nvm, rows, shard, backend: BackendLike = "jnp"):
+    """K enqueue waves on every queue: rows [Q, K, W].  Per-queue halt-on-
+    failure (see wave._enqueue_scan_impl) keeps each internal queue FIFO.
+    Returns (vol', nvm', oks[Q, K, W], submitted[Q, K])."""
+    b = get_backend(backend)
+    return jax.vmap(
+        lambda v, n, r: _enqueue_scan_impl(v, n, r, shard, b)
+    )(vol, nvm, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "backend"))
+def fabric_dequeue_scan(vol, nvm, counts, shard, W: int,
+                        backend: BackendLike = "jnp"):
+    """K dequeue waves on every queue: counts [Q, K] active lanes per wave.
+    Returns (vol', nvm', outs[Q, K, W])."""
+    b = get_backend(backend)
+    return jax.vmap(
+        lambda v, n, c: _dequeue_scan_impl(v, n, c, shard, W, b)
+    )(vol, nvm, counts)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fabric_recover(nvm, backend: BackendLike = "jnp"):
+    """Vectorized recovery of every shard in one call (the per-shard scan of
+    Algorithm 3 lines 58-83, vmapped over the queue axis)."""
+    b = get_backend(backend)
+    return jax.vmap(lambda n: _recover_impl(n, b))(nvm)
+
+
+class ShardedWaveQueue:
+    """Q wave queues as one endpoint: MultiFIFO placement, per-shard local
+    persistence, fabric-wide crash/recover, work-stealing dequeue.
+
+    Drop-in for ``WaveQueue`` (same enqueue_all / dequeue_n / drain /
+    crash_and_recover / persist_stats surface); ``Q=1`` degenerates to a
+    single queue with strict FIFO."""
+
+    def __init__(self, Q: int = 4, S: int = 16, R: int = 256, P: int = 1,
+                 W: int = 64, backend: BackendLike = "jnp",
+                 waves_per_call: int = 8):
+        self.Q, self.S, self.R, self.P, self.W = Q, S, R, P, W
+        self.backend = backend
+        self.waves_per_call = max(1, waves_per_call)
+        self.vol = fabric_init(Q, S, R, P)
+        self.nvm = fabric_init(Q, S, R, P)
+        self._place = 0   # round-robin placement cursor (enqueue side)
+        self._take = 0    # round-robin service cursor (dequeue side)
+        self.pwbs = np.zeros((Q, P), np.int64)
+        self.psyncs = np.zeros((Q, P), np.int64)
+        self.ops = np.zeros((Q, P), np.int64)
+
+    # -- raw access -----------------------------------------------------------
+
+    def step(self, enq_vals, deq_mask, shard: int = 0):
+        """One raw fused wave: enq_vals [Q, W], deq_mask [Q, W]."""
+        self.vol, self.nvm, ok, out = fabric_step(
+            self.vol, self.nvm, jnp.asarray(enq_vals, jnp.int32),
+            jnp.asarray(deq_mask, bool), jnp.int32(shard),
+            backend=self.backend)
+        return ok, out
+
+    # -- producer side --------------------------------------------------------
+
+    def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
+        """Round-robin place items across the Q internal queues and enqueue
+        them (retrying segment-close failures), K waves per device call."""
+        Q, K, W = self.Q, self.waves_per_call, self.W
+        pend: List[List[int]] = [[] for _ in range(Q)]
+        for i, it in enumerate(items):
+            pend[(self._place + i) % Q].append(int(it))
+        self._place = (self._place + sum(len(p) for p in pend)) % Q
+        waves = 0
+        while any(pend) and waves < max_waves:
+            k_used = quantize_waves(-(-max(len(p) for p in pend) // W), K)
+            rows = np.full((Q, k_used, W), -1, np.int32)
+            for q in range(Q):
+                chunk = pend[q][:k_used * W]
+                rows[q].reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
+            self.vol, self.nvm, oks, submitted = fabric_enqueue_scan(
+                self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
+                backend=self.backend)
+            oks = np.asarray(jax.device_get(oks))
+            sub = np.asarray(jax.device_get(submitted))
+            fused = 0
+            for q in range(Q):
+                chunk = pend[q][:k_used * W]
+                if not chunk:
+                    continue
+                retry, ok_flat, taken, active = fold_enqueue_results(
+                    chunk, rows[q], oks[q], sub[q], W)
+                pend[q] = retry + pend[q][taken:]
+                fused = max(fused, active)
+                self.pwbs[q, shard] += int(ok_flat.sum())
+                self.ops[q, shard] += int(ok_flat.sum())
+                self.psyncs[q, shard] += active
+            waves += max(fused, 1)
+        assert not any(pend), "fabric full: could not enqueue everything"
+        return waves
+
+    # -- consumer side --------------------------------------------------------
+
+    def _backlogs(self) -> np.ndarray:
+        """Per-queue live-item upper bound (sum of per-segment tail-head)."""
+        tails = np.asarray(jax.device_get(self.vol.tails))
+        heads = np.asarray(jax.device_get(self.vol.heads))
+        return np.maximum(tails - heads, 0).sum(axis=1)
+
+    def _plan_counts(self, remaining: int, bl: np.ndarray) -> np.ndarray:
+        """Assign up to ``remaining`` dequeue lanes to queues from the
+        backlog snapshot ``bl``.  Empty shards donate their lanes to loaded
+        shards (work stealing); with no known backlog, probe all queues
+        round-robin."""
+        Q, cap = self.Q, self.waves_per_call * self.W
+        counts = np.zeros((Q,), np.int64)
+        if bl.sum() > 0:
+            want = np.minimum(bl, cap)
+            if want.sum() <= remaining:
+                counts = want
+            else:
+                counts = (want * remaining) // max(int(want.sum()), 1)
+                left = remaining - int(counts.sum())
+                q = self._take
+                while left > 0:
+                    if counts[q] < want[q]:
+                        counts[q] += 1
+                        left -= 1
+                    q = (q + 1) % Q
+        else:
+            # probe: no known backlog -- confirm emptiness with a SMALL wave
+            # (one empty-transition per lane still flushes a cell, so big
+            # probe waves would wreck the pwb-per-op budget for nothing)
+            probe_total = min(remaining, max(Q, min(self.W, 2 * Q)))
+            base = probe_total // Q
+            counts[:] = base
+            for i in range(probe_total - base * Q):
+                counts[(self._take + i) % Q] += 1
+        return counts.astype(np.int64)
+
+    def dequeue_n(self, n: int, shard: int = 0, max_waves: int = 10_000):
+        """Dequeue up to n items, round-robin across shards with work
+        stealing.  Returns (items, fused_wave_count)."""
+        Q, K, W = self.Q, self.waves_per_call, self.W
+        got: List[int] = []
+        waves = 0
+        while len(got) < n and waves < max_waves:
+            remaining = n - len(got)
+            bl = self._backlogs()          # one device sync per iteration
+            probe = bl.sum() == 0
+            counts_q = self._plan_counts(remaining, bl)
+            if counts_q.sum() == 0:
+                counts_q[self._take % Q] = 1
+            # only as many waves as the busiest queue needs (<= K, quantized)
+            k_used = quantize_waves(-(-int(counts_q.max()) // W), K)
+            counts = np.zeros((Q, k_used), np.int32)
+            for q in range(Q):
+                plan = plan_waves(int(counts_q[q]), k_used, W) \
+                    if counts_q[q] else np.zeros((0,), np.int32)
+                counts[q, :plan.shape[0]] = plan
+            self.vol, self.nvm, outs = fabric_dequeue_scan(
+                self.vol, self.nvm, jnp.asarray(counts), jnp.int32(shard),
+                W, backend=self.backend)
+            outl = np.asarray(jax.device_get(outs))      # [Q, k_used, W]
+            # round-robin service order: wave-major, then queue rotation
+            act_all = []
+            for k in range(k_used):
+                for dq in range(Q):
+                    q = (self._take + dq) % Q
+                    c = int(counts[q, k])
+                    if c == 0:
+                        continue
+                    lane_vals = outl[q, k, :c]
+                    act_all.append(lane_vals)
+                    items, touched, delivered = fold_dequeue_block(lane_vals)
+                    got.extend(items)
+                    self.pwbs[q, shard] += touched + 1
+                    self.psyncs[q, shard] += 1
+                    self.ops[q, shard] += delivered
+            self._take = (self._take + 1) % Q
+            fused = int((counts > 0).any(axis=0).sum())
+            waves += max(fused, 1)
+            act = (np.concatenate(act_all) if act_all
+                   else np.empty((0,), np.int32))
+            if probe and act.size and (act == EMPTY_V).all():
+                if self._fabric_empty():
+                    break
+        return got, waves
+
+    def _fabric_empty(self) -> bool:
+        """The driver emptiness rule (wave.state_empty), per shard."""
+        vol = jax.device_get(self.vol)
+        return all(
+            state_empty(int(vol.first[q]), int(vol.last[q]),
+                        vol.heads[q], vol.tails[q])
+            for q in range(self.Q))
+
+    def drain(self, shard: int = 0, max_waves: int = 10_000):
+        out, _ = self.dequeue_n(self.Q * self.S * self.R + 1, shard,
+                                max_waves)
+        return out
+
+    # -- fault tolerance ------------------------------------------------------
+
+    def crash_and_recover(self):
+        """Full-fabric crash: all volatile images lost; every shard's
+        recovery scan runs in one vectorized call."""
+        self.vol = fabric_recover(crash(self.nvm), backend=self.backend)
+        self.nvm = self.vol
+        return self.vol
+
+    # -- introspection --------------------------------------------------------
+
+    def backlog(self) -> int:
+        return int(self._backlogs().sum())
+
+    def persist_stats(self) -> dict:
+        """Per-(queue, shard) pwb/psync/op counts.  The paper's discipline
+        holds per shard: ~1 pwb per completed op (its ring cell) + ~1 pwb
+        per dequeue wave (the Head-mirror line), one psync per wave."""
+        ops = np.maximum(self.ops, 1)
+        return {
+            "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
+            "ops": self.ops.copy(),
+            "pwbs_per_op": self.pwbs / ops,
+            "psyncs_per_op": self.psyncs / ops,
+        }

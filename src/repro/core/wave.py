@@ -2,9 +2,11 @@
 
 TPUs have no inter-core atomics, so the paper's FAI-per-operation becomes
 *batched ticketing*: a wave of W concurrent operations obtains pairwise-
-distinct, gap-free slots with an exclusive prefix-sum (``fai_ticket`` Pallas
-kernel).  The CRQ cell transitions (enqueue / dequeue / empty / unsafe) are
-applied data-parallel as masked scatters (``crq_wave`` kernel).  Persistence
+distinct, gap-free slots with an exclusive prefix-sum.  The CRQ cell
+transitions (enqueue / dequeue / empty / unsafe) are applied data-parallel
+as masked scatters.  Both primitives are supplied by a ``QueueBackend``
+(core/backend.py): the pure-jnp reference or the Pallas kernels -- ONE phase
+implementation here, dispatched through the backend registry.  Persistence
 follows the paper's discipline exactly:
 
   * per-wave, ONLY the touched ring cells and the per-shard Head mirrors are
@@ -12,30 +14,36 @@ follows the paper's discipline exactly:
   * Tail / segment headers are persisted only when a segment closes or is
     appended (closedFlag / node-header rules of Algorithm 3/5),
   * global Head / Tail are NEVER flushed -- recovery reconstructs them with
-    the paper's scan (Algorithm 3 lines 58-83, vectorized; ``recovery_scan``
-    kernel).
+    the paper's scan (Algorithm 3 lines 58-83, vectorized; the backend's
+    ``recover_scan``).
 
 The queue is a pool of S ring segments (the LCRQ linked list flattened into
 allocation order -- append-only, so segment s's successor is s+1; the
 persisted ``allocated`` bit plays the role of the persisted next pointer).
 
-State arrays are a pytree => the whole step is jit/shard_map-able.  Payloads
-are int32 handles >= 0 (pointing into a payload slab owned by the caller);
-BOT = -1.  Per-lane dequeue results: >= 0 item, EMPTY_V (queue empty at this
-ticket), RETRY_V (transition failed, retry next wave), IDLE_V (lane inactive).
+State arrays are a pytree => the whole step is jit/vmap/shard_map-able; the
+sharded fabric (core/fabric.py) stacks Q of these states and vmaps the step
+over the queue axis.  ``enqueue_scan`` / ``dequeue_scan`` run K waves per
+jit call with ``lax.scan`` so driver throughput is not bounded by host
+round-trips.
+
+Payloads are int32 handles >= 0 (pointing into a payload slab owned by the
+caller); BOT = -1.  Per-lane dequeue results: >= 0 item, EMPTY_V (queue
+empty at this ticket), RETRY_V (transition failed, retry next wave), IDLE_V
+(lane inactive).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-BOT = jnp.int32(-1)
-EMPTY_V = jnp.int32(-2)
-RETRY_V = jnp.int32(-3)
-IDLE_V = jnp.int32(-4)
+from repro.core.backend import (BOT, EMPTY_V, IDLE_V, RETRY_V,  # noqa: F401
+                                BackendLike, QueueBackend, available_backends,
+                                get_backend, register_backend)
 
 
 class WaveState(NamedTuple):
@@ -77,97 +85,29 @@ def exclusive_cumsum(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# One wave (pure jnp reference path; kernels/ops.py provides the Pallas path)
+# One wave, parameterized by backend (core/backend.py)
 # ---------------------------------------------------------------------------
 
 
-def _enqueue_phase_kernel(st: WaveState, enq_vals: jnp.ndarray):
-    """Kernel-backed enqueue phase: fai_ticket + crq_wave Pallas kernels."""
-    from repro.kernels import ops as kops
-
+def _enqueue_phase(st: WaveState, enq_vals: jnp.ndarray, b: QueueBackend):
+    """Apply a wave of enqueues to segment ``last``.  enq_vals: [W] int32,
+    -1 = inactive lane.  Returns (state, ok[W] bool, slots, failed_any)."""
     S, R = st.vals.shape
     L = st.last
     active = enq_vals >= 0
-    tickets, new_tail = kops.fai_ticket(st.tails[L], active)
-    k = new_tail - st.tails[L]
+    tickets, new_tail = b.ticket(st.tails[L], active)
     head = st.heads[L]
+    # pre-gates the cell transition cannot see: closed segment, full ring
     not_full = (tickets - head) < R
     ea = active & (~st.closed[L]) & not_full
     W = enq_vals.shape[0]
-    vals_L, idxs_L, safes_L, ok_i, _ = kops.crq_wave(
-        st.vals[L], st.idxs[L], st.safes[L].astype(jnp.int32), head,
+    vals_L, idxs_L, safes_L, ok, _ = b.transition(
+        st.vals[L], st.idxs[L], st.safes[L], head,
         tickets, enq_vals, ea,
         jnp.zeros((W,), jnp.int32), jnp.zeros((W,), bool),
     )
-    ok = ok_i != 0
+    # every active lane consumed a ticket (FAI semantics): tail advances
     tails = st.tails.at[L].set(new_tail)
-    must_close = jnp.any(active & (~ok) & ((tickets - head) >= R))
-    closed = st.closed.at[L].set(st.closed[L] | must_close)
-    st = st._replace(
-        vals=st.vals.at[L].set(vals_L),
-        idxs=st.idxs.at[L].set(idxs_L),
-        safes=st.safes.at[L].set(safes_L != 0),
-        tails=tails,
-        closed=closed,
-    )
-    return st, ok, tickets % R, jnp.any(active & (~ok))
-
-
-def _dequeue_phase_kernel(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray):
-    from repro.kernels import ops as kops
-
-    S, R = st.vals.shape
-    F = st.first
-    tickets, new_head = kops.fai_ticket(st.heads[F], deq_mask)
-    W = deq_mask.shape[0]
-    vals_F, idxs_F, safes_F, _, out = kops.crq_wave(
-        st.vals[F], st.idxs[F], st.safes[F].astype(jnp.int32), st.heads[F],
-        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), jnp.int32),
-        jnp.zeros((W,), bool),
-        tickets, deq_mask,
-    )
-    heads = st.heads.at[F].set(new_head)
-    st = st._replace(tails=st.tails.at[F].set(
-        jnp.maximum(st.tails[F], new_head)))  # FixState analog
-    mirrors = st.mirrors.at[shard].set(new_head)
-    mirror_seg = st.mirror_seg.at[shard].set(F)
-    st = st._replace(
-        vals=st.vals.at[F].set(vals_F),
-        idxs=st.idxs.at[F].set(idxs_F),
-        safes=st.safes.at[F].set(safes_F != 0),
-        heads=heads,
-        mirrors=mirrors,
-        mirror_seg=mirror_seg,
-    )
-    return st, out, tickets % R
-
-
-def _enqueue_phase(st: WaveState, enq_vals: jnp.ndarray):
-    """Apply a wave of enqueues to segment ``last``.  enq_vals: [W] int32,
-    -1 = inactive lane.  Returns (state, ok[W] bool, need_new_segment)."""
-    S, R = st.vals.shape
-    L = st.last
-    active = enq_vals >= 0
-    tickets = st.tails[L] + exclusive_cumsum(active)
-    k = jnp.sum(active.astype(jnp.int32))
-    slots = tickets % R
-    cell_idx = st.idxs[L, slots]
-    cell_val = st.vals[L, slots]
-    cell_safe = st.safes[L, slots]
-    head = st.heads[L]
-    # CRQ enqueue-transition condition (Algorithm 3 line 14)
-    cond = (cell_idx <= tickets) & (cell_val == BOT) & (cell_safe | (head <= tickets))
-    not_full = (tickets - head) < R
-    ok = active & (~st.closed[L]) & cond & not_full
-    # scatter the accepted triplets; tickets are pairwise distinct mod R
-    # within a wave (W <= R), so writes are conflict-free -- the invariant
-    # FAI gives the CPU algorithm, provided here by the prefix-sum.
-    w_slots = jnp.where(ok, slots, R)  # R = out-of-range drop
-    vals_L = st.vals[L].at[w_slots].set(jnp.where(ok, enq_vals, 0), mode="drop")
-    idxs_L = st.idxs[L].at[w_slots].set(tickets, mode="drop")
-    safes_L = st.safes[L].at[w_slots].set(True, mode="drop")
-    # every active lane consumed a ticket (FAI semantics): tail advances by k
-    tails = st.tails.at[L].add(k)
     # tantrum close: an active lane failed because the ring is full / unsafe
     must_close = jnp.any(active & (~ok) & ((tickets - head) >= R))
     closed = st.closed.at[L].set(st.closed[L] | must_close)
@@ -179,42 +119,24 @@ def _enqueue_phase(st: WaveState, enq_vals: jnp.ndarray):
         closed=closed,
     )
     failed_any = jnp.any(active & (~ok))
-    return st, ok, slots, failed_any
+    return st, ok, tickets % R, failed_any
 
 
-def _dequeue_phase(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray):
+def _dequeue_phase(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray,
+                   b: QueueBackend):
     """Apply a wave of dequeues to segment ``first``.  Returns
     (state, out[W] int32, touched slots)."""
     S, R = st.vals.shape
     F = st.first
-    active = deq_mask
-    tickets = st.heads[F] + exclusive_cumsum(active)
-    j = jnp.sum(active.astype(jnp.int32))
-    slots = tickets % R
-    cell_idx = st.idxs[F, slots]
-    cell_val = st.vals[F, slots]
-    occupied = cell_val != BOT
-    # transitions (Algorithm 3 lines 31-41)
-    deq_tr = active & occupied & (cell_idx == tickets)
-    empty_tr = active & (~occupied) & (cell_idx <= tickets)
-    unsafe_tr = active & occupied & (cell_idx < tickets)
-    future = active & (cell_idx > tickets)
-    out = jnp.where(
-        deq_tr,
-        cell_val,
-        jnp.where(empty_tr, EMPTY_V, jnp.where(unsafe_tr | future, RETRY_V, IDLE_V)),
+    tickets, new_head = b.ticket(st.heads[F], deq_mask)
+    W = deq_mask.shape[0]
+    vals_F, idxs_F, safes_F, _, out = b.transition(
+        st.vals[F], st.idxs[F], st.safes[F], st.heads[F],
+        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), jnp.int32),
+        jnp.zeros((W,), bool),
+        tickets, deq_mask,
     )
-    out = jnp.where(active, out, IDLE_V)
-    # dequeue transition: (s, h+R, ⊥); empty transition: (s, h+R, ⊥) as well
-    adv = deq_tr | empty_tr
-    w_slots = jnp.where(adv, slots, R)
-    vals_F = st.vals[F].at[w_slots].set(BOT, mode="drop")
-    idxs_F = st.idxs[F].at[w_slots].set(tickets + R, mode="drop")
-    # unsafe transition: clear the safe bit
-    u_slots = jnp.where(unsafe_tr, slots, R)
-    safes_F = st.safes[F].at[u_slots].set(False, mode="drop")
-    heads = st.heads.at[F].add(j)
-    new_head = st.heads[F] + j
+    heads = st.heads.at[F].set(new_head)
     # FixState (Algorithm 3 lines 48-57): dequeuers that overran the tail on
     # an empty segment push Tail up to Head so later enqueues skip the
     # exhausted indices (bulk-synchronous CAS analog).
@@ -231,7 +153,7 @@ def _dequeue_phase(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray):
         mirrors=mirrors,
         mirror_seg=mirror_seg,
     )
-    return st, out, slots
+    return st, out, tickets % R
 
 
 def _advance_segments(st: WaveState) -> WaveState:
@@ -247,27 +169,25 @@ def _advance_segments(st: WaveState) -> WaveState:
     return st._replace(last=new_last, first=new_first, allocated=allocated)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernels",))
-def wave_step(
+def _wave_step(
     vol: WaveState,
     nvm: WaveState,
     enq_vals: jnp.ndarray,   # [W] int32, -1 = idle lane
     deq_mask: jnp.ndarray,   # [W] bool
     shard: jnp.ndarray,      # scalar int32: which shard executes this wave
-    use_kernels: bool = False,
+    b: QueueBackend,
 ) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
     """One bulk-synchronous wave: enqueues, then dequeues, then the
     persistence flush (cells + mirrors + segment headers ONLY -- never the
     global Head/Tail, per the paper's persistence principles).
 
+    Unjitted backend-object core: `wave_step` wraps it for callers; the
+    fabric vmaps it over the queue axis; the scan drivers below loop it.
+
     Returns (vol', nvm', enq_ok[W], deq_out[W])."""
     L_before, F_before = vol.last, vol.first
-    if use_kernels:
-        vol, enq_ok, enq_slots, _failed = _enqueue_phase_kernel(vol, enq_vals)
-        vol, deq_out, deq_slots = _dequeue_phase_kernel(vol, deq_mask, shard)
-    else:
-        vol, enq_ok, enq_slots, _failed = _enqueue_phase(vol, enq_vals)
-        vol, deq_out, deq_slots = _dequeue_phase(vol, deq_mask, shard)
+    vol, enq_ok, enq_slots, _failed = _enqueue_phase(vol, enq_vals, b)
+    vol, deq_out, deq_slots = _dequeue_phase(vol, deq_mask, shard, b)
     vol = _advance_segments(vol)
 
     # ---- persistence (the pwb+psync analog) --------------------------------
@@ -302,6 +222,79 @@ def wave_step(
     return vol, nvm, enq_ok, deq_out
 
 
+@functools.partial(jax.jit, static_argnames=("backend",))
+def wave_step(
+    vol: WaveState,
+    nvm: WaveState,
+    enq_vals: jnp.ndarray,
+    deq_mask: jnp.ndarray,
+    shard: jnp.ndarray,
+    backend: BackendLike = "jnp",
+) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
+    """One wave, dispatched through the backend registry (jit entry point)."""
+    return _wave_step(vol, nvm, enq_vals, deq_mask, shard,
+                      get_backend(backend))
+
+
+# ---------------------------------------------------------------------------
+# Batched stepping: K waves per jit call (lax.scan device-side loops)
+# ---------------------------------------------------------------------------
+
+
+def _enqueue_scan_impl(vol, nvm, rows, shard, b):
+    """Run up to K enqueue waves (rows: [K, W] int32, -1 = idle lane).
+
+    FIFO discipline: the scan HALTS submissions after the first wave that has
+    a failed lane (segment closed / ring full) -- later rows are not
+    submitted, so the host can retry the failed items BEFORE any item that
+    was scheduled after them, exactly like the one-wave-per-host-trip driver.
+    (_advance_segments still runs every wave, so the halted scan makes the
+    segment-append progress the retry needs.)
+
+    Returns (vol, nvm, oks[K, W], submitted[K])."""
+    W = rows.shape[1]
+    dm = jnp.zeros((W,), bool)
+
+    def body(carry, row):
+        vol, nvm, halted = carry
+        ev = jnp.where(halted, jnp.int32(-1), row)
+        vol, nvm, ok, _ = _wave_step(vol, nvm, ev, dm, shard, b)
+        failed = jnp.any((ev >= 0) & (~ok))
+        return (vol, nvm, halted | failed), (ok, ~halted)
+
+    (vol, nvm, _), (oks, submitted) = jax.lax.scan(
+        body, (vol, nvm, jnp.bool_(False)), rows)
+    return vol, nvm, oks, submitted
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def enqueue_scan(vol, nvm, rows, shard, backend: BackendLike = "jnp"):
+    return _enqueue_scan_impl(vol, nvm, rows, shard, get_backend(backend))
+
+
+def _dequeue_scan_impl(vol, nvm, counts, shard, W, b):
+    """Run K dequeue waves; wave k activates the first counts[k] lanes (the
+    caller partitions its remaining demand, so total lanes <= items wanted
+    and over-dequeue is impossible).  Returns (vol, nvm, outs[K, W])."""
+    ev = jnp.full((W,), -1, jnp.int32)
+    lane = jnp.arange(W, dtype=jnp.int32)
+
+    def body(carry, cnt):
+        vol, nvm = carry
+        vol, nvm, _, out = _wave_step(vol, nvm, ev, lane < cnt, shard, b)
+        return (vol, nvm), out
+
+    (vol, nvm), outs = jax.lax.scan(body, (vol, nvm), counts)
+    return vol, nvm, outs
+
+
+@functools.partial(jax.jit, static_argnames=("W", "backend"))
+def dequeue_scan(vol, nvm, counts, shard, W: int,
+                 backend: BackendLike = "jnp"):
+    return _dequeue_scan_impl(vol, nvm, counts, shard, W,
+                              get_backend(backend))
+
+
 # ---------------------------------------------------------------------------
 # Crash & recovery
 # ---------------------------------------------------------------------------
@@ -313,135 +306,198 @@ def crash(nvm: WaveState) -> WaveState:
     return nvm
 
 
-@jax.jit
-def recover(nvm: WaveState) -> WaveState:
+def _recover_impl(nvm: WaveState, b: QueueBackend) -> WaveState:
     """Vectorized Algorithm 3 recovery (lines 58-83) over every allocated
-    segment + Algorithm 5 list recovery (last = max allocated segment)."""
+    segment + Algorithm 5 list recovery (last = max allocated segment).
+    The per-segment Head/Tail reductions run through the backend's
+    ``recover_scan``; the cell re-initialization is vectorized here."""
     S, R = nvm.vals.shape
-
-    def recover_segment(vals, idxs, safes, mirrors, mirror_seg, seg_id, allocated):
-        occupied = vals != BOT
-        # line 60: Head <- max over this segment's persisted mirrors
-        mine = mirror_seg == seg_id
-        head0 = jnp.max(jnp.where(mine, mirrors, 0))
-        # lines 61-68: Tail from max persisted index
-        t_occ = jnp.where(occupied, idxs + 1, 0)
-        t_emp = jnp.where((~occupied) & (idxs >= R), idxs - R + 1, 0)
-        tail0 = jnp.maximum(jnp.max(t_occ), jnp.max(t_emp)).astype(jnp.int32)
-        empty_q = head0 > tail0
-        tail1 = jnp.where(empty_q, head0, tail0)
-        # lines 71-75: push Head past persisted dequeue transitions in range
-        u = jnp.arange(R, dtype=jnp.int32)
-        live = jnp.minimum(jnp.maximum(tail1 - head0, 0), R)
-        offset = (u - head0) % R
-        in_range = offset < live
-        mx_cand = jnp.where(in_range & (~occupied), idxs - R + 1, head0)
-        head1 = jnp.maximum(head0, jnp.max(mx_cand))
-        # lines 76-80: pull Head to the smallest occupied index in range
-        live2 = jnp.minimum(jnp.maximum(tail1 - head1, 0), R)
-        offset2 = (u - head1) % R
-        in_range2 = offset2 < live2
-        mn_cand = jnp.where(in_range2 & occupied & (idxs >= head1), idxs, tail1)
-        mn = jnp.min(mn_cand)
-        head2 = jnp.where(empty_q, head0, jnp.where(mn < tail1, mn, head1))
-        tail2 = jnp.where(empty_q, head0, tail1)
-        # lines 81-82: re-initialize cells outside the live range
-        live3 = jnp.minimum(jnp.maximum(tail2 - head2, 0), R)
-        offset3 = (u - head2) % R
-        dead = offset3 >= live3
-        # unwrapped backward position for a dead cell u: i = head-1-((head-1-u) mod R)
-        i_unwrapped = head2 - 1 - ((head2 - 1 - u) % R)
-        new_idx = jnp.where(dead, i_unwrapped + R, idxs)
-        new_val = jnp.where(dead, BOT, vals)
-        # line 83: all safe bits set
-        new_safe = jnp.ones_like(safes)
-        # unallocated segments stay pristine
-        new_idx = jnp.where(allocated, new_idx, u)
-        new_val = jnp.where(allocated, new_val, BOT)
-        head2 = jnp.where(allocated, head2, 0)
-        tail2 = jnp.where(allocated, tail2, 0)
-        return new_val, new_idx, new_safe, head2, tail2
-
     seg_ids = jnp.arange(S, dtype=jnp.int32)
-    vals, idxs, safes, heads, tails = jax.vmap(
-        recover_segment, in_axes=(0, 0, 0, None, None, 0, 0)
-    )(nvm.vals, nvm.idxs, nvm.safes, nvm.mirrors, nvm.mirror_seg, seg_ids, nvm.allocated)
+    # line 60: per-segment Head <- max over this segment's persisted mirrors
+    mine = nvm.mirror_seg[None, :] == seg_ids[:, None]          # [S, P]
+    head0 = jnp.max(jnp.where(mine, nvm.mirrors[None, :], 0), axis=1)
+    heads, tails = jax.vmap(b.recover_scan)(nvm.vals, nvm.idxs, head0)
+    # unallocated segments stay pristine
+    heads = jnp.where(nvm.allocated, heads, 0).astype(jnp.int32)
+    tails = jnp.where(nvm.allocated, tails, 0).astype(jnp.int32)
+    # lines 81-82: re-initialize cells outside the live range
+    u = jnp.arange(R, dtype=jnp.int32)[None, :]
+    live = jnp.minimum(jnp.maximum(tails - heads, 0), R)[:, None]
+    offset = (u - heads[:, None]) % R
+    dead = offset >= live
+    # unwrapped backward position for a dead cell u: i = head-1-((head-1-u) mod R)
+    i_unwrapped = heads[:, None] - 1 - ((heads[:, None] - 1 - u) % R)
+    new_idx = jnp.where(dead, i_unwrapped + R, nvm.idxs)
+    new_val = jnp.where(dead, BOT, nvm.vals)
+    alloc = nvm.allocated[:, None]
+    new_idx = jnp.where(alloc, new_idx, jnp.broadcast_to(u, (S, R)))
+    new_val = jnp.where(alloc, new_val, BOT)
+    # line 83: all safe bits set
+    new_safe = jnp.ones_like(nvm.safes)
     # Algorithm 5 list recovery: Last = furthest allocated segment; First
     # stays (recovery never moves First; drained segments are skipped by the
     # empty-advance rule during normal operation).
     last = jnp.max(jnp.where(nvm.allocated, seg_ids, 0)).astype(jnp.int32)
     first = jnp.minimum(nvm.first, last)
-    st = WaveState(
-        vals=vals, idxs=idxs, safes=safes, heads=heads, tails=tails,
+    return WaveState(
+        vals=new_val, idxs=new_idx, safes=new_safe, heads=heads, tails=tails,
         closed=nvm.closed, allocated=nvm.allocated,
         first=first, last=last,
-        mirrors=heads[jnp.minimum(nvm.mirror_seg, S - 1)] * 0 + nvm.mirrors,
-        mirror_seg=nvm.mirror_seg,
+        mirrors=nvm.mirrors, mirror_seg=nvm.mirror_seg,
     )
-    return st
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def recover(nvm: WaveState, backend: BackendLike = "jnp") -> WaveState:
+    return _recover_impl(nvm, get_backend(backend))
 
 
 # ---------------------------------------------------------------------------
-# Convenience driver (host loop): run op batches to completion
+# Convenience driver: scan-batched host loop
 # ---------------------------------------------------------------------------
+
+
+def quantize_waves(k_needed: int, K: int) -> int:
+    """Scan length for a k_needed-wave demand: the next power of two, capped
+    at K.  Small requests (the serving hot path dequeues a handful of ids)
+    run 1-2 waves instead of K, while the jit cache sees at most log2(K)+1
+    distinct scan lengths instead of one per demand size."""
+    k = 1
+    while k < min(max(k_needed, 1), K):
+        k *= 2
+    return min(k, K)
+
+
+def plan_waves(remaining: int, K: int, W: int) -> np.ndarray:
+    """Partition ``remaining`` dequeue demand into per-wave lane counts over
+    a quantized number of waves (trailing zero-lane waves are cheap:
+    all-idle lanes, no cells touched)."""
+    k_used = quantize_waves(-(-remaining // W), K)
+    counts = np.zeros((k_used,), np.int32)
+    rem = remaining
+    for k in range(k_used):
+        counts[k] = min(W, rem)
+        rem -= counts[k]
+        if rem == 0:
+            break
+    return counts
+
+
+def fold_dequeue_block(lane_vals: np.ndarray):
+    """Shared per-wave dequeue bookkeeping (WaveQueue and the fabric):
+    (delivered_items, touched_cell_pwbs, delivered_count) for one wave's
+    active lanes.  The Head-mirror line pwb (+1 per wave) and the psync are
+    added by the caller, once per wave."""
+    items = [int(v) for v in lane_vals if v >= 0]
+    return items, int((lane_vals != IDLE_V).sum()), len(items)
+
+
+def state_empty(first: int, last: int, heads, tails) -> bool:
+    """The CRQ "Tail <= h+1" emptiness check lifted to the driver: every
+    lane saw EMPTY, and the single live segment holds nothing."""
+    return first == last and int(heads[first]) >= int(tails[first])
+
+
+def fold_enqueue_results(chunk, rows, oks, submitted, W: int):
+    """Shared retry bookkeeping for the halting enqueue scan (used by both
+    WaveQueue and the fabric): items of the submitted rows that failed are
+    retried BEFORE anything scheduled after them.
+
+    Returns (retry_items, ok_flat, taken, active_wave_count)."""
+    n_sub = int(np.asarray(submitted).sum())
+    taken = min(len(chunk), n_sub * W)
+    ok_flat = np.asarray(oks)[:n_sub].reshape(-1)[:taken]
+    retry = [it for it, o in zip(chunk[:taken], ok_flat) if not o]
+    active = sum(1 for k in range(n_sub) if (np.asarray(rows[k]) >= 0).any())
+    return retry, ok_flat, taken, active
 
 
 class WaveQueue:
-    """Host-side convenience wrapper: retries RETRY lanes across waves.
+    """Host-side convenience wrapper: runs K waves per jit call
+    (``enqueue_scan`` / ``dequeue_scan``) and retries RETRY lanes across
+    calls.
 
-    This is the single-shard engine used by tests/benchmarks; the sharded
-    pipeline (repro.pipeline) runs `wave_step` under shard_map."""
+    This is the single-queue engine; ``repro.core.fabric.ShardedWaveQueue``
+    stacks Q of them behind one interface.  ``backend`` names a registered
+    ``QueueBackend`` ("jnp" or "pallas").
+
+    Persistence accounting (``persist_stats``): per consumer shard, pwbs =
+    flushed cache lines (one ring cell per completed op + one Head-mirror
+    line per dequeue wave), psyncs = one drain per wave -- the wave-batched
+    version of the paper's pwb+psync pair per operation."""
 
     def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
-                 use_kernels: bool = False):
+                 backend: BackendLike = "jnp", waves_per_call: int = 8):
         self.S, self.R, self.P, self.W = S, R, P, W
-        self.use_kernels = use_kernels
+        self.backend = backend
+        self.waves_per_call = max(1, waves_per_call)
         self.vol = init_state(S, R, P)
         self.nvm = init_state(S, R, P)
+        self.pwbs = np.zeros((P,), np.int64)
+        self.psyncs = np.zeros((P,), np.int64)
+        self.ops = np.zeros((P,), np.int64)
 
     def step(self, enq_vals, deq_mask, shard: int = 0):
+        """One raw wave (no batching, no persist accounting)."""
         ev = jnp.asarray(enq_vals, jnp.int32)
         dm = jnp.asarray(deq_mask, bool)
         self.vol, self.nvm, ok, out = wave_step(
             self.vol, self.nvm, ev, dm, jnp.int32(shard),
-            use_kernels=self.use_kernels,
+            backend=self.backend,
         )
         return ok, out
 
     def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
-        """Enqueue a list of item handles (ints >= 0); retries until done."""
-        pending = list(items)
+        """Enqueue a list of item handles (ints >= 0); retries until done.
+        Runs up to ``waves_per_call`` waves per device call."""
+        pending = [int(x) for x in items]
         waves = 0
+        K, W = self.waves_per_call, self.W
         while pending and waves < max_waves:
-            batch = pending[: self.W]
-            ev = jnp.full((self.W,), -1, jnp.int32).at[: len(batch)].set(
-                jnp.asarray(batch, jnp.int32))
-            ok, _ = self.step(ev, jnp.zeros((self.W,), bool), shard)
-            okl = jax.device_get(ok)[: len(batch)]
-            pending = [b for b, o in zip(batch, okl) if not o] + pending[len(batch):]
-            waves += 1
+            k_used = quantize_waves(-(-len(pending) // W), K)
+            chunk = pending[:k_used * W]
+            rows = np.full((k_used, W), -1, np.int32)
+            rows.reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
+            self.vol, self.nvm, oks, submitted = enqueue_scan(
+                self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
+                backend=self.backend)
+            retry, ok_flat, taken, active_waves = fold_enqueue_results(
+                chunk, rows, jax.device_get(oks), jax.device_get(submitted),
+                W)
+            pending = retry + pending[taken:]
+            waves += max(active_waves, 1)
+            self.pwbs[shard] += int(ok_flat.sum())
+            self.ops[shard] += int(ok_flat.sum())
+            self.psyncs[shard] += active_waves
         assert not pending, "queue full: could not enqueue everything"
         return waves
 
     def dequeue_n(self, n, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue until n items obtained or the queue is EMPTY."""
-        got, waves = [], 0
+        """Dequeue until n items obtained or the queue is EMPTY.  Partitions
+        the remaining demand over up to ``waves_per_call`` waves per device
+        call (total active lanes <= remaining, so never over-dequeues)."""
+        got: List[int] = []
+        waves = 0
+        K, W = self.waves_per_call, self.W
         while len(got) < n and waves < max_waves:
-            w = min(self.W, n - len(got))
-            dm = jnp.zeros((self.W,), bool).at[:w].set(True)
-            _, out = self.step(jnp.full((self.W,), -1, jnp.int32), dm, shard)
-            outl = jax.device_get(out)[:w]
-            got.extend(int(v) for v in outl if v >= 0)
-            waves += 1
-            if all(v == EMPTY_V for v in outl):
-                # every lane found the segment drained: truly EMPTY only if
-                # this was the last segment and it holds nothing (the CRQ
-                # "Tail <= h+1" check, lifted to the driver)
-                first = int(jax.device_get(self.vol.first))
-                last = int(jax.device_get(self.vol.last))
-                if first == last and int(
-                    jax.device_get(self.vol.heads[first])
-                ) >= int(jax.device_get(self.vol.tails[first])):
+            counts = plan_waves(n - len(got), K, W)
+            self.vol, self.nvm, outs = dequeue_scan(
+                self.vol, self.nvm, jnp.asarray(counts), jnp.int32(shard),
+                W, backend=self.backend)
+            outl = np.asarray(jax.device_get(outs))
+            act = np.concatenate([outl[k, :c] for k, c in enumerate(counts)
+                                  if c > 0])
+            items, touched, delivered = fold_dequeue_block(act)
+            got.extend(items)
+            active_waves = int((counts > 0).sum())
+            waves += active_waves
+            self.pwbs[shard] += touched + active_waves
+            self.psyncs[shard] += active_waves
+            self.ops[shard] += delivered
+            if (act == EMPTY_V).all():
+                vol = jax.device_get(self.vol)
+                if state_empty(int(vol.first), int(vol.last),
+                               vol.heads, vol.tails):
                     break
         return got, waves
 
@@ -450,6 +506,15 @@ class WaveQueue:
         return out
 
     def crash_and_recover(self):
-        self.vol = recover(crash(self.nvm))
+        self.vol = recover(crash(self.nvm), backend=self.backend)
         self.nvm = self.vol
         return self.vol
+
+    def persist_stats(self) -> dict:
+        ops = np.maximum(self.ops, 1)
+        return {
+            "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
+            "ops": self.ops.copy(),
+            "pwbs_per_op": (self.pwbs / ops),
+            "psyncs_per_op": (self.psyncs / ops),
+        }

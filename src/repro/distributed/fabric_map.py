@@ -1,0 +1,65 @@
+"""Mesh placement for the sharded queue fabric.
+
+The fabric's stacked ``WaveState`` has a leading queue axis of length Q;
+each internal queue is fully independent (no cross-queue collectives in the
+wave step), so placement is pure data parallelism: ``shard_map`` the fused
+wave step over a "queues" mesh axis and every device steps its Q/ndev local
+queues with the vmapped engine.  On a single host this degenerates to the
+plain vmap; on a pod each queue shard lives (and persists) device-local,
+which is exactly the paper's low-contention discipline lifted to the mesh:
+no device ever touches another device's Head/Tail or mirrors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.backend import BackendLike, get_backend
+from repro.core.wave import _wave_step
+
+
+def queue_mesh(n_devices: Optional[int] = None, axis: str = "queues") -> Mesh:
+    """1-D mesh over the first n available devices (all by default)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def make_sharded_fabric_step(mesh: Mesh, axis: str = "queues",
+                             backend: BackendLike = "jnp"):
+    """Build a jitted fused wave step with the queue axis sharded over
+    ``mesh``.  Signature matches ``fabric.fabric_step``:
+    (vol, nvm, enq_vals[Q, W], deq_mask[Q, W], shard) ->
+    (vol', nvm', enq_ok[Q, W], deq_out[Q, W]); the mesh size must divide Q
+    (each device steps Q/ndev queues locally).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    b = get_backend(backend)
+    spec = P(axis)
+
+    def local_step(vol, nvm, enq_vals, deq_mask, shard):
+        # each device holds Q/ndev queues: vmap the engine over them
+        return jax.vmap(
+            lambda v, n, e, d: _wave_step(v, n, e, d, shard[0], b)
+        )(vol, nvm, enq_vals, deq_mask)
+
+    stepped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, P(None)),
+        out_specs=(spec, spec, spec, spec),
+    )
+
+    @jax.jit
+    def sharded_fabric_step(vol, nvm, enq_vals, deq_mask, shard):
+        return stepped(vol, nvm, jnp.asarray(enq_vals, jnp.int32),
+                       jnp.asarray(deq_mask, bool),
+                       jnp.asarray(shard, jnp.int32).reshape(1))
+        # no collectives anywhere above: queue shards are device-local
+
+    return sharded_fabric_step

@@ -15,24 +15,29 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wave import EMPTY_V, WaveQueue
+from repro.core.fabric import ShardedWaveQueue
 
 
 class PersistentDataPipeline:
     """Single-process reference implementation (the multi-host version runs
-    one pipeline shard per data-parallel worker; shard id = mirror id)."""
+    one pipeline shard per data-parallel worker; shard id = mirror id).
+
+    ``n_queues`` sharded queues carry the handles (MultiFIFO: per-queue FIFO,
+    round-robin across queues -- sample order within a batch is already
+    shuffled upstream, so the relaxation is free throughput)."""
 
     def __init__(self, source: Iterator, batch_size: int, seq_len: int,
                  slab_capacity: int = 4096, S: int = 32, R: int = 256,
-                 W: int = 64, n_shards: int = 1):
+                 W: int = 64, n_shards: int = 1, n_queues: int = 1,
+                 backend: str = "jnp"):
         self.source = source
         self.batch_size = batch_size
         self.seq_len = seq_len
-        self.queue = WaveQueue(S=S, R=R, P=n_shards, W=W)
+        self.queue = ShardedWaveQueue(Q=n_queues, S=S, R=R, P=n_shards, W=W,
+                                      backend=backend)
         self.slab = np.zeros((slab_capacity, seq_len + 1), np.int32)
         self.slab_nvm = np.zeros_like(self.slab)
         self.slab_capacity = slab_capacity
@@ -92,5 +97,4 @@ class PersistentDataPipeline:
         self._stash = []
 
     def backlog(self) -> int:
-        v = self.queue.vol
-        return int(sum(jax.device_get(v.tails - v.heads)))
+        return self.queue.backlog()

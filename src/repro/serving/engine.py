@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wave import WaveQueue
+from repro.core.fabric import ShardedWaveQueue
 from repro.distributed.steps import make_serve_step
 from repro.models.transformer import Model
 
@@ -33,12 +33,16 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params, max_batch: int = 4,
-                 max_len: int = 256, queue_depth: int = 64):
+                 max_len: int = 256, queue_depth: int = 64,
+                 queue_shards: int = 2, queue_backend: str = "jnp"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.queue = WaveQueue(S=8, R=queue_depth, W=16)
+        # admission queue: the sharded fabric (requests are independent, so
+        # the MultiFIFO relaxation across shards is invisible to clients)
+        self.queue = ShardedWaveQueue(Q=queue_shards, S=8, R=queue_depth,
+                                      W=16, backend=queue_backend)
         self.requests: Dict[int, Request] = {}
         self._rid = 0
         # decode slots
@@ -131,10 +135,7 @@ class ServingEngine:
         return self.completed
 
     def queue_backlog(self) -> int:
-        v = self.queue.vol
-        d = np.asarray(jax.device_get(v.tails)) - np.asarray(
-            jax.device_get(v.heads))
-        return int(np.maximum(d, 0).sum())
+        return self.queue.backlog()
 
     # -- fault tolerance -------------------------------------------------------------
 

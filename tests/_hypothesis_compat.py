@@ -1,0 +1,86 @@
+"""Hypothesis import shim.
+
+The tier-1 environment does not guarantee ``hypothesis`` is installed.  When
+it is, this module re-exports the real thing and the full property tests
+run.  When it is not, a minimal fallback keeps the suite collectable and
+runs each ``@given`` test as a bounded randomized smoke test (deterministic
+per-test seed, at most ``_FALLBACK_MAX_EXAMPLES`` examples) -- weaker than
+real shrinking-equipped hypothesis, but the same assertions on the same
+sampled space.
+
+Only the strategies the suite uses are shimmed: ``st.integers`` and
+``st.sampled_from`` (plus ``booleans`` for good measure).
+"""
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    _FALLBACK_MAX_EXAMPLES = 8
+
+    class HealthCheck:  # type: ignore[no-redef]
+        too_slow = "too_slow"
+        filter_too_much = "filter_too_much"
+        data_too_large = "data_too_large"
+        function_scoped_fixture = "function_scoped_fixture"
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: rng.choice(pool))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()  # type: ignore[assignment]
+
+    def settings(**cfg):  # type: ignore[no-redef]
+        def deco(fn):
+            merged = dict(getattr(fn, "_shim_settings", {}))
+            merged.update(cfg)
+            fn._shim_settings = merged
+            return fn
+        return deco
+
+    def given(**strategies):  # type: ignore[no-redef]
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_shim_settings", {})
+                n = min(int(cfg.get("max_examples", _FALLBACK_MAX_EXAMPLES)),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(
+                    zlib.crc32(fn.__qualname__.encode("utf-8")))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the strategy-drawn params from pytest's fixture resolver
+            # (real hypothesis does the same signature rewrite)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,11 @@
+"""Make `repro` importable without PYTHONPATH=src (pip install -e . also
+works via pyproject.toml) and make the tests directory importable for the
+`_hypothesis_compat` shim."""
+import os
+import sys
+
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_TESTS), "src")
+for _p in (_SRC, _TESTS):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

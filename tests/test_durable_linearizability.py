@@ -10,8 +10,7 @@ execution must satisfy:
 import random
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.harness import (drain, pairs_workload, random_schedule,
                                 random_workload, run_epoch)

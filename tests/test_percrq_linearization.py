@@ -9,8 +9,7 @@ import itertools
 import random
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.crq import CRQ
 from repro.core.harness import pairs_workload, random_schedule, run_epoch

@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.wave import (EMPTY_V, IDLE_V, RETRY_V, WaveQueue, WaveState,
                              crash, init_state, recover, wave_step)
@@ -101,8 +100,8 @@ def test_durability_under_random_traffic(seed, crash_step):
 
 @pytest.mark.parametrize("S,R,W", [(4, 32, 8), (4, 64, 16)])
 def test_kernel_path_equivalent(S, R, W):
-    """use_kernels=True (Pallas interpret) must produce bit-identical states
-    and results to the pure-jnp path."""
+    """backend="pallas" (interpret mode) must produce bit-identical states
+    and results to the pure-jnp backend."""
     rng = random.Random(0)
     vol_a = nvm_a = init_state(S, R, 1)
     vol_b = nvm_b = init_state(S, R, 1)
@@ -116,9 +115,9 @@ def test_kernel_path_equivalent(S, R, W):
         dm = jnp.zeros((W,), bool).at[W // 2:W // 2 + n_d].set(True)
         shard = jnp.int32(0)
         vol_a, nvm_a, ok_a, out_a = wave_step(vol_a, nvm_a, ev, dm, shard,
-                                              use_kernels=False)
+                                              backend="jnp")
         vol_b, nvm_b, ok_b, out_b = wave_step(vol_b, nvm_b, ev, dm, shard,
-                                              use_kernels=True)
+                                              backend="pallas")
         np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_b))
         np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
         for fa, fb, name in zip(vol_a, vol_b, WaveState._fields):

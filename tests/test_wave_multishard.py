@@ -7,8 +7,7 @@ import random
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.wave import WaveQueue, recover, crash
 
