@@ -1,16 +1,21 @@
 """Wall-clock throughput of the wave engine / sharded fabric (real JAX
-timings on this host), swept over queue backend (jnp vs Pallas-interpret)
-and shard count (Q internal queues behind one endpoint).  Two measurements
-per configuration:
+timings on this host), swept over queue backend (jnp vs Pallas-interpret),
+shard count (Q internal queues behind one endpoint) and DRIVER:
 
   * raw fused-wave latency (``fabric_step``: one jit call, Q x W enqueues +
-    Q x W dequeues),
-  * end-to-end driver throughput (``enqueue_all`` + ``dequeue_n``: includes
-    the scan-batched host loop), at EQUAL TOTAL OPS across configurations --
-    the number the serving/pipeline consumers actually see.
+    Q x W dequeues, state buffers donated -- steady-state in-place stepping),
+  * end-to-end driver throughput (``enqueue_all`` + ``dequeue_n``) for BOTH
+    drivers at EQUAL TOTAL OPS:
+      - ``wave_driver_host/...``  -- the PR-1 scan-batched host loop
+        (device_get + backlog sync per round),
+      - ``wave_driver/...``       -- the device-resident while_loop drivers
+        (one device call + one sync per batch; core/driver.py).
+    The host rows are the baseline the ``claim_device_driver_2x`` check in
+    benchmarks/run.py measures against.
 
 Recovery cost is timed once per backend on the Q=max fabric (one vectorized
-recovery scan across every shard)."""
+recovery scan across every shard).  Every row reports ``us_per_call`` (one
+jit call for the raw wave; one whole batch for the drivers)."""
 from __future__ import annotations
 
 import time
@@ -19,7 +24,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.fabric import ShardedWaveQueue, fabric_init, fabric_recover, fabric_step
+from repro.core.fabric import (ShardedWaveQueue, fabric_init, fabric_recover,
+                               fabric_step)
 from repro.core.wave import WaveQueue
 
 
@@ -32,9 +38,28 @@ def _time(fn, n: int) -> float:
     return (time.perf_counter() - t0) / n
 
 
+def _time_fused(Q, S, r, w, backend, n) -> float:
+    """Steady-state donated stepping: state buffers are rebound every call
+    (fabric_step donates them), so the timed loop updates in place."""
+    vol = fabric_init(Q, S, r, 1)
+    nvm = fabric_init(Q, S, r, 1)
+    ev = jnp.tile(jnp.arange(w, dtype=jnp.int32)[None], (Q, 1))
+    dm = jnp.ones((Q, w), bool)
+    shard = jnp.int32(0)
+    vol, nvm, ok, out = fabric_step(vol, nvm, ev, dm, shard, backend=backend)
+    jax.block_until_ready(out)  # warmup + compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        vol, nvm, ok, out = fabric_step(vol, nvm, ev, dm, shard,
+                                        backend=backend)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
 def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
         backends: Sequence[str] = ("jnp", "pallas"),
-        shard_counts: Sequence[int] = (1, 4)):
+        shard_counts: Sequence[int] = (1, 4),
+        drivers: Sequence[str] = ("host", "device")):
     rows = []
     for backend in backends:
         # Pallas interpret mode traces the kernel body in Python: keep the
@@ -44,47 +69,47 @@ def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
         r = R if backend == "jnp" else min(R, 512)
         for Q in shard_counts:
             # ---- raw fused wave: Q*W enq + Q*W deq per jit call ----------
-            vol = nvm = fabric_init(Q, S, r, 1)
-            ev = jnp.tile(jnp.arange(w, dtype=jnp.int32)[None], (Q, 1))
-            dm = jnp.ones((Q, w), bool)
-            shard = jnp.int32(0)
-
-            def fused(vol=vol, nvm=nvm):
-                v, m, ok, out = fabric_step(vol, nvm, ev, dm, shard,
-                                            backend=backend)
-                return out
-
-            dt = _time(fused, n)
+            dt = _time_fused(Q, S, r, w, backend, n)
             rows.append({
                 "path": f"wave_step/{backend}/q{Q}",
                 "backend": backend, "shards": Q,
-                "us_per_wave": dt * 1e6,
+                "us_per_call": dt * 1e6,
                 "ops_per_sec": 2 * w * Q / dt,
             })
 
-            # ---- end-to-end driver at equal total ops --------------------
+            # ---- end-to-end drivers at equal total ops -------------------
             total_items = (8 if backend == "jnp" else 2) * w * max(shard_counts)
-            if Q == 1:
-                q = WaveQueue(S=S, R=r, W=w, backend=backend)
-            else:
-                q = ShardedWaveQueue(Q=Q, S=S, R=r, W=w, backend=backend)
             items = list(range(total_items))
-            q.enqueue_all(items)              # warm pass: compiles every
-            q.dequeue_n(total_items)          # scan length the drivers use
-            t0 = time.perf_counter()
-            q.enqueue_all(items)
-            got, _ = q.dequeue_n(total_items)
-            dt = time.perf_counter() - t0
-            assert len(got) == total_items, (backend, Q, len(got))
-            st = q.persist_stats()
-            rows.append({
-                "path": f"wave_driver/{backend}/q{Q}",
-                "backend": backend, "shards": Q,
-                "us_per_wave": dt * 1e6 / max(1, total_items // (w * Q)),
-                "ops_per_sec": 2 * total_items / dt,
-                "pwbs_per_op": float(st["pwbs"].sum() / max(1, st["ops"].sum())),
-                "psyncs_per_op": float(st["psyncs"].sum() / max(1, st["ops"].sum())),
-            })
+            for driver in drivers:
+                if Q == 1:
+                    q = WaveQueue(S=S, R=r, W=w, backend=backend,
+                                  driver=driver)
+                else:
+                    q = ShardedWaveQueue(Q=Q, S=S, R=r, W=w, backend=backend,
+                                         driver=driver)
+                q.enqueue_all(items)              # warm pass: compiles every
+                q.dequeue_n(total_items)          # shape the driver uses
+                dt = float("inf")                 # best-of-3: the host VM is
+                for _ in range(3):                # noisy-neighbor jittery
+                    t0 = time.perf_counter()
+                    q.enqueue_all(items)
+                    got, _ = q.dequeue_n(total_items)
+                    dt = min(dt, time.perf_counter() - t0)
+                    assert len(got) == total_items, \
+                        (backend, Q, driver, len(got))
+                st = q.persist_stats()
+                tag = "wave_driver" if driver == "device" else \
+                    "wave_driver_host"
+                rows.append({
+                    "path": f"{tag}/{backend}/q{Q}",
+                    "backend": backend, "shards": Q,
+                    "us_per_call": dt * 1e6 / 2,   # one enqueue + one dequeue batch
+                    "ops_per_sec": 2 * total_items / dt,
+                    "pwbs_per_op": float(st["pwbs"].sum()
+                                         / max(1, st["ops"].sum())),
+                    "psyncs_per_op": float(st["psyncs"].sum()
+                                           / max(1, st["ops"].sum())),
+                })
 
         # ---- recovery wall-clock: one vectorized scan over all shards ----
         Qmax = max(shard_counts)
@@ -95,6 +120,6 @@ def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
         rows.append({
             "path": f"wave_recovery/{backend}/q{Qmax}",
             "backend": backend, "shards": Qmax,
-            "us_per_wave": dt * 1e6, "ops_per_sec": 0.0,
+            "us_per_call": dt * 1e6, "ops_per_sec": 0.0,
         })
     return rows

@@ -1,14 +1,20 @@
 """Queue backend registry: the primitive layer under the wave engine.
 
 The wave engine (core/wave.py, DESIGN.md §3-4) is ONE phase implementation
-parameterized by a ``QueueBackend`` that supplies the three contended
-primitives of the paper's algorithms:
+parameterized by a ``QueueBackend`` that supplies the contended primitives of
+the paper's algorithms:
 
   * ``ticket``      -- batched Fetch&Increment (Algorithm 3 lines 12/30): a
                        wave of W ops obtains pairwise-distinct, gap-free slots,
   * ``transition``  -- the CRQ cell transitions (enqueue / dequeue / empty /
                        unsafe, Algorithm 3 lines 14/34/38/41) applied
                        data-parallel against one ring segment,
+  * ``fused_wave``  -- the whole per-wave persistence path (DESIGN.md §3b):
+                       enqueue transitions + dequeue transitions + the NVM
+                       cell flush, applied to the two LIVE ring rows only
+                       (segments ``last`` and ``first``, already sliced out
+                       of the [S, R] pool by the caller) instead of chaining
+                       full-array scatters,
   * ``recover_scan``-- the per-segment Head/Tail recovery reductions
                        (Algorithm 3 lines 61-80).
 
@@ -58,11 +64,92 @@ class QueueBackend(Protocol):
         Returns (vals', idxs', safes'[bool], enq_ok[W] bool, deq_out[W])."""
         ...
 
+    def fused_wave(self, vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                   nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                   head_L, same_seg,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active,
+                   do_enq: bool = True, do_deq: bool = True,
+                   prefix_lanes: bool = False):
+        """One fused wave over the two LIVE ring rows: enqueue transitions on
+        the ``last`` row (L), dequeue/empty/unsafe transitions on the
+        ``first`` row (F, reading post-enqueue cells when ``same_seg``), and
+        the NVM cell flush of exactly the touched slots.  ``same_seg`` is the
+        traced L == F predicate: the implementation must preserve the
+        aliasing (F reads L's updates, and the returned L/F rows are equal).
+
+        ``do_enq``/``do_deq`` are STATIC flags: the device drivers issue
+        enqueue-only / dequeue-only waves, and an all-idle half never changes
+        state, so skipping it is bit-identical and halves the traced work.
+        ``prefix_lanes`` (STATIC) promises active lanes form a prefix (so
+        the touched slots are one contiguous circular window per phase) --
+        backends may use a faster windowed formulation; results must stay
+        bit-identical.
+
+        Returns (vals_L', idxs_L', safes_L', vals_F', idxs_F', safes_F',
+                 nvals_L', nidxs_L', nsafes_L', nvals_F', nidxs_F',
+                 nsafes_F', enq_ok[W] bool, deq_out[W])."""
+        ...
+
     def recover_scan(self, vals, idxs, head0
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(head, tail) recovered for one ring segment from the persisted
         cells + the mirror-derived head0 (Algorithm 3 lines 61-80)."""
         ...
+
+
+def _enq_predicate(cv, ci, cs, tickets, active, head):
+    """The enqueue CAS predicate (Algorithm 3 line 14) on gathered cells.
+    SINGLE SOURCE: transition, the fused general path, and the prefix
+    window path all evaluate this."""
+    return active & (ci <= tickets) & (cv == BOT) & (cs | (head <= tickets))
+
+
+def _deq_predicates(cv, ci, tickets, active):
+    """The dequeue / empty / unsafe predicates (Algorithm 3 lines
+    34/38/41) on gathered cells.  Returns (adv, unsafe_tr, deq_out):
+    ``adv`` lanes install (safe, t+R, ⊥); ``unsafe_tr`` lanes clear the
+    safe bit."""
+    occupied = cv != BOT
+    deq_tr = active & occupied & (ci == tickets)
+    empty_tr = active & (~occupied) & (ci <= tickets)
+    unsafe_tr = active & occupied & (ci < tickets)
+    deq_out = jnp.where(
+        deq_tr, cv,
+        jnp.where(empty_tr, EMPTY_V,
+                  jnp.where(active, RETRY_V, IDLE_V)))
+    return deq_tr | empty_tr, unsafe_tr, deq_out
+
+
+def _enq_transition(vals, idxs, safes, head, enq_tickets, enq_vals,
+                    enq_active):
+    """Enqueue transitions against one ring row; shared by ``transition``
+    and the fused-wave general path.  Returns (vals', idxs', safes',
+    enq_ok)."""
+    R = vals.shape[0]
+    eslot = enq_tickets % R
+    enq_ok = _enq_predicate(vals[eslot], idxs[eslot], safes[eslot],
+                            enq_tickets, enq_active, head)
+    w = jnp.where(enq_ok, eslot, R)  # R = out-of-range drop
+    vals = vals.at[w].set(jnp.where(enq_ok, enq_vals, 0), mode="drop")
+    idxs = idxs.at[w].set(enq_tickets, mode="drop")
+    safes = safes.at[w].set(True, mode="drop")
+    return vals, idxs, safes, enq_ok
+
+
+def _deq_transition(vals, idxs, safes, deq_tickets, deq_active):
+    """Dequeue / empty / unsafe transitions against one ring row.  Returns
+    (vals', idxs', safes', deq_out)."""
+    R = vals.shape[0]
+    dslot = deq_tickets % R
+    adv, unsafe_tr, deq_out = _deq_predicates(
+        vals[dslot], idxs[dslot], deq_tickets, deq_active)
+    w = jnp.where(adv, dslot, R)
+    vals = vals.at[w].set(BOT, mode="drop")
+    idxs = idxs.at[w].set(deq_tickets + R, mode="drop")
+    u = jnp.where(unsafe_tr, dslot, R)
+    safes = safes.at[u].set(False, mode="drop")
+    return vals, idxs, safes, deq_out
 
 
 class JnpBackend:
@@ -77,35 +164,200 @@ class JnpBackend:
     def transition(self, vals, idxs, safes, head,
                    enq_tickets, enq_vals, enq_active,
                    deq_tickets, deq_active):
-        R = vals.shape[0]
-        # -- enqueue transitions (Algorithm 3 line 14) ----------------------
-        eslot = enq_tickets % R
-        ci, cv, cs = idxs[eslot], vals[eslot], safes[eslot]
-        enq_ok = (enq_active & (ci <= enq_tickets) & (cv == BOT)
-                  & (cs | (head <= enq_tickets)))
-        w = jnp.where(enq_ok, eslot, R)  # R = out-of-range drop
-        vals = vals.at[w].set(jnp.where(enq_ok, enq_vals, 0), mode="drop")
-        idxs = idxs.at[w].set(enq_tickets, mode="drop")
-        safes = safes.at[w].set(True, mode="drop")
-        # -- dequeue transitions read the post-enqueue cells ----------------
-        dslot = deq_tickets % R
-        ci, cv = idxs[dslot], vals[dslot]
-        occupied = cv != BOT
-        deq_tr = deq_active & occupied & (ci == deq_tickets)
-        empty_tr = deq_active & (~occupied) & (ci <= deq_tickets)
-        unsafe_tr = deq_active & occupied & (ci < deq_tickets)
-        deq_out = jnp.where(
-            deq_tr, cv,
-            jnp.where(empty_tr, EMPTY_V,
-                      jnp.where(deq_active, RETRY_V, IDLE_V)))
-        # dequeue + empty transitions both install (s, t+R, ⊥)
-        adv = deq_tr | empty_tr
-        w = jnp.where(adv, dslot, R)
-        vals = vals.at[w].set(BOT, mode="drop")
-        idxs = idxs.at[w].set(deq_tickets + R, mode="drop")
-        u = jnp.where(unsafe_tr, dslot, R)
-        safes = safes.at[u].set(False, mode="drop")
+        vals, idxs, safes, enq_ok = _enq_transition(
+            vals, idxs, safes, head, enq_tickets, enq_vals, enq_active)
+        # dequeue transitions read the post-enqueue cells
+        vals, idxs, safes, deq_out = _deq_transition(
+            vals, idxs, safes, deq_tickets, deq_active)
         return vals, idxs, safes, enq_ok, deq_out
+
+    def _fused_wave_prefix(self, vals_L, idxs_L, safes_L,
+                           vals_F, idxs_F, safes_F,
+                           nvals_L, nidxs_L, nsafes_L,
+                           nvals_F, nidxs_F, nsafes_F,
+                           head_L, same_seg,
+                           enq_tickets, enq_vals, enq_active,
+                           deq_tickets, deq_active,
+                           do_enq: bool, do_deq: bool):
+        """Contiguous-window formulation for prefix-active waves (the device
+        drivers): active lanes 0..k-1 hold consecutive tickets, so the
+        touched slots are the circular window [base, base+W) -- a roll plus
+        static-start slice/update-slice, which the CPU backend vectorizes,
+        instead of the scatters/gathers it scalarizes.  Bit-identical to the
+        general path for prefix-active inputs."""
+        R = vals_L.shape[0]
+        W = enq_tickets.shape[0]
+        enq_ok = jnp.zeros((W,), bool)
+        deq_out = jnp.full((W,), IDLE_V, jnp.int32)
+        if do_enq:
+            be = enq_tickets[0]          # lane 0's ticket == the Tail base
+            t = enq_tickets
+            rv = jnp.roll(vals_L, -be)   # window j <-> ring slot (be+j) % R
+            ri = jnp.roll(idxs_L, -be)
+            rs = jnp.roll(safes_L, -be)
+            enq_ok = _enq_predicate(rv[:W], ri[:W], rs[:W], t, enq_active,
+                                    head_L)
+            rv = rv.at[:W].set(jnp.where(enq_ok, enq_vals, rv[:W]))
+            ri = ri.at[:W].set(jnp.where(enq_ok, t, ri[:W]))
+            rs = rs.at[:W].set(jnp.where(enq_ok, True, rs[:W]))
+            if not do_deq:
+                # half-wave hot path (the enqueue driver): flush straight
+                # from the live rolled rows -- one roll round-trip per array
+                nrv = jnp.roll(nvals_L, -be)
+                nri = jnp.roll(nidxs_L, -be)
+                nrs = jnp.roll(nsafes_L, -be)
+                nrv = nrv.at[:W].set(jnp.where(enq_ok, rv[:W], nrv[:W]))
+                nri = nri.at[:W].set(jnp.where(enq_ok, ri[:W], nri[:W]))
+                nrs = nrs.at[:W].set(jnp.where(enq_ok, rs[:W], nrs[:W]))
+                return (jnp.roll(rv, be), jnp.roll(ri, be), jnp.roll(rs, be),
+                        vals_F, idxs_F, safes_F,
+                        jnp.roll(nrv, be), jnp.roll(nri, be),
+                        jnp.roll(nrs, be),
+                        nvals_F, nidxs_F, nsafes_F, enq_ok, deq_out)
+            vals_L = jnp.roll(rv, be)
+            idxs_L = jnp.roll(ri, be)
+            safes_L = jnp.roll(rs, be)
+        if do_deq:
+            vals_F = jnp.where(same_seg, vals_L, vals_F)
+            idxs_F = jnp.where(same_seg, idxs_L, idxs_F)
+            safes_F = jnp.where(same_seg, safes_L, safes_F)
+            bd = deq_tickets[0]          # lane 0's ticket == the Head base
+            t = deq_tickets
+            rv = jnp.roll(vals_F, -bd)
+            ri = jnp.roll(idxs_F, -bd)
+            rs = jnp.roll(safes_F, -bd)
+            adv, unsafe_tr, deq_out = _deq_predicates(rv[:W], ri[:W], t,
+                                                      deq_active)
+            rv = rv.at[:W].set(jnp.where(adv, BOT, rv[:W]))
+            ri = ri.at[:W].set(jnp.where(adv, t + R, ri[:W]))
+            rs = rs.at[:W].set(jnp.where(unsafe_tr, False, rs[:W]))
+            touched = deq_out != IDLE_V
+            if not do_enq:
+                # half-wave hot path (the dequeue driver): flush straight
+                # from the live rolled rows
+                nrv = jnp.roll(nvals_F, -bd)
+                nri = jnp.roll(nidxs_F, -bd)
+                nrs = jnp.roll(nsafes_F, -bd)
+                nrv = nrv.at[:W].set(jnp.where(touched, rv[:W], nrv[:W]))
+                nri = nri.at[:W].set(jnp.where(touched, ri[:W], nri[:W]))
+                nrs = nrs.at[:W].set(jnp.where(touched, rs[:W], nrs[:W]))
+                vals_F = jnp.roll(rv, bd)
+                idxs_F = jnp.roll(ri, bd)
+                safes_F = jnp.roll(rs, bd)
+                nvals_F = jnp.roll(nrv, bd)
+                nidxs_F = jnp.roll(nri, bd)
+                nsafes_F = jnp.roll(nrs, bd)
+                return (jnp.where(same_seg, vals_F, vals_L),
+                        jnp.where(same_seg, idxs_F, idxs_L),
+                        jnp.where(same_seg, safes_F, safes_L),
+                        vals_F, idxs_F, safes_F,
+                        jnp.where(same_seg, nvals_F, nvals_L),
+                        jnp.where(same_seg, nidxs_F, nidxs_L),
+                        jnp.where(same_seg, nsafes_F, nsafes_L),
+                        nvals_F, nidxs_F, nsafes_F, enq_ok, deq_out)
+            vals_F = jnp.roll(rv, bd)
+            idxs_F = jnp.roll(ri, bd)
+            safes_F = jnp.roll(rs, bd)
+            vals_L = jnp.where(same_seg, vals_F, vals_L)
+            idxs_L = jnp.where(same_seg, idxs_F, idxs_L)
+            safes_L = jnp.where(same_seg, safes_F, safes_L)
+        # -- both-halves NVM flush (parity/raw callers; the drivers take the
+        #    early returns above): reads the FINAL vol rows, so the windows
+        #    must be re-sliced after the same-segment folds ----------------
+        if do_enq:
+            fv = jnp.roll(vals_L, -be)[:W]
+            fi = jnp.roll(idxs_L, -be)[:W]
+            fs = jnp.roll(safes_L, -be)[:W]
+            nrv = jnp.roll(nvals_L, -be)
+            nri = jnp.roll(nidxs_L, -be)
+            nrs = jnp.roll(nsafes_L, -be)
+            nrv = nrv.at[:W].set(jnp.where(enq_ok, fv, nrv[:W]))
+            nri = nri.at[:W].set(jnp.where(enq_ok, fi, nri[:W]))
+            nrs = nrs.at[:W].set(jnp.where(enq_ok, fs, nrs[:W]))
+            nvals_L = jnp.roll(nrv, be)
+            nidxs_L = jnp.roll(nri, be)
+            nsafes_L = jnp.roll(nrs, be)
+        if do_deq:
+            nvals_F = jnp.where(same_seg, nvals_L, nvals_F)
+            nidxs_F = jnp.where(same_seg, nidxs_L, nidxs_F)
+            nsafes_F = jnp.where(same_seg, nsafes_L, nsafes_F)
+            fv = jnp.roll(vals_F, -bd)[:W]
+            fi = jnp.roll(idxs_F, -bd)[:W]
+            fs = jnp.roll(safes_F, -bd)[:W]
+            nrv = jnp.roll(nvals_F, -bd)
+            nri = jnp.roll(nidxs_F, -bd)
+            nrs = jnp.roll(nsafes_F, -bd)
+            nrv = nrv.at[:W].set(jnp.where(touched, fv, nrv[:W]))
+            nri = nri.at[:W].set(jnp.where(touched, fi, nri[:W]))
+            nrs = nrs.at[:W].set(jnp.where(touched, fs, nrs[:W]))
+            nvals_F = jnp.roll(nrv, bd)
+            nidxs_F = jnp.roll(nri, bd)
+            nsafes_F = jnp.roll(nrs, bd)
+            nvals_L = jnp.where(same_seg, nvals_F, nvals_L)
+            nidxs_L = jnp.where(same_seg, nidxs_F, nidxs_L)
+            nsafes_L = jnp.where(same_seg, nsafes_F, nsafes_L)
+        return (vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                enq_ok, deq_out)
+
+    def fused_wave(self, vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                   nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                   head_L, same_seg,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active,
+                   do_enq: bool = True, do_deq: bool = True,
+                   prefix_lanes: bool = False):
+        if prefix_lanes:
+            return self._fused_wave_prefix(
+                vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                head_L, same_seg, enq_tickets, enq_vals, enq_active,
+                deq_tickets, deq_active, do_enq, do_deq)
+        R = vals_L.shape[0]
+        W = enq_tickets.shape[0]
+        enq_ok = jnp.zeros((W,), bool)
+        deq_out = jnp.full((W,), IDLE_V, jnp.int32)
+        if do_enq:
+            # enqueue transitions on the live `last` row
+            vals_L, idxs_L, safes_L, enq_ok = _enq_transition(
+                vals_L, idxs_L, safes_L, head_L,
+                enq_tickets, enq_vals, enq_active)
+        if do_deq:
+            # dequeue transitions on the live `first` row; when L == F the
+            # dequeues must see the post-enqueue cells
+            vals_F = jnp.where(same_seg, vals_L, vals_F)
+            idxs_F = jnp.where(same_seg, idxs_L, idxs_F)
+            safes_F = jnp.where(same_seg, safes_L, safes_F)
+            dslot = deq_tickets % R
+            vals_F, idxs_F, safes_F, deq_out = _deq_transition(
+                vals_F, idxs_F, safes_F, deq_tickets, deq_active)
+            vals_L = jnp.where(same_seg, vals_F, vals_L)
+            idxs_L = jnp.where(same_seg, idxs_F, idxs_L)
+            safes_L = jnp.where(same_seg, safes_F, safes_L)
+        # -- NVM flush: ONLY the touched cells of the live rows -------------
+        if do_enq:
+            enq_w = jnp.where(enq_ok, enq_tickets % R, R)
+            nvals_L = nvals_L.at[enq_w].set(vals_L[enq_tickets % R],
+                                            mode="drop")
+            nidxs_L = nidxs_L.at[enq_w].set(idxs_L[enq_tickets % R],
+                                            mode="drop")
+            nsafes_L = nsafes_L.at[enq_w].set(safes_L[enq_tickets % R],
+                                              mode="drop")
+        if do_deq:
+            nvals_F = jnp.where(same_seg, nvals_L, nvals_F)
+            nidxs_F = jnp.where(same_seg, nidxs_L, nidxs_F)
+            nsafes_F = jnp.where(same_seg, nsafes_L, nsafes_F)
+            touched = deq_out != IDLE_V
+            deq_w = jnp.where(touched, dslot, R)
+            nvals_F = nvals_F.at[deq_w].set(vals_F[dslot], mode="drop")
+            nidxs_F = nidxs_F.at[deq_w].set(idxs_F[dslot], mode="drop")
+            nsafes_F = nsafes_F.at[deq_w].set(safes_F[dslot], mode="drop")
+            nvals_L = jnp.where(same_seg, nvals_F, nvals_L)
+            nidxs_L = jnp.where(same_seg, nidxs_F, nidxs_L)
+            nsafes_L = jnp.where(same_seg, nsafes_F, nsafes_L)
+        return (vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                enq_ok, deq_out)
 
     def recover_scan(self, vals, idxs, head0):
         R = vals.shape[0]
@@ -149,6 +401,31 @@ class PallasBackend:
             vals, idxs, safes.astype(jnp.int32), head,
             enq_tickets, enq_vals, enq_active, deq_tickets, deq_active)
         return v, i, s != 0, eok != 0, dout
+
+    def fused_wave(self, vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                   nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                   head_L, same_seg,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active,
+                   do_enq: bool = True, do_deq: bool = True,
+                   prefix_lanes: bool = False):
+        # prefix_lanes needs no special handling here: the kernel walks
+        # lanes sequentially in VMEM, so arbitrary lane masks are already
+        # conflict-free stores (no scatter lowering to dodge on TPU).
+        from repro.kernels import ops as kops
+        i32 = jnp.int32
+        (vL, iL, sL, vF, iF, sF, nvL, niL, nsL, nvF, niF, nsF, eok,
+         dout) = kops.wave_fused(
+            vals_L, idxs_L, safes_L.astype(i32),
+            vals_F, idxs_F, safes_F.astype(i32),
+            nvals_L, nidxs_L, nsafes_L.astype(i32),
+            nvals_F, nidxs_F, nsafes_F.astype(i32),
+            head_L, same_seg.astype(i32),
+            enq_tickets, enq_vals, enq_active.astype(i32),
+            deq_tickets, deq_active.astype(i32),
+            do_enq=do_enq, do_deq=do_deq)
+        return (vL, iL, sL != 0, vF, iF, sF != 0,
+                nvL, niL, nsL != 0, nvF, niF, nsF != 0, eok != 0, dout)
 
     def recover_scan(self, vals, idxs, head0):
         from repro.kernels import ops as kops

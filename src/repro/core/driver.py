@@ -1,0 +1,225 @@
+"""Device-resident drivers: the whole retry / work-stealing loop as ONE
+device program (DESIGN.md §3b).
+
+PR 1 removed the per-wave host trip with ``lax.scan`` batching, but the
+driver loop itself still ran on the host: every ``enqueue_all`` /
+``dequeue_n`` iteration paid a device_get of oks/outs (plus a backlog sync
+per fabric dequeue round) to decide what the next call submits.  These
+drivers move that decision onto the device with ``lax.while_loop``:
+
+  * ``device_enqueue_all`` -- in-device retry of failed lanes.  Each round
+    submits the first W not-yet-enqueued items per queue (selection by
+    exclusive prefix-sum over the remaining mask), so a failed item is
+    retried BEFORE anything placed after it -- per-queue FIFO is preserved
+    exactly like the halting host scan.
+  * ``device_dequeue_n`` -- in-device backlog computation + lane
+    reassignment across the Q axis.  Each round snapshots the per-queue
+    backlogs, assigns the remaining demand proportionally (empty shards
+    donate their lanes to loaded shards = work stealing), runs one fused
+    wave over all Q queues, and compacts the delivered items into the output
+    buffer in round-robin service order.  When all backlogs read zero the
+    round degrades to a 1-lane-per-queue probe; the loop exits once a probe
+    comes back all-EMPTY with every queue structurally empty.
+
+Both return their persist accounting (pwbs / ops per queue, rounds =
+fused-wave count = psyncs) as device-side counters, so a batch costs ONE
+device call + ONE host sync regardless of how many waves it takes.  State
+buffers are donated: steady-state driving allocates nothing.
+
+The single-queue variants (``WaveQueue``) reuse the same loop bodies by
+stacking the state to Q=1 inside the jit boundary (a free reshape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import (EMPTY_V, IDLE_V, BackendLike, QueueBackend,
+                                get_backend)
+from repro.core.wave import WaveState, _wave_step
+
+
+def _stack1(st: WaveState) -> WaveState:
+    return jax.tree.map(lambda x: x[None], st)
+
+
+def _unstack1(st: WaveState) -> WaveState:
+    return jax.tree.map(lambda x: x[0], st)
+
+
+def _select_rows(items: jnp.ndarray, done: jnp.ndarray, W: int):
+    """Per queue: wave lanes for the first W remaining items, in order.
+    items/done: [N].  Returns (enq_vals[W], idx[W] = item index per lane,
+    valid where the lane is active).  Formulated as a binary search + W
+    gathers (lane w takes the w-th remaining item) rather than an N-update
+    scatter -- the scatter scalarizes on CPU and costs ~5x the whole wave."""
+    N = items.shape[0]
+    csum = jnp.cumsum((~done).astype(jnp.int32))      # [N] inclusive
+    total = csum[-1]
+    w = jnp.arange(W, dtype=jnp.int32)
+    idx = jnp.searchsorted(csum, w + 1, side="left").astype(jnp.int32)
+    active = w < total
+    ev = jnp.where(active, items[jnp.minimum(idx, N - 1)], -1)
+    return ev, jnp.where(active, idx, N)
+
+
+# ---------------------------------------------------------------------------
+# enqueue: in-device retry, per-queue FIFO preserved
+# ---------------------------------------------------------------------------
+
+
+def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
+                      b: QueueBackend):
+    """items: [Q, N] int32 (-1 = padding).  Returns
+    (vol, nvm, done[Q, N], rounds, pwbs[Q]); ops == pwbs (one flushed cell
+    per completed enqueue), psyncs == rounds (one drain per fused wave)."""
+    Q, N = items.shape
+    dm = jnp.zeros((Q, W), bool)
+
+    def cond(c):
+        _, _, done, rounds, _ = c
+        return jnp.any(~done) & (rounds < max_rounds)
+
+    def body(c):
+        vol, nvm, done, rounds, pwbs = c
+        ev, idx = jax.vmap(_select_rows, in_axes=(0, 0, None))(items, done, W)
+        # enqueue-only half-wave; lanes are prefix-active (the selection
+        # fills lanes 0..k-1), so the windowed fast path applies
+        vol, nvm, ok, _ = jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                          do_enq=True, do_deq=False,
+                                          prefix_lanes=True)
+        )(vol, nvm, ev, dm)
+        # mark the items whose lanes succeeded (W updates, not N gathers)
+        hit = jnp.where(ok & (ev >= 0), idx, N)
+        done = jax.vmap(
+            lambda d, h: d.at[h].set(True, mode="drop"))(done, hit)
+        pwbs = pwbs + jnp.sum(ok & (ev >= 0), axis=1, dtype=jnp.int32)
+        return vol, nvm, done, rounds + 1, pwbs
+
+    init = (vol, nvm, items < 0, jnp.int32(0), jnp.zeros((Q,), jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "backend"),
+                   donate_argnums=(0, 1))
+def fabric_enqueue_all(vol, nvm, items, shard, max_rounds,
+                       W: int, backend: BackendLike = "jnp"):
+    """Fabric entry point: items [Q, N] already placed across queues."""
+    return _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W,
+                             get_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("W", "backend"),
+                   donate_argnums=(0, 1))
+def device_enqueue_all(vol, nvm, items, shard, max_rounds,
+                       W: int, backend: BackendLike = "jnp"):
+    """Single-queue entry point: items [N].  Returns
+    (vol, nvm, done[N], rounds, pwbs)."""
+    vol, nvm, done, rounds, pwbs = _enqueue_all_impl(
+        _stack1(vol), _stack1(nvm), items[None], shard, max_rounds, W,
+        get_backend(backend))
+    return _unstack1(vol), _unstack1(nvm), done[0], rounds, pwbs[0]
+
+
+# ---------------------------------------------------------------------------
+# dequeue: in-device backlog planning + work stealing + compaction
+# ---------------------------------------------------------------------------
+
+
+def _plan_round(vol, remaining, take, W: int):
+    """One round's per-queue lane counts from the live backlog snapshot:
+    proportional share of ``remaining`` over min(backlog, W), greedy
+    rotation top-up, 1-lane probes when every backlog reads zero.
+    Returns (counts[Q] int32, probe bool)."""
+    Q = vol.tails.shape[0]
+    bl = jnp.sum(jnp.maximum(vol.tails - vol.heads, 0), axis=1)  # [Q]
+    probe = jnp.sum(bl) == 0
+    want = jnp.where(probe, jnp.int32(1),
+                     jnp.minimum(bl, W).astype(jnp.int32))
+    ws = jnp.maximum(jnp.sum(want), 1)
+    base = jnp.where(jnp.sum(want) <= remaining, want,
+                     (want * remaining) // ws)
+    # rotation order: empty shards donate their unused lanes to loaded ones
+    order = (take + jnp.arange(Q, dtype=jnp.int32)) % Q
+    room_rot = jnp.take(want - base, order)
+    csum = jnp.cumsum(room_rot) - room_rot
+    left = jnp.maximum(remaining - jnp.sum(base), 0)
+    extra_rot = jnp.clip(left - csum, 0, room_rot)
+    counts = base.at[order].add(extra_rot)
+    return counts.astype(jnp.int32), probe
+
+
+def _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W: int, cap: int,
+                    b: QueueBackend):
+    """Returns (vol, nvm, out[cap], got, rounds, take, pwbs[Q], ops[Q])."""
+    Q = vol.tails.shape[0]
+    lane = jnp.arange(W, dtype=jnp.int32)
+    ev = jnp.full((Q, W), -1, jnp.int32)
+
+    def cond(c):
+        _, _, _, got, rounds, _, _, _, gave_up = c
+        return (got < n) & (~gave_up) & (rounds < max_rounds)
+
+    def body(c):
+        vol, nvm, out, got, rounds, take, pwbs, ops, _ = c
+        counts, probe = _plan_round(vol, n - got, take, W)
+        dmv = lane[None, :] < counts[:, None]
+        # dequeue-only half-wave; lanes are prefix-active (lane < count)
+        vol, nvm, _, outw = jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                          do_enq=False, do_deq=True,
+                                          prefix_lanes=True)
+        )(vol, nvm, ev, dmv)
+        # round-robin service order: rotate queues, lanes stay in order
+        order = (take + jnp.arange(Q, dtype=jnp.int32)) % Q
+        flat = jnp.take(outw, order, axis=0).reshape(-1)
+        fmask = (flat >= 0) & jnp.take(dmv, order, axis=0).reshape(-1)
+        pos = jnp.cumsum(fmask.astype(jnp.int32)) - fmask
+        out = out.at[jnp.where(fmask, got + pos, cap)].set(flat, mode="drop")
+        got = got + jnp.sum(fmask, dtype=jnp.int32)
+        # persist accounting: touched cells + one mirror line per active
+        # queue; the psync is per fused wave (= per round), counted once
+        pwbs = pwbs + jnp.sum((outw != IDLE_V) & dmv, axis=1,
+                              dtype=jnp.int32) + (counts > 0)
+        ops = ops + jnp.sum((outw >= 0) & dmv, axis=1, dtype=jnp.int32)
+        # probe came back all-EMPTY and every queue is structurally empty
+        all_empty = jnp.all(jnp.where(dmv, outw == EMPTY_V, True))
+        first_h = jnp.take_along_axis(vol.heads, vol.first[:, None], 1)[:, 0]
+        first_t = jnp.take_along_axis(vol.tails, vol.first[:, None], 1)[:, 0]
+        se = jnp.all((vol.first == vol.last) & (first_h >= first_t))
+        gave_up = probe & all_empty & se
+        return (vol, nvm, out, got, rounds + 1, (take + 1) % Q, pwbs, ops,
+                gave_up)
+
+    init = (vol, nvm, jnp.full((cap,), -1, jnp.int32), jnp.int32(0),
+            jnp.int32(0), take0, jnp.zeros((Q,), jnp.int32),
+            jnp.zeros((Q,), jnp.int32), jnp.bool_(False))
+    (vol, nvm, out, got, rounds, take, pwbs, ops,
+     _) = jax.lax.while_loop(cond, body, init)
+    return vol, nvm, out, got, rounds, take, pwbs, ops
+
+
+@functools.partial(jax.jit, static_argnames=("W", "cap", "backend"),
+                   donate_argnums=(0, 1))
+def fabric_dequeue_n(vol, nvm, n, take0, shard, max_rounds,
+                     W: int, cap: int, backend: BackendLike = "jnp"):
+    """Fabric entry point.  ``cap`` (static) bounds the output buffer; the
+    caller quantizes it so the jit cache sees O(log n) shapes."""
+    return _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W, cap,
+                           get_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("W", "cap", "backend"),
+                   donate_argnums=(0, 1))
+def device_dequeue_n(vol, nvm, n, take0, shard, max_rounds,
+                     W: int, cap: int, backend: BackendLike = "jnp"):
+    """Single-queue entry point.  Returns
+    (vol, nvm, out[cap], got, rounds, take, pwbs, ops)."""
+    vol, nvm, out, got, rounds, take, pwbs, ops = _dequeue_n_impl(
+        _stack1(vol), _stack1(nvm), n, take0, shard, max_rounds, W, cap,
+        get_backend(backend))
+    return (_unstack1(vol), _unstack1(nvm), out, got, rounds, take,
+            pwbs[0], ops[0])

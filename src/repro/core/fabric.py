@@ -15,9 +15,19 @@ Q-relaxed FIFO -- an item can overtake at most Q-1 later-placed items.
 Consumers that need per-stream FIFO pin a stream to a queue via the
 placement cursor.
 
-Work stealing: ``dequeue_n`` plans each device call from the per-queue
+Work stealing: ``dequeue_n`` plans every wave round from the per-queue
 backlogs and reassigns the lanes of empty shards to loaded ones, so a
-drained shard never idles the wave while siblings hold items.
+drained shard never idles the wave while siblings hold items.  With the
+default ``driver="device"`` that planning happens ON DEVICE
+(``core/driver.py``): backlog snapshot, lane assignment, retry and item
+compaction all run inside one ``lax.while_loop``, so a whole
+``enqueue_all``/``dequeue_n`` batch costs one device call + one host sync
+(the PR-1 host loop paid a backlog sync per round; it survives behind
+``driver="host"`` as the tested reference).
+
+Persistence accounting follows the fused discipline: one psync per fused
+wave ROUND (the whole Q-wide wave drains once), not one per (queue, wave)
+-- see ``persist_stats``.
 """
 from __future__ import annotations
 
@@ -28,12 +38,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import driver as _drv
 from repro.core.backend import BackendLike, get_backend
 from repro.core.wave import (EMPTY_V, WaveState, _dequeue_scan_impl,
                              _enqueue_scan_impl, _recover_impl, _wave_step,
-                             crash, fold_dequeue_block, fold_enqueue_results,
-                             init_state, plan_waves, quantize_waves,
-                             state_empty)
+                             bucket_pow2, crash, fold_dequeue_block,
+                             fold_enqueue_results, init_state, plan_waves,
+                             quantize_waves, state_empty)
 
 
 def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
@@ -44,11 +55,13 @@ def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
         one)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
 def fabric_step(vol, nvm, enq_vals, deq_mask, shard,
                 backend: BackendLike = "jnp"):
     """One fused wave across all Q queues: enq_vals [Q, W], deq_mask [Q, W],
-    shard scalar (the consumer shard driving this wave).  Returns
+    shard scalar (the consumer shard driving this wave).  ``vol``/``nvm``
+    are DONATED (rebind them to the returned states).  Returns
     (vol', nvm', enq_ok[Q, W], deq_out[Q, W])."""
     b = get_backend(backend)
     return jax.vmap(
@@ -56,7 +69,8 @@ def fabric_step(vol, nvm, enq_vals, deq_mask, shard,
     )(vol, nvm, enq_vals, deq_mask)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
 def fabric_enqueue_scan(vol, nvm, rows, shard, backend: BackendLike = "jnp"):
     """K enqueue waves on every queue: rows [Q, K, W].  Per-queue halt-on-
     failure (see wave._enqueue_scan_impl) keeps each internal queue FIFO.
@@ -67,7 +81,8 @@ def fabric_enqueue_scan(vol, nvm, rows, shard, backend: BackendLike = "jnp"):
     )(vol, nvm, rows)
 
 
-@functools.partial(jax.jit, static_argnames=("W", "backend"))
+@functools.partial(jax.jit, static_argnames=("W", "backend"),
+                   donate_argnums=(0, 1))
 def fabric_dequeue_scan(vol, nvm, counts, shard, W: int,
                         backend: BackendLike = "jnp"):
     """K dequeue waves on every queue: counts [Q, K] active lanes per wave.
@@ -81,7 +96,8 @@ def fabric_dequeue_scan(vol, nvm, counts, shard, W: int,
 @functools.partial(jax.jit, static_argnames=("backend",))
 def fabric_recover(nvm, backend: BackendLike = "jnp"):
     """Vectorized recovery of every shard in one call (the per-shard scan of
-    Algorithm 3 lines 58-83, vmapped over the queue axis)."""
+    Algorithm 3 lines 58-83, vmapped over the queue axis).  Cold path: the
+    NVM image is deliberately NOT donated."""
     b = get_backend(backend)
     return jax.vmap(lambda n: _recover_impl(n, b))(nvm)
 
@@ -92,20 +108,29 @@ class ShardedWaveQueue:
 
     Drop-in for ``WaveQueue`` (same enqueue_all / dequeue_n / drain /
     crash_and_recover / persist_stats surface); ``Q=1`` degenerates to a
-    single queue with strict FIFO."""
+    single queue with strict FIFO.  ``driver="device"`` (default) runs the
+    whole batch loop on device (core/driver.py); ``driver="host"`` keeps the
+    PR-1 scan-batched host loop as the tested reference."""
 
     def __init__(self, Q: int = 4, S: int = 16, R: int = 256, P: int = 1,
                  W: int = 64, backend: BackendLike = "jnp",
-                 waves_per_call: int = 8):
+                 waves_per_call: int = 8, driver: str = "device"):
+        assert driver in ("device", "host"), driver
         self.Q, self.S, self.R, self.P, self.W = Q, S, R, P, W
         self.backend = backend
+        self.driver = driver
+        # device drivers batch wider than the consumer-facing W (see
+        # wave.WaveQueue): per-queue FIFO is exact at any width <= R
+        self.device_wave = min(R, max(W, 512))
         self.waves_per_call = max(1, waves_per_call)
         self.vol = fabric_init(Q, S, R, P)
         self.nvm = fabric_init(Q, S, R, P)
         self._place = 0   # round-robin placement cursor (enqueue side)
         self._take = 0    # round-robin service cursor (dequeue side)
         self.pwbs = np.zeros((Q, P), np.int64)
-        self.psyncs = np.zeros((Q, P), np.int64)
+        # one psync per FUSED wave round (the Q-wide wave drains once),
+        # charged to the consumer shard that drove the round
+        self.psyncs = np.zeros((P,), np.int64)
         self.ops = np.zeros((Q, P), np.int64)
 
     # -- raw access -----------------------------------------------------------
@@ -122,12 +147,36 @@ class ShardedWaveQueue:
 
     def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
         """Round-robin place items across the Q internal queues and enqueue
-        them (retrying segment-close failures), K waves per device call."""
-        Q, K, W = self.Q, self.waves_per_call, self.W
+        them (retrying segment-close failures).  Device driver: one call for
+        the whole batch, in-device retry."""
+        Q = self.Q
         pend: List[List[int]] = [[] for _ in range(Q)]
         for i, it in enumerate(items):
             pend[(self._place + i) % Q].append(int(it))
         self._place = (self._place + sum(len(p) for p in pend)) % Q
+        if self.driver == "host":
+            return self._enqueue_all_host(pend, shard, max_waves)
+        if not any(pend):
+            return 0
+        N = bucket_pow2(max(len(p) for p in pend))
+        rows = np.full((Q, N), -1, np.int32)
+        for q in range(Q):
+            rows[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
+        self.vol, self.nvm, done, rounds, pwbs = _drv.fabric_enqueue_all(
+            self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
+            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
+        done, rounds, pwbs = jax.device_get((done, rounds, pwbs))
+        assert bool(np.asarray(done).all()), \
+            "fabric full: could not enqueue everything"
+        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
+        self.ops[:, shard] += np.asarray(pwbs, np.int64)
+        self.psyncs[shard] += int(rounds)
+        return int(rounds)
+
+    def _enqueue_all_host(self, pend: List[List[int]], shard: int,
+                          max_waves: int):
+        """PR-1 host loop: K scan waves per device call, host retry fold."""
+        Q, K, W = self.Q, self.waves_per_call, self.W
         waves = 0
         while any(pend) and waves < max_waves:
             k_used = quantize_waves(-(-max(len(p) for p in pend) // W), K)
@@ -151,7 +200,8 @@ class ShardedWaveQueue:
                 fused = max(fused, active)
                 self.pwbs[q, shard] += int(ok_flat.sum())
                 self.ops[q, shard] += int(ok_flat.sum())
-                self.psyncs[q, shard] += active
+            # the fused wave drains once per round across all Q shards
+            self.psyncs[shard] += max(fused, 1)
             waves += max(fused, 1)
         assert not any(pend), "fabric full: could not enqueue everything"
         return waves
@@ -197,7 +247,31 @@ class ShardedWaveQueue:
 
     def dequeue_n(self, n: int, shard: int = 0, max_waves: int = 10_000):
         """Dequeue up to n items, round-robin across shards with work
-        stealing.  Returns (items, fused_wave_count)."""
+        stealing.  Device driver: backlog planning, lane reassignment and
+        item compaction all run in-device -- one call, one sync.  Returns
+        (items, fused_wave_count)."""
+        if self.driver == "host":
+            return self._dequeue_n_host(n, shard, max_waves)
+        if n <= 0:
+            return [], 0
+        cap = bucket_pow2(n)
+        (self.vol, self.nvm, out, got, rounds, take, pwbs,
+         ops) = _drv.fabric_dequeue_n(
+            self.vol, self.nvm, jnp.int32(n), jnp.int32(self._take),
+            jnp.int32(shard), jnp.int32(max_waves),
+            W=self.device_wave, cap=cap, backend=self.backend)
+        out, got, rounds, take, pwbs, ops = jax.device_get(
+            (out, got, rounds, take, pwbs, ops))
+        self._take = int(take)
+        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
+        self.ops[:, shard] += np.asarray(ops, np.int64)
+        self.psyncs[shard] += int(rounds)
+        return [int(v) for v in out[:int(got)]], int(rounds)
+
+    def _dequeue_n_host(self, n: int, shard: int = 0,
+                        max_waves: int = 10_000):
+        """PR-1 host loop: backlog sync + plan per round, K scan waves per
+        device call."""
         Q, K, W = self.Q, self.waves_per_call, self.W
         got: List[int] = []
         waves = 0
@@ -232,10 +306,12 @@ class ShardedWaveQueue:
                     items, touched, delivered = fold_dequeue_block(lane_vals)
                     got.extend(items)
                     self.pwbs[q, shard] += touched + 1
-                    self.psyncs[q, shard] += 1
                     self.ops[q, shard] += delivered
             self._take = (self._take + 1) % Q
+            # one psync per fused wave: the whole Q-wide wave drains once,
+            # not once per (queue, wave) block
             fused = int((counts > 0).any(axis=0).sum())
+            self.psyncs[shard] += max(fused, 1)
             waves += max(fused, 1)
             act = (np.concatenate(act_all) if act_all
                    else np.empty((0,), np.int32))
@@ -263,7 +339,9 @@ class ShardedWaveQueue:
         """Full-fabric crash: all volatile images lost; every shard's
         recovery scan runs in one vectorized call."""
         self.vol = fabric_recover(crash(self.nvm), backend=self.backend)
-        self.nvm = self.vol
+        # distinct buffers: the drivers donate vol and nvm separately, so
+        # the two images must never alias after recovery
+        self.nvm = jax.tree.map(jnp.copy, self.vol)
         return self.vol
 
     # -- introspection --------------------------------------------------------
@@ -272,13 +350,17 @@ class ShardedWaveQueue:
         return int(self._backlogs().sum())
 
     def persist_stats(self) -> dict:
-        """Per-(queue, shard) pwb/psync/op counts.  The paper's discipline
-        holds per shard: ~1 pwb per completed op (its ring cell) + ~1 pwb
-        per dequeue wave (the Head-mirror line), one psync per wave."""
+        """pwb/op counts per (queue, shard); psyncs per consumer shard,
+        counted per FUSED wave round (the Q-wide wave drains once -- the
+        discipline DESIGN.md §3/§3b documents).  ``psyncs_per_op`` divides
+        each shard's fused-round count by the ops it drove across all
+        queues, broadcast to [Q, P] for per-(queue, shard) inspection."""
         ops = np.maximum(self.ops, 1)
+        ops_shard = np.maximum(self.ops.sum(axis=0), 1)          # [P]
         return {
             "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
             "ops": self.ops.copy(),
             "pwbs_per_op": self.pwbs / ops,
-            "psyncs_per_op": self.psyncs / ops,
+            "psyncs_per_op": np.broadcast_to(
+                (self.psyncs / ops_shard)[None, :], self.ops.shape).copy(),
         }

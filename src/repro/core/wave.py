@@ -23,9 +23,19 @@ persisted ``allocated`` bit plays the role of the persisted next pointer).
 
 State arrays are a pytree => the whole step is jit/vmap/shard_map-able; the
 sharded fabric (core/fabric.py) stacks Q of these states and vmaps the step
-over the queue axis.  ``enqueue_scan`` / ``dequeue_scan`` run K waves per
-jit call with ``lax.scan`` so driver throughput is not bounded by host
-round-trips.
+over the queue axis.  Per wave only the two LIVE segment rows (``last`` and
+``first``) are touched: the backend's ``fused_wave`` runs enqueue +
+dequeue transitions + the NVM cell flush against dynamically-sliced rows,
+so a wave costs two row round-trips instead of a chain of full [S, R]
+scatters (DESIGN.md §3b).  All jit entry points donate the state buffers,
+so steady-state waves update in place and allocate nothing.
+
+Driving is DEVICE-RESIDENT by default: ``WaveQueue`` dispatches whole
+batches to the ``lax.while_loop`` drivers in ``core/driver.py`` (one device
+call + one host sync per ``enqueue_all``/``dequeue_n``, with in-device
+retry and persist counters).  The legacy scan-batched host loop
+(``enqueue_scan`` / ``dequeue_scan``, K waves per jit call) is kept behind
+``driver="host"`` as the reference the device drivers are tested against.
 
 Payloads are int32 handles >= 0 (pointing into a payload slab owned by the
 caller); BOT = -1.  Per-lane dequeue results: >= 0 item, EMPTY_V (queue
@@ -84,76 +94,15 @@ def exclusive_cumsum(mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(m) - m
 
 
+# Row/element access throughout _wave_step is plain dynamic indexing
+# (pool[s] / pool.at[s].set): a masked-select formulation was tried and is
+# SLOWER -- it forces full-pool traffic per access, while dynamic-slice /
+# update-slice on a donated while_loop carry updates in place.
+
+
 # ---------------------------------------------------------------------------
 # One wave, parameterized by backend (core/backend.py)
 # ---------------------------------------------------------------------------
-
-
-def _enqueue_phase(st: WaveState, enq_vals: jnp.ndarray, b: QueueBackend):
-    """Apply a wave of enqueues to segment ``last``.  enq_vals: [W] int32,
-    -1 = inactive lane.  Returns (state, ok[W] bool, slots, failed_any)."""
-    S, R = st.vals.shape
-    L = st.last
-    active = enq_vals >= 0
-    tickets, new_tail = b.ticket(st.tails[L], active)
-    head = st.heads[L]
-    # pre-gates the cell transition cannot see: closed segment, full ring
-    not_full = (tickets - head) < R
-    ea = active & (~st.closed[L]) & not_full
-    W = enq_vals.shape[0]
-    vals_L, idxs_L, safes_L, ok, _ = b.transition(
-        st.vals[L], st.idxs[L], st.safes[L], head,
-        tickets, enq_vals, ea,
-        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), bool),
-    )
-    # every active lane consumed a ticket (FAI semantics): tail advances
-    tails = st.tails.at[L].set(new_tail)
-    # tantrum close: an active lane failed because the ring is full / unsafe
-    must_close = jnp.any(active & (~ok) & ((tickets - head) >= R))
-    closed = st.closed.at[L].set(st.closed[L] | must_close)
-    st = st._replace(
-        vals=st.vals.at[L].set(vals_L),
-        idxs=st.idxs.at[L].set(idxs_L),
-        safes=st.safes.at[L].set(safes_L),
-        tails=tails,
-        closed=closed,
-    )
-    failed_any = jnp.any(active & (~ok))
-    return st, ok, tickets % R, failed_any
-
-
-def _dequeue_phase(st: WaveState, deq_mask: jnp.ndarray, shard: jnp.ndarray,
-                   b: QueueBackend):
-    """Apply a wave of dequeues to segment ``first``.  Returns
-    (state, out[W] int32, touched slots)."""
-    S, R = st.vals.shape
-    F = st.first
-    tickets, new_head = b.ticket(st.heads[F], deq_mask)
-    W = deq_mask.shape[0]
-    vals_F, idxs_F, safes_F, _, out = b.transition(
-        st.vals[F], st.idxs[F], st.safes[F], st.heads[F],
-        jnp.zeros((W,), jnp.int32), jnp.zeros((W,), jnp.int32),
-        jnp.zeros((W,), bool),
-        tickets, deq_mask,
-    )
-    heads = st.heads.at[F].set(new_head)
-    # FixState (Algorithm 3 lines 48-57): dequeuers that overran the tail on
-    # an empty segment push Tail up to Head so later enqueues skip the
-    # exhausted indices (bulk-synchronous CAS analog).
-    tails = st.tails.at[F].set(jnp.maximum(st.tails[F], new_head))
-    # local persistence: this shard's mirror tracks (segment, head)
-    mirrors = st.mirrors.at[shard].set(new_head)
-    mirror_seg = st.mirror_seg.at[shard].set(F)
-    st = st._replace(
-        vals=st.vals.at[F].set(vals_F),
-        idxs=st.idxs.at[F].set(idxs_F),
-        safes=st.safes.at[F].set(safes_F),
-        heads=heads,
-        tails=tails,
-        mirrors=mirrors,
-        mirror_seg=mirror_seg,
-    )
-    return st, out, tickets % R
 
 
 def _advance_segments(st: WaveState) -> WaveState:
@@ -164,7 +113,8 @@ def _advance_segments(st: WaveState) -> WaveState:
     can_append = st.closed[L] & (L + 1 < S)
     new_last = jnp.where(can_append, L + 1, L)
     allocated = st.allocated.at[new_last].set(True)
-    drained = (st.heads[F] >= st.tails[F]) & st.closed[F] & (F < new_last)
+    drained = ((st.heads[F] >= st.tails[F])
+               & st.closed[F] & (F < new_last))
     new_first = jnp.where(drained, F + 1, F)
     return st._replace(last=new_last, first=new_first, allocated=allocated)
 
@@ -176,44 +126,111 @@ def _wave_step(
     deq_mask: jnp.ndarray,   # [W] bool
     shard: jnp.ndarray,      # scalar int32: which shard executes this wave
     b: QueueBackend,
+    do_enq: bool = True,
+    do_deq: bool = True,
+    prefix_lanes: bool = False,
 ) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
     """One bulk-synchronous wave: enqueues, then dequeues, then the
     persistence flush (cells + mirrors + segment headers ONLY -- never the
     global Head/Tail, per the paper's persistence principles).
 
+    The cell work runs through the backend's ``fused_wave`` against the two
+    dynamically-sliced LIVE rows (segments ``last`` = L and ``first`` = F);
+    everything else is [S]/[P]-sized metadata.  Write-back is one
+    dynamic-update-slice per array per live row -- with the state buffers
+    donated at the jit boundary, a steady-state wave never copies the pool.
+
+    ``do_enq``/``do_deq`` (STATIC) trace only one half of the wave: an
+    all-idle half never changes state, so the device drivers' enqueue-only /
+    dequeue-only rounds skip its tickets, transitions and write-backs
+    entirely -- bit-identical, half the work.
+
     Unjitted backend-object core: `wave_step` wraps it for callers; the
-    fabric vmaps it over the queue axis; the scan drivers below loop it.
-
-    Returns (vol', nvm', enq_ok[W], deq_out[W])."""
-    L_before, F_before = vol.last, vol.first
-    vol, enq_ok, enq_slots, _failed = _enqueue_phase(vol, enq_vals, b)
-    vol, deq_out, deq_slots = _dequeue_phase(vol, deq_mask, shard, b)
-    vol = _advance_segments(vol)
-
-    # ---- persistence (the pwb+psync analog) --------------------------------
-    # flush touched enqueue cells on segment L, touched dequeue cells on F
-    R = vol.vals.shape[1]
-    enq_w = jnp.where(enq_ok, enq_slots, R)
-    nvm_vals_L = nvm.vals[L_before].at[enq_w].set(vol.vals[L_before, enq_slots % R], mode="drop")
-    nvm_idxs_L = nvm.idxs[L_before].at[enq_w].set(vol.idxs[L_before, enq_slots % R], mode="drop")
-    nvm_safes_L = nvm.safes[L_before].at[enq_w].set(vol.safes[L_before, enq_slots % R], mode="drop")
-    nvm = nvm._replace(
-        vals=nvm.vals.at[L_before].set(nvm_vals_L),
-        idxs=nvm.idxs.at[L_before].set(nvm_idxs_L),
-        safes=nvm.safes.at[L_before].set(nvm_safes_L),
+    fabric vmaps it over the queue axis; the scan / while_loop drivers loop
+    it.  Returns (vol', nvm', enq_ok[W], deq_out[W])."""
+    S, R = vol.vals.shape
+    L, F = vol.last, vol.first
+    W = enq_vals.shape[0]
+    same = L == F
+    zW = jnp.zeros((W,), jnp.int32)
+    # ---- batched ticketing + the pre-gates the cell transition cannot see
+    head_L = vol.heads[L]
+    if do_enq:
+        active = enq_vals >= 0
+        enq_tickets, new_tail_L = b.ticket(vol.tails[L], active)
+        not_full = (enq_tickets - head_L) < R
+        ea = active & (~vol.closed[L]) & not_full
+    else:
+        enq_tickets, ea = zW, jnp.zeros((W,), bool)
+    if do_deq:
+        head_F = vol.heads[F]
+        deq_tickets, new_head_F = b.ticket(head_F, deq_mask)
+    else:
+        deq_tickets = zW
+    # ---- fused cell work on the live rows (enq + deq + NVM flush) --------
+    (vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+     nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+     enq_ok, deq_out) = b.fused_wave(
+        vol.vals[L], vol.idxs[L], vol.safes[L],
+        vol.vals[F], vol.idxs[F], vol.safes[F],
+        nvm.vals[L], nvm.idxs[L], nvm.safes[L],
+        nvm.vals[F], nvm.idxs[F], nvm.safes[F],
+        head_L, same, enq_tickets, enq_vals, ea, deq_tickets, deq_mask,
+        do_enq=do_enq, do_deq=do_deq, prefix_lanes=prefix_lanes)
+    # ---- metadata: every active lane consumed a ticket (FAI semantics) ---
+    tails, heads, closed = vol.tails, vol.heads, vol.closed
+    mirrors, mirror_seg = vol.mirrors, vol.mirror_seg
+    if do_enq:
+        tails = tails.at[L].set(new_tail_L)
+        # tantrum close: an active lane failed -- the ring is full / unsafe
+        must_close = jnp.any(active & (~enq_ok)
+                             & ((enq_tickets - head_L) >= R))
+        closed = closed.at[L].set(closed[L] | must_close)
+    if do_deq:
+        # FixState (Algorithm 3 lines 48-57): dequeuers that overran the
+        # tail on an empty segment push Tail up to Head so later enqueues
+        # skip the exhausted indices (bulk-synchronous CAS analog).
+        tails = tails.at[F].set(jnp.maximum(tails[F], new_head_F))
+        heads = heads.at[F].set(new_head_F)
+        # local persistence: this shard's mirror tracks (segment, head)
+        mirrors = mirrors.at[shard].set(new_head_F)
+        mirror_seg = mirror_seg.at[shard].set(F)
+    # write back only the live rows an active half touched (masked selects:
+    # when L == F the F row wins, matching the sequential update order; the
+    # backend returns equal rows in that case)
+    vals, idxs, safes = vol.vals, vol.idxs, vol.safes
+    if do_enq:
+        vals = vals.at[L].set(vals_L)
+        idxs = idxs.at[L].set(idxs_L)
+        safes = safes.at[L].set(safes_L)
+    if do_deq:
+        vals = vals.at[F].set(vals_F)
+        idxs = idxs.at[F].set(idxs_F)
+        safes = safes.at[F].set(safes_F)
+    vol = vol._replace(
+        vals=vals, idxs=idxs, safes=safes,
+        heads=heads, tails=tails, closed=closed,
+        mirrors=mirrors, mirror_seg=mirror_seg,
     )
-    touched_d = deq_out != IDLE_V
-    deq_w = jnp.where(touched_d, deq_slots, R)
-    nvm_vals_F = nvm.vals[F_before].at[deq_w].set(vol.vals[F_before, deq_slots % R], mode="drop")
-    nvm_idxs_F = nvm.idxs[F_before].at[deq_w].set(vol.idxs[F_before, deq_slots % R], mode="drop")
-    nvm_safes_F = nvm.safes[F_before].at[deq_w].set(vol.safes[F_before, deq_slots % R], mode="drop")
+    vol = _advance_segments(vol)
+    # ---- persistence write-back (the pwb+psync analog) -------------------
+    nvals, nidxs, nsafes = nvm.vals, nvm.idxs, nvm.safes
+    if do_enq:
+        nvals = nvals.at[L].set(nvals_L)
+        nidxs = nidxs.at[L].set(nidxs_L)
+        nsafes = nsafes.at[L].set(nsafes_L)
+    if do_deq:
+        nvals = nvals.at[F].set(nvals_F)
+        nidxs = nidxs.at[F].set(nidxs_F)
+        nsafes = nsafes.at[F].set(nsafes_F)
     nvm = nvm._replace(
-        vals=nvm.vals.at[F_before].set(nvm_vals_F),
-        idxs=nvm.idxs.at[F_before].set(nvm_idxs_F),
-        safes=nvm.safes.at[F_before].set(nvm_safes_F),
-        # local persistence: the shard's Head mirror (single-writer)
-        mirrors=nvm.mirrors.at[shard].set(vol.mirrors[shard]),
-        mirror_seg=nvm.mirror_seg.at[shard].set(vol.mirror_seg[shard]),
+        vals=nvals, idxs=nidxs, safes=nsafes,
+        # local persistence: the shard's Head mirror (single-writer; only a
+        # dequeue half moves it)
+        mirrors=(nvm.mirrors.at[shard].set(vol.mirrors[shard])
+                 if do_deq else nvm.mirrors),
+        mirror_seg=(nvm.mirror_seg.at[shard].set(vol.mirror_seg[shard])
+                    if do_deq else nvm.mirror_seg),
         # segment headers: closed bits + allocation (the persisted "next
         # pointer" / closed-Tail of Algorithm 3 line 20 & Algorithm 5 line 29)
         closed=vol.closed,
@@ -222,7 +239,8 @@ def _wave_step(
     return vol, nvm, enq_ok, deq_out
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
 def wave_step(
     vol: WaveState,
     nvm: WaveState,
@@ -231,7 +249,9 @@ def wave_step(
     shard: jnp.ndarray,
     backend: BackendLike = "jnp",
 ) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
-    """One wave, dispatched through the backend registry (jit entry point)."""
+    """One wave, dispatched through the backend registry (jit entry point).
+    ``vol``/``nvm`` are DONATED: the caller must not reuse the passed
+    buffers (rebind them to the returned states)."""
     return _wave_step(vol, nvm, enq_vals, deq_mask, shard,
                       get_backend(backend))
 
@@ -267,7 +287,8 @@ def _enqueue_scan_impl(vol, nvm, rows, shard, b):
     return vol, nvm, oks, submitted
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
 def enqueue_scan(vol, nvm, rows, shard, backend: BackendLike = "jnp"):
     return _enqueue_scan_impl(vol, nvm, rows, shard, get_backend(backend))
 
@@ -288,7 +309,8 @@ def _dequeue_scan_impl(vol, nvm, counts, shard, W, b):
     return vol, nvm, outs
 
 
-@functools.partial(jax.jit, static_argnames=("W", "backend"))
+@functools.partial(jax.jit, static_argnames=("W", "backend"),
+                   donate_argnums=(0, 1))
 def dequeue_scan(vol, nvm, counts, shard, W: int,
                  backend: BackendLike = "jnp"):
     return _dequeue_scan_impl(vol, nvm, counts, shard, W,
@@ -349,6 +371,8 @@ def _recover_impl(nvm: WaveState, b: QueueBackend) -> WaveState:
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def recover(nvm: WaveState, backend: BackendLike = "jnp") -> WaveState:
+    # deliberately NOT donated: recovery is cold-path and callers (tests,
+    # forensics) legitimately keep the NVM image they pass in.
     return _recover_impl(nvm, get_backend(backend))
 
 
@@ -412,14 +436,27 @@ def fold_enqueue_results(chunk, rows, oks, submitted, W: int):
     return retry, ok_flat, taken, active
 
 
-class WaveQueue:
-    """Host-side convenience wrapper: runs K waves per jit call
-    (``enqueue_scan`` / ``dequeue_scan``) and retries RETRY lanes across
-    calls.
+def bucket_pow2(n: int) -> int:
+    """Next power of two >= n (>= 1): buffer sizes handed to the device
+    drivers are quantized so the jit cache sees O(log n) shapes."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
-    This is the single-queue engine; ``repro.core.fabric.ShardedWaveQueue``
-    stacks Q of them behind one interface.  ``backend`` names a registered
-    ``QueueBackend`` ("jnp" or "pallas").
+
+class WaveQueue:
+    """Single-queue engine endpoint.  ``driver`` selects how batches drive
+    the device:
+
+      * ``"device"`` (default) -- the whole retry/drain loop runs on device
+        (``core/driver.py`` while_loop drivers): ONE device call + ONE host
+        sync per ``enqueue_all``/``dequeue_n``, persist counters returned
+        device-side.
+      * ``"host"``   -- the PR-1 scan-batched host loop (K waves per jit
+        call, host-side retry folding); kept as the reference the device
+        drivers are benchmarked and tested against.
+
+    ``repro.core.fabric.ShardedWaveQueue`` stacks Q of these behind one
+    interface.  ``backend`` names a registered ``QueueBackend`` ("jnp" or
+    "pallas").
 
     Persistence accounting (``persist_stats``): per consumer shard, pwbs =
     flushed cache lines (one ring cell per completed op + one Head-mirror
@@ -427,9 +464,17 @@ class WaveQueue:
     version of the paper's pwb+psync pair per operation."""
 
     def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
-                 backend: BackendLike = "jnp", waves_per_call: int = 8):
+                 backend: BackendLike = "jnp", waves_per_call: int = 8,
+                 driver: str = "device"):
+        assert driver in ("device", "host"), driver
         self.S, self.R, self.P, self.W = S, R, P, W
         self.backend = backend
+        self.driver = driver
+        # the device drivers batch wider than the consumer-facing wave width
+        # W: device residency makes wide waves free (no host marshalling),
+        # and within-wave tickets are lane-ordered, so per-queue FIFO is
+        # exact at ANY width <= R (ring-full failures are suffix-shaped)
+        self.device_wave = min(R, max(W, 512))
         self.waves_per_call = max(1, waves_per_call)
         self.vol = init_state(S, R, P)
         self.nvm = init_state(S, R, P)
@@ -448,8 +493,30 @@ class WaveQueue:
         return ok, out
 
     def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
-        """Enqueue a list of item handles (ints >= 0); retries until done.
-        Runs up to ``waves_per_call`` waves per device call."""
+        """Enqueue a list of item handles (ints >= 0); retries until done."""
+        if self.driver == "host":
+            return self._enqueue_all_host(items, shard, max_waves)
+        from repro.core import driver as _drv
+        items = np.asarray(list(items), np.int32).reshape(-1)
+        if items.size == 0:
+            return 0
+        buf = np.full((bucket_pow2(items.size),), -1, np.int32)
+        buf[:items.size] = items
+        self.vol, self.nvm, done, rounds, pwbs = _drv.device_enqueue_all(
+            self.vol, self.nvm, jnp.asarray(buf), jnp.int32(shard),
+            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
+        done, rounds, pwbs = jax.device_get((done, rounds, pwbs))
+        assert bool(np.asarray(done).all()), \
+            "queue full: could not enqueue everything"
+        self.pwbs[shard] += int(pwbs)
+        self.ops[shard] += int(pwbs)
+        self.psyncs[shard] += int(rounds)
+        return int(rounds)
+
+    def _enqueue_all_host(self, items, shard: int = 0,
+                          max_waves: int = 10_000):
+        """PR-1 host loop: up to ``waves_per_call`` waves per device call,
+        retry folding on the host."""
         pending = [int(x) for x in items]
         waves = 0
         K, W = self.waves_per_call, self.W
@@ -473,9 +540,30 @@ class WaveQueue:
         return waves
 
     def dequeue_n(self, n, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue until n items obtained or the queue is EMPTY.  Partitions
-        the remaining demand over up to ``waves_per_call`` waves per device
-        call (total active lanes <= remaining, so never over-dequeues)."""
+        """Dequeue until n items obtained or the queue is EMPTY (total
+        active lanes <= remaining per wave, so never over-dequeues)."""
+        if self.driver == "host":
+            return self._dequeue_n_host(n, shard, max_waves)
+        if n <= 0:
+            return [], 0
+        from repro.core import driver as _drv
+        cap = bucket_pow2(n)
+        (self.vol, self.nvm, out, got, rounds, _take, pwbs,
+         ops) = _drv.device_dequeue_n(
+            self.vol, self.nvm, jnp.int32(n), jnp.int32(0),
+            jnp.int32(shard), jnp.int32(max_waves),
+            W=self.device_wave, cap=cap, backend=self.backend)
+        out, got, rounds, pwbs, ops = jax.device_get(
+            (out, got, rounds, pwbs, ops))
+        got = int(got)
+        self.pwbs[shard] += int(pwbs)
+        self.psyncs[shard] += int(rounds)
+        self.ops[shard] += int(ops)
+        return [int(v) for v in out[:got]], int(rounds)
+
+    def _dequeue_n_host(self, n, shard: int = 0, max_waves: int = 10_000):
+        """PR-1 host loop: partitions the remaining demand over up to
+        ``waves_per_call`` waves per device call."""
         got: List[int] = []
         waves = 0
         K, W = self.waves_per_call, self.W
@@ -507,7 +595,9 @@ class WaveQueue:
 
     def crash_and_recover(self):
         self.vol = recover(crash(self.nvm), backend=self.backend)
-        self.nvm = self.vol
+        # distinct buffers: the drivers donate vol and nvm separately, so
+        # the two images must never alias after recovery
+        self.nvm = jax.tree.map(jnp.copy, self.vol)
         return self.vol
 
     def persist_stats(self) -> dict:

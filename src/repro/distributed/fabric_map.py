@@ -55,8 +55,11 @@ def make_sharded_fabric_step(mesh: Mesh, axis: str = "queues",
         out_specs=(spec, spec, spec, spec),
     )
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def sharded_fabric_step(vol, nvm, enq_vals, deq_mask, shard):
+        # vol/nvm are DONATED (matching fabric.fabric_step): each device
+        # updates its local queue shards in place, so steady-state waves
+        # allocate nothing anywhere on the mesh.
         return stepped(vol, nvm, jnp.asarray(enq_vals, jnp.int32),
                        jnp.asarray(deq_mask, bool),
                        jnp.asarray(shard, jnp.int32).reshape(1))

@@ -12,6 +12,7 @@ from . import crq_wave as _crq_wave
 from . import fai_ticket as _fai_ticket
 from . import recovery_scan as _recovery_scan
 from . import ref as ref  # re-export for callers that want the oracle
+from . import wave_fused as _wave_fused
 
 
 def _interpret() -> bool:
@@ -31,6 +32,25 @@ def crq_wave(vals, idxs, safes, head, enq_tickets, enq_vals, enq_active,
         vals, idxs, safes, head, enq_tickets, enq_vals, enq_active,
         deq_tickets, deq_active, interpret=_interpret(),
     )
+
+
+def wave_fused(vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+               nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+               head_L, same_seg,
+               enq_tickets, enq_vals, enq_active,
+               deq_tickets, deq_active,
+               do_enq: bool = True, do_deq: bool = True):
+    """One fused persistence wave over the two live ring rows (enqueue +
+    dequeue transitions + NVM cell flush in one VMEM residency).
+    ``do_enq``/``do_deq`` statically skip an all-idle half (the device
+    drivers issue enqueue-only / dequeue-only waves).  Returns the 12
+    updated rows + (enq_ok[W] int32, deq_out[W] int32)."""
+    return _wave_fused.wave_fused(
+        vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+        nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+        head_L, same_seg, enq_tickets, enq_vals, enq_active,
+        deq_tickets, deq_active, interpret=_interpret(),
+        do_enq=do_enq, do_deq=do_deq)
 
 
 def percrq_recovery_scan(vals, idxs, head0, block: int = 2048):

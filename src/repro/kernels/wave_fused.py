@@ -1,0 +1,204 @@
+"""``wave_fused`` -- one FUSED persistence wave over the two live ring rows.
+
+The wave engine's hot path (DESIGN.md §3b) touches exactly two rows of the
+[S, R] segment pool per wave: ``last`` (enqueue side, L) and ``first``
+(dequeue side, F).  This kernel runs the whole per-wave pipeline against
+those rows while they sit in VMEM:
+
+  1. W enqueue transitions on the L row (Algorithm 3 line 14),
+  2. W dequeue / empty / unsafe transitions on the F row (lines 34/38/41),
+     reading the post-enqueue cells when L == F,
+  3. the NVM cell flush of ONLY the touched slots (the pwb analog) for both
+     rows -- the durable image rows ride along in the same VMEM residency.
+
+The caller (core/wave.py ``_wave_step``) dynamic-slices the rows out of the
+[S, R] pool and writes the results back with one dynamic-update-slice per
+array -- so a wave costs two row round-trips instead of the chain of
+full-array scatters the unfused path paid.
+
+``same_seg`` is the traced L == F predicate.  The kernel preserves the
+aliasing by seeding the F pass from the post-enqueue L rows and folding the
+F results back into the L outputs, so the returned L and F rows are equal
+whenever the segments alias (the write-back order then does not matter).
+
+Tickets are pairwise distinct within a wave (fai_ticket), so the sequential
+fori_loop over lanes is conflict-free; W is the small axis, R the large one.
+VMEM budget: 12 int32 rows of R + 7 wave arrays of W -- R=8192, W=512 =>
+~400KB, comfortably inside a TPU core's ~16MB VMEM.  Interpret mode keeps
+the same program runnable on CPU CI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BOT = -1
+EMPTY_V = -2
+RETRY_V = -3
+IDLE_V = -4
+
+
+def _wave_fused_kernel(
+    head_ref, same_ref,                                  # SMEM (1,) each
+    vL_ref, iL_ref, sL_ref, vF_ref, iF_ref, sF_ref,      # [R] VMEM vol rows
+    nvL_ref, niL_ref, nsL_ref, nvF_ref, niF_ref, nsF_ref,  # [R] VMEM nvm rows
+    et_ref, ev_ref, ea_ref, dt_ref, da_ref,              # [W] VMEM wave
+    ovL_ref, oiL_ref, osL_ref, ovF_ref, oiF_ref, osF_ref,      # [R] outputs
+    onvL_ref, oniL_ref, onsL_ref, onvF_ref, oniF_ref, onsF_ref,  # [R] outputs
+    eok_ref, dout_ref,                                   # [W] outputs
+    *,
+    do_enq: bool, do_deq: bool,
+):
+    R = vL_ref.shape[0]
+    W = et_ref.shape[0]
+    head = head_ref[0]
+    same = same_ref[0] != 0
+
+    # ---- 1. enqueue transitions on the L row -----------------------------
+    ovL_ref[...] = vL_ref[...]
+    oiL_ref[...] = iL_ref[...]
+    osL_ref[...] = sL_ref[...]
+
+    def enq_body(i, _):
+        t = et_ref[i]
+        active = ea_ref[i] != 0
+        slot = t % R
+        ci = oiL_ref[slot]
+        cv = ovL_ref[slot]
+        cs = osL_ref[slot]
+        ok = active & (ci <= t) & (cv == BOT) & ((cs == 1) | (head <= t))
+        ovL_ref[slot] = jnp.where(ok, ev_ref[i], cv)
+        oiL_ref[slot] = jnp.where(ok, t, ci)
+        osL_ref[slot] = jnp.where(ok, 1, cs)
+        eok_ref[i] = ok.astype(jnp.int32)
+        return 0
+
+    if do_enq:
+        jax.lax.fori_loop(0, W, enq_body, 0)
+    else:
+        eok_ref[...] = jnp.zeros((W,), jnp.int32)
+
+    # ---- 2. dequeue transitions on the F row (post-enqueue when L == F) --
+    ovF_ref[...] = jnp.where(same, ovL_ref[...], vF_ref[...])
+    oiF_ref[...] = jnp.where(same, oiL_ref[...], iF_ref[...])
+    osF_ref[...] = jnp.where(same, osL_ref[...], sF_ref[...])
+
+    def deq_body(i, _):
+        t = dt_ref[i]
+        active = da_ref[i] != 0
+        slot = t % R
+        ci = oiF_ref[slot]
+        cv = ovF_ref[slot]
+        cs = osF_ref[slot]
+        occupied = cv != BOT
+        deq_tr = active & occupied & (ci == t)
+        empty_tr = active & (~occupied) & (ci <= t)
+        unsafe_tr = active & occupied & (ci < t)
+        out = jnp.where(
+            deq_tr, cv,
+            jnp.where(empty_tr, jnp.int32(EMPTY_V),
+                      jnp.where(active, jnp.int32(RETRY_V),
+                                jnp.int32(IDLE_V))))
+        adv = deq_tr | empty_tr
+        ovF_ref[slot] = jnp.where(adv, BOT, cv)
+        oiF_ref[slot] = jnp.where(adv, t + R, ci)
+        osF_ref[slot] = jnp.where(unsafe_tr, 0, cs)
+        dout_ref[i] = out
+        return 0
+
+    if do_deq:
+        jax.lax.fori_loop(0, W, deq_body, 0)
+        # fold the dequeue results back into L when the segments alias
+        ovL_ref[...] = jnp.where(same, ovF_ref[...], ovL_ref[...])
+        oiL_ref[...] = jnp.where(same, oiF_ref[...], oiL_ref[...])
+        osL_ref[...] = jnp.where(same, osF_ref[...], osL_ref[...])
+    else:
+        dout_ref[...] = jnp.full((W,), IDLE_V, jnp.int32)
+
+    # ---- 3. NVM cell flush: only the touched slots (the pwb analog) ------
+    onvL_ref[...] = nvL_ref[...]
+    oniL_ref[...] = niL_ref[...]
+    onsL_ref[...] = nsL_ref[...]
+
+    def flush_enq_body(i, _):
+        ok = eok_ref[i] != 0
+        slot = et_ref[i] % R
+        onvL_ref[slot] = jnp.where(ok, ovL_ref[slot], onvL_ref[slot])
+        oniL_ref[slot] = jnp.where(ok, oiL_ref[slot], oniL_ref[slot])
+        onsL_ref[slot] = jnp.where(ok, osL_ref[slot], onsL_ref[slot])
+        return 0
+
+    if do_enq:
+        jax.lax.fori_loop(0, W, flush_enq_body, 0)
+
+    onvF_ref[...] = jnp.where(same, onvL_ref[...], nvF_ref[...])
+    oniF_ref[...] = jnp.where(same, oniL_ref[...], niF_ref[...])
+    onsF_ref[...] = jnp.where(same, onsL_ref[...], nsF_ref[...])
+
+    def flush_deq_body(i, _):
+        touched = dout_ref[i] != IDLE_V
+        slot = dt_ref[i] % R
+        onvF_ref[slot] = jnp.where(touched, ovF_ref[slot], onvF_ref[slot])
+        oniF_ref[slot] = jnp.where(touched, oiF_ref[slot], oniF_ref[slot])
+        onsF_ref[slot] = jnp.where(touched, osF_ref[slot], onsF_ref[slot])
+        return 0
+
+    if do_deq:
+        jax.lax.fori_loop(0, W, flush_deq_body, 0)
+        onvL_ref[...] = jnp.where(same, onvF_ref[...], onvL_ref[...])
+        oniL_ref[...] = jnp.where(same, oniF_ref[...], oniL_ref[...])
+        onsL_ref[...] = jnp.where(same, onsF_ref[...], onsL_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "do_enq",
+                                             "do_deq"))
+def wave_fused(
+    vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+    nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+    head_L, same_seg,
+    enq_tickets, enq_vals, enq_active,
+    deq_tickets, deq_active,
+    *,
+    interpret: bool = True,
+    do_enq: bool = True,
+    do_deq: bool = True,
+):
+    R = vals_L.shape[0]
+    W = enq_tickets.shape[0]
+    row = pl.BlockSpec((R,), lambda: (0,))
+    wav = pl.BlockSpec((W,), lambda: (0,))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    r_out = jax.ShapeDtypeStruct((R,), jnp.int32)
+    w_out = jax.ShapeDtypeStruct((W,), jnp.int32)
+    outs = pl.pallas_call(
+        functools.partial(_wave_fused_kernel, do_enq=do_enq, do_deq=do_deq),
+        in_specs=[smem, smem] + [row] * 12 + [wav] * 5,
+        out_specs=[row] * 12 + [wav] * 2,
+        out_shape=[r_out] * 12 + [w_out] * 2,
+        interpret=interpret,
+    )(
+        jnp.asarray(head_L, jnp.int32).reshape(1),
+        jnp.asarray(same_seg, jnp.int32).reshape(1),
+        jnp.asarray(vals_L, jnp.int32),
+        jnp.asarray(idxs_L, jnp.int32),
+        jnp.asarray(safes_L, jnp.int32),
+        jnp.asarray(vals_F, jnp.int32),
+        jnp.asarray(idxs_F, jnp.int32),
+        jnp.asarray(safes_F, jnp.int32),
+        jnp.asarray(nvals_L, jnp.int32),
+        jnp.asarray(nidxs_L, jnp.int32),
+        jnp.asarray(nsafes_L, jnp.int32),
+        jnp.asarray(nvals_F, jnp.int32),
+        jnp.asarray(nidxs_F, jnp.int32),
+        jnp.asarray(nsafes_F, jnp.int32),
+        jnp.asarray(enq_tickets, jnp.int32),
+        jnp.asarray(enq_vals, jnp.int32),
+        jnp.asarray(enq_active, jnp.int32),
+        jnp.asarray(deq_tickets, jnp.int32),
+        jnp.asarray(deq_active, jnp.int32),
+    )
+    return tuple(outs)

@@ -32,12 +32,14 @@ class PersistentDataPipeline:
     def __init__(self, source: Iterator, batch_size: int, seq_len: int,
                  slab_capacity: int = 4096, S: int = 32, R: int = 256,
                  W: int = 64, n_shards: int = 1, n_queues: int = 1,
-                 backend: str = "jnp"):
+                 backend: str = "jnp", driver: str = "device"):
         self.source = source
         self.batch_size = batch_size
         self.seq_len = seq_len
+        # device-resident driving: produce()/next_batch() cost one device
+        # call each, however many wave rounds the batch takes
         self.queue = ShardedWaveQueue(Q=n_queues, S=S, R=R, P=n_shards, W=W,
-                                      backend=backend)
+                                      backend=backend, driver=driver)
         self.slab = np.zeros((slab_capacity, seq_len + 1), np.int32)
         self.slab_nvm = np.zeros_like(self.slab)
         self.slab_capacity = slab_capacity

@@ -4,10 +4,13 @@ Requests flow through a PerLCRQ-style wave queue (exactly-once admission
 across crashes); admitted requests occupy decode slots (continuous
 batching: a finished request's slot is refilled from the queue the same
 step -- slot allocation is the same prefix-sum ticketing as the queue's
-FAI).  The engine persists, per step, only per-slot progress mirrors (the
-local-persistence technique) -- crash recovery rebuilds the batch state
-from the queue NVM image + slot mirrors without replaying completed
-requests.
+FAI).  Admission and refill drive the fabric's DEVICE-RESIDENT drivers
+(core/driver.py): a refill is one device call regardless of how many wave
+rounds the drain takes, so queue service never stalls the decode step on
+host round-trips.  The engine persists, per step, only per-slot progress
+mirrors (the local-persistence technique) -- crash recovery rebuilds the
+batch state from the queue NVM image + slot mirrors without replaying
+completed requests.
 """
 from __future__ import annotations
 
@@ -34,7 +37,8 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, max_batch: int = 4,
                  max_len: int = 256, queue_depth: int = 64,
-                 queue_shards: int = 2, queue_backend: str = "jnp"):
+                 queue_shards: int = 2, queue_backend: str = "jnp",
+                 queue_driver: str = "device"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -42,7 +46,8 @@ class ServingEngine:
         # admission queue: the sharded fabric (requests are independent, so
         # the MultiFIFO relaxation across shards is invisible to clients)
         self.queue = ShardedWaveQueue(Q=queue_shards, S=8, R=queue_depth,
-                                      W=16, backend=queue_backend)
+                                      W=16, backend=queue_backend,
+                                      driver=queue_driver)
         self.requests: Dict[int, Request] = {}
         self._rid = 0
         # decode slots

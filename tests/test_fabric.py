@@ -191,12 +191,14 @@ def test_sharded_fabric_step_matches_vmap():
     mesh = queue_mesh()
     step = make_sharded_fabric_step(mesh, backend="jnp")
     Q, S, R, W = 2, 4, 32, 8
-    vol = nvm = fabric_init(Q, S, R, 1)
     ev = jnp.tile(jnp.arange(W, dtype=jnp.int32)[None], (Q, 1))
     dm = np.zeros((Q, W), bool)
     dm[:, W // 2:] = True
-    ref = fabric_step(vol, nvm, ev, jnp.asarray(dm), jnp.int32(0))
-    got = step(vol, nvm, ev, dm, 0)
+    # both entry points donate vol/nvm: fresh, distinct states per call
+    ref = fabric_step(fabric_init(Q, S, R, 1), fabric_init(Q, S, R, 1),
+                      ev, jnp.asarray(dm), jnp.int32(0))
+    got = step(fabric_init(Q, S, R, 1), fabric_init(Q, S, R, 1),
+               ev, dm, 0)
     for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

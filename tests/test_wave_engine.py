@@ -103,8 +103,9 @@ def test_kernel_path_equivalent(S, R, W):
     """backend="pallas" (interpret mode) must produce bit-identical states
     and results to the pure-jnp backend."""
     rng = random.Random(0)
-    vol_a = nvm_a = init_state(S, R, 1)
-    vol_b = nvm_b = init_state(S, R, 1)
+    # vol/nvm are donated by wave_step: they must be distinct buffers
+    vol_a, nvm_a = init_state(S, R, 1), init_state(S, R, 1)
+    vol_b, nvm_b = init_state(S, R, 1), init_state(S, R, 1)
     nxt = 0
     for step in range(12):
         n_e, n_d = rng.randrange(0, W // 2 + 1), rng.randrange(0, W // 2 + 1)

@@ -31,8 +31,9 @@ def test_recovery_takes_max_over_shard_mirrors():
     q.dequeue_n(4, shard=3)   # head now 8; shard 3's mirror = 8
     st_ = recover(crash(q.nvm))
     assert int(st_.heads[0]) >= 8
+    # distinct buffers: the drivers donate vol and nvm separately
     q.vol = st_
-    q.nvm = st_
+    q.nvm = jax.tree.map(jnp.copy, st_)
     rest = q.drain(shard=0)
     assert rest == list(range(8, 40))  # items 0-7 stay consumed
 
