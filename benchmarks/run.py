@@ -30,6 +30,13 @@ ROW_SCHEMA = {
     "pwbs_per_op": "flushed cache lines per completed op (driver rows)",
     "psyncs_per_op": "persist drains per completed op (driver rows; one "
                      "psync per fused wave)",
+    "queue_size": "fabric backlog at the crash (recovery rows)",
+    "crash_point_frac": "fraction of the crashed wave's ordered flush "
+                        "records that landed (wave_recovery_torn rows)",
+    "sweep_points": "torn crash points per vmapped sweep call "
+                    "(wave_recovery_sweep rows)",
+    "us_per_point": "amortized recovery microseconds per torn crash point "
+                    "(wave_recovery_sweep rows)",
 }
 
 
@@ -60,6 +67,9 @@ def main() -> None:
                     metavar="N,N,...",
                     help="comma-separated fabric shard counts to sweep, "
                          "e.g. 1,2,4,8")
+    ap.add_argument("--recovery", action="store_true",
+                    help="additionally sweep torn-crash recovery latency "
+                         "(queue size x crash point x backend)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -130,6 +140,8 @@ def main() -> None:
     # --- wave engine / fabric sweep: one JSON row per configuration ---
     rowsw = wave_engine.run(iters=50 if args.fast else 200,
                             backends=backends, shard_counts=shard_counts)
+    if args.recovery:
+        rowsw += wave_engine.run_recovery(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]

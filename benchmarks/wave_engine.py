@@ -23,9 +23,12 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.fabric import (ShardedWaveQueue, fabric_init, fabric_recover,
-                               fabric_step)
+from repro.core.fabric import (ShardedWaveQueue, fabric_crash_sweep,
+                               fabric_init, fabric_recover, fabric_step,
+                               fabric_step_delta)
+from repro.core.persistence import apply_delta, delta_records, tree_copy
 from repro.core.wave import WaveQueue
 
 
@@ -122,4 +125,72 @@ def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
             "backend": backend, "shards": Qmax,
             "us_per_call": dt * 1e6, "ops_per_sec": 0.0,
         })
+    return rows
+
+
+def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
+                 fast: bool = False, Q: int = 4, S: int = 8):
+    """Torn-crash recovery latency (queue size x crash point x backend) --
+    the wave-engine analogue of ``benchmarks/fig45_recovery.py``.
+
+    Per (backend, size): build a fabric backlog of ``size`` items, run one
+    mixed delta wave, then
+      * ``wave_recovery_torn``  -- recovery latency from the torn image at a
+        fixed crash-point fraction of the wave's ordered flush records
+        (0.0 = nothing of the wave landed, 0.5 = the enqueue-cell half,
+        1.0 = the whole flush landed = a clean wave-boundary image),
+      * ``wave_recovery_sweep`` -- the amortized per-point cost of the
+        vmapped ``fabric_crash_sweep`` (hundreds of crash points, recovered
+        in ONE device call).
+    """
+    rows = []
+    fracs = (0.0, 0.5, 1.0)
+    for backend in backends:
+        r = 512 if backend == "pallas" else 4096
+        w = 64
+        sizes = ((64, 256) if fast else (128, 512, 2048))
+        if backend == "pallas":
+            sizes = sizes[:2]
+        n_sweep = 64 if (fast or backend == "pallas") else 256
+        n_time = 3 if backend == "pallas" else 20
+        for size in sizes:
+            q = ShardedWaveQueue(Q=Q, S=S, R=r, W=w, backend=backend)
+            q.enqueue_all(list(range(size)))
+            q.dequeue_n(size // 8)
+            nvm_pre = tree_copy(q.nvm)
+            ev = np.full((Q, w), -1, np.int32)
+            ev[:, : w // 2] = np.arange(Q * (w // 2),
+                                        dtype=np.int32).reshape(Q, -1) + size
+            dm = np.broadcast_to(np.arange(w) < w // 2, (Q, w)).copy()
+            _v, _n, _ok, _out, delta = fabric_step_delta(
+                q.vol, q.nvm, jnp.asarray(ev), jnp.asarray(dm),
+                jnp.int32(0), backend=backend)
+            n_records = delta_records(delta)
+            order = jnp.arange(n_records, dtype=jnp.int32)
+            for frac in fracs:
+                pt = int(round(frac * n_records))
+                mask = jnp.broadcast_to(order < pt, (Q, n_records))
+                img = jax.vmap(apply_delta)(nvm_pre, delta, mask)
+                jax.block_until_ready(img.vals)
+                dt = _time(
+                    lambda img=img: fabric_recover(
+                        img, backend=backend).vals, n_time)
+                rows.append({
+                    "path": f"wave_recovery_torn/{backend}/q{Q}",
+                    "backend": backend, "shards": Q,
+                    "queue_size": size, "crash_point_frac": frac,
+                    "us_per_call": dt * 1e6, "ops_per_sec": 0.0,
+                })
+            key = jax.random.PRNGKey(0)
+            dt = _time(
+                lambda: fabric_crash_sweep(nvm_pre, delta, key, n_sweep,
+                                           backend=backend)[0].vals, n_time)
+            rows.append({
+                "path": f"wave_recovery_sweep/{backend}/q{Q}",
+                "backend": backend, "shards": Q,
+                "queue_size": size, "sweep_points": n_sweep,
+                "us_per_call": dt * 1e6,
+                "us_per_point": dt * 1e6 / n_sweep,
+                "ops_per_sec": 0.0,
+            })
     return rows

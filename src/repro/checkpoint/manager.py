@@ -21,7 +21,7 @@ import json
 import os
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

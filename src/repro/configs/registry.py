@@ -7,7 +7,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from .base import LONG_CTX_ARCHS, SHAPES, ModelConfig, ShapeConfig
+from .base import LONG_CTX_ARCHS, SHAPES, ModelConfig
 
 ARCHS = {
     "internlm2-1.8b": "internlm2_1_8b",

@@ -78,6 +78,14 @@ class QueueBackend(Protocol):
         traced L == F predicate: the implementation must preserve the
         aliasing (F reads L's updates, and the returned L/F rows are equal).
 
+        Persistence contract: the returned NVM rows are the ALL-RECORDS-
+        LANDED endpoint of the wave's ordered pwb sequence (enq cells in
+        ticket order, then deq cells) -- bit-identical to applying the full
+        ``persistence.WaveDelta`` the delta path emits for the same wave
+        (core/wave.py ``emit_delta``; asserted by the parity tests).  The
+        torn-crash injector owns every intermediate point of that sequence;
+        backends only ever compute the endpoint.
+
         ``do_enq``/``do_deq`` are STATIC flags: the device drivers issue
         enqueue-only / dequeue-only waves, and an all-idle half never changes
         state, so skipping it is bit-identical and halves the traced work.

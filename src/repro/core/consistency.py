@@ -1,0 +1,234 @@
+"""Algorithm-agnostic durable-linearizability checking (DESIGN.md §7).
+
+This is the checker half of the torn-crash consistency engine: it knows
+NOTHING about PerIQ/PerCRQ/wave internals (the algorithm-specific
+linearization procedures stay in ``core/linearize.py``).  It validates
+*histories* -- multi-epoch op records from the faithful ``Machine`` stack,
+the wave/fabric engines, or the serving/pipeline consumers, all driven
+through the same scenario API (``core/failures.py``):
+
+  * ``check_fifo_history`` -- the generic multi-epoch FIFO invariants:
+    no duplication, no invention, real-time FIFO, conservation across
+    (torn) crashes.  ``queue_of`` relaxes the FIFO order to PER-INTERNAL-
+    QUEUE for fabric/serving/pipeline histories (the MultiFIFO contract: a
+    Q-sharded fabric only promises FIFO within each internal queue).
+  * ``check_wave_crash`` -- the sharp structural invariant for ONE torn
+    crash point of ONE internal queue: the recovered contents must be a
+    suffix of the pre-wave contents (dequeues consume in order; at most the
+    in-flight dequeue count may be consumed) followed by a subsequence of
+    the wave's in-flight enqueues in ticket order.  This is what the
+    vmapped ``crash_sweep`` validates at hundreds of crash points.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .harness import OpRecord
+from .machine import EMPTY
+
+
+class Consumption:
+    """Where/when an item was consumed: by a completed dequeue (epoch, times)
+    or by the final drain (position)."""
+
+    __slots__ = ("epoch", "t_inv", "t_resp", "drain_pos")
+
+    def __init__(self, epoch, t_inv, t_resp, drain_pos=None):
+        self.epoch, self.t_inv, self.t_resp = epoch, t_inv, t_resp
+        self.drain_pos = drain_pos
+
+    def surely_before(self, other: "Consumption") -> bool:
+        if self.epoch != other.epoch:
+            return self.epoch < other.epoch
+        if self.drain_pos is not None and other.drain_pos is not None:
+            return self.drain_pos < other.drain_pos
+        if self.drain_pos is None and other.drain_pos is None:
+            return self.t_resp < other.t_inv
+        # dequeue vs drain within an epoch: drain runs after recovery => after
+        return other.drain_pos is not None
+
+
+def check_fifo_history(
+    epochs: List[Dict[str, Any]],
+    queue_of: Optional[Dict[Any, int]] = None,
+) -> Dict[str, Any]:
+    """Check a multi-epoch execution of a durable FIFO queue.
+
+    epochs: list of {"history": [OpRecord], "crashed": bool,
+                     "drained": [items] | None}
+    where "drained" are the items drained after the LAST epoch (only on the
+    final entry) or None.
+
+    ``queue_of`` maps item -> internal-queue id for Q-relaxed (MultiFIFO)
+    endpoints: the real-time FIFO invariant (I3) is then enforced only
+    between items placed on the SAME internal queue -- the fabric's ordering
+    contract.  All other invariants stay global.
+
+    Items must be globally unique.  Checks:
+      I1  no item is returned more than once (dequeues + drain),
+      I2  every returned item was the argument of some enqueue invocation,
+      I3  real-time FIFO (per internal queue when ``queue_of`` is given):
+          for completed enqueues a strictly-before b (both consumed), a is
+          not consumed strictly after b,
+      I4  conservation: an item of a COMPLETED enqueue that is never consumed
+          may only disappear in an epoch that CRASHED, and globally there
+          must be enough incomplete dequeue invocations in crashed epochs to
+          account for every vanished item (torn crashes consume through
+          linearized-but-unacknowledged dequeues -- never silently),
+      I5  a completed-enqueue item may not be consumed before it was enqueued.
+    """
+    enq_by_item: Dict[Any, Tuple[int, OpRecord]] = {}
+    consumed: Dict[Any, Consumption] = {}
+    returned_counts: Dict[Any, int] = {}
+
+    for ei, ep in enumerate(epochs):
+        for rec in ep["history"]:
+            if rec.kind == "enq":
+                assert rec.arg not in enq_by_item, f"duplicate item {rec.arg}"
+                enq_by_item[rec.arg] = (ei, rec)
+    for ei, ep in enumerate(epochs):
+        for rec in ep["history"]:
+            if rec.kind == "deq" and rec.completed and rec.result is not EMPTY:
+                item = rec.result
+                returned_counts[item] = returned_counts.get(item, 0) + 1
+                consumed[item] = Consumption(ei, rec.t_inv, rec.t_resp)
+        if ep.get("drained") is not None:
+            for pos, item in enumerate(ep["drained"]):
+                returned_counts[item] = returned_counts.get(item, 0) + 1
+                consumed[item] = Consumption(ei, float("inf"), float("inf"), pos)
+
+    # I1
+    dups = {i: c for i, c in returned_counts.items() if c > 1}
+    assert not dups, f"items returned more than once: {dups}"
+    # I2
+    unknown = [i for i in returned_counts if i not in enq_by_item]
+    assert not unknown, f"items returned but never enqueued: {unknown}"
+    # I5
+    for item, cons in consumed.items():
+        eei, erec = enq_by_item[item]
+        if cons.epoch < eei:
+            raise AssertionError(f"item {item} consumed before its enqueue epoch")
+    # I3: real-time FIFO among completed enqueues (per internal queue when
+    # the endpoint is Q-relaxed)
+    for item_a, (ea, ra) in enq_by_item.items():
+        if not ra.completed:
+            continue
+        ca = consumed.get(item_a)
+        for item_b, (eb, rb) in enq_by_item.items():
+            if item_a is item_b or not rb.completed:
+                continue
+            if queue_of is not None and \
+                    queue_of.get(item_a) != queue_of.get(item_b):
+                continue  # different internal queues: MultiFIFO permits it
+            # a strictly precedes b?
+            if not ((ea, ra.t_resp) < (eb, rb.t_inv)) or (ea == eb and ra.t_resp >= rb.t_inv):
+                continue
+            cb = consumed.get(item_b)
+            if cb is None:
+                continue
+            if ca is None:
+                # a vanished while b (enqueued later) was consumed: only legal
+                # if a's epoch crashed (a consumed by an unrecorded linearized
+                # dequeue around the crash)
+                assert epochs[ea]["crashed"] or any(
+                    epochs[k]["crashed"] for k in range(ea, cb.epoch + 1)
+                ), (
+                    f"FIFO violation: {item_a} (completed enqueue, earlier) lost "
+                    f"while later {item_b} was consumed, with no crash"
+                )
+            else:
+                assert not cb.surely_before(ca), (
+                    f"FIFO violation: {item_b} consumed before {item_a} "
+                    f"but enqueue({item_a}) completed before enqueue({item_b}) began"
+                )
+    # I4: conservation.  A completed enqueue's item that is never observed
+    # again ("vanished") is only legal if a linearized-but-incomplete dequeue
+    # could have consumed it around a crash: (a) some epoch >= its enqueue
+    # crashed, and (b) globally there are at least as many incomplete dequeue
+    # invocations in crashed epochs as vanished items.
+    final_crashes = [ep["crashed"] for ep in epochs]
+    drained_recorded = any(ep.get("drained") is not None for ep in epochs)
+    if drained_recorded:
+        vanished = []
+        for item, (ei, rec) in enq_by_item.items():
+            if rec.completed and item not in consumed:
+                assert any(final_crashes[ei:]), (
+                    f"item {item} from completed enqueue lost without any crash"
+                )
+                vanished.append(item)
+        incomplete_deqs = sum(
+            1
+            for ei, ep in enumerate(epochs)
+            if ep["crashed"]
+            for r in ep["history"]
+            if r.kind == "deq" and not r.completed
+        )
+        assert len(vanished) <= incomplete_deqs, (
+            f"{len(vanished)} completed-enqueue items vanished but only "
+            f"{incomplete_deqs} incomplete dequeues exist to account for them: "
+            f"{vanished}"
+        )
+    return {
+        "n_enqueued": len(enq_by_item),
+        "n_consumed": len(consumed),
+    }
+
+
+def check_wave_crash(
+    pre_items: Sequence[Any],
+    wave_enqs: Sequence[Any],
+    inflight_deqs: int,
+    recovered: Sequence[Any],
+) -> Dict[str, int]:
+    """Durable linearizability of ONE torn crash point on ONE internal queue.
+
+    ``pre_items``: the queue's durable FIFO contents before the wave (all
+    completed enqueues).  ``wave_enqs``: the items the crashed wave's
+    enqueue lanes attempted, in lane/ticket order (in-flight: each may or
+    may not have linearized).  ``inflight_deqs``: the wave's active dequeue
+    lanes (in-flight dequeues).  ``recovered``: the queue contents after
+    recovery (``peek_items`` or a full drain).
+
+    Must hold exactly:  recovered == pre_items[k:] + subseq(wave_enqs)
+    with 0 <= k <= inflight_deqs -- completed items are consumed in FIFO
+    order only, at most one per in-flight dequeue, and surviving in-flight
+    enqueues keep ticket order behind every surviving completed item.
+    Returns {"lost_prefix": k, "survived_wave_enqs": n}.
+    """
+    recovered = list(recovered)
+    pre_pos = {it: i for i, it in enumerate(pre_items)}
+    assert len(pre_pos) == len(pre_items), "pre_items must be unique"
+    assert len(set(recovered)) == len(recovered), (
+        f"duplicate items after recovery: {recovered}")
+
+    # split: leading run of pre items, then wave items only
+    n_pre_survived = 0
+    while n_pre_survived < len(recovered) and \
+            recovered[n_pre_survived] in pre_pos:
+        n_pre_survived += 1
+    survivors, tail = recovered[:n_pre_survived], recovered[n_pre_survived:]
+
+    if survivors:
+        k = pre_pos[survivors[0]]
+        assert survivors == list(pre_items[k:]), (
+            f"recovered completed items are not a FIFO suffix of the "
+            f"pre-crash queue:\n  recovered head={survivors}\n  "
+            f"pre={list(pre_items)}")
+    else:
+        k = len(pre_items)
+    assert k <= inflight_deqs, (
+        f"{k} completed items lost but only {inflight_deqs} in-flight "
+        f"dequeues existed at the crash (silent loss)")
+
+    j = 0
+    wave_list = list(wave_enqs)
+    for it in tail:
+        assert it not in pre_pos, (
+            f"completed item {it} recovered OUT of FIFO order (after "
+            f"in-flight wave items)")
+        while j < len(wave_list) and wave_list[j] != it:
+            j += 1
+        assert j < len(wave_list), (
+            f"item {it} recovered but never enqueued (invented)")
+        j += 1
+    return {"lost_prefix": k, "survived_wave_enqs": len(tail)}

@@ -19,9 +19,9 @@ Persistence modes (the paper's algorithm + its Section 5 ablations):
 """
 from __future__ import annotations
 
-from typing import Any, Generator, Optional, Tuple
+from typing import Any, Generator, Optional
 
-from .machine import (BOT, CLOSED, EMPTY, FAI, OK, CAS, GetSet, LocalWork,
+from .machine import (BOT, CLOSED, EMPTY, FAI, OK, CAS,
                       Machine, PSync, PWB, Read, TAS, Write)
 
 MODES = ("none", "percrq", "phead", "nohead", "notail")

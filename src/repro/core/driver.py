@@ -26,6 +26,13 @@ fused-wave count = psyncs) as device-side counters, so a batch costs ONE
 device call + ONE host sync regardless of how many waves it takes.  State
 buffers are donated: steady-state driving allocates nothing.
 
+Persistence caveat: each driver round flushes through the backend's fused
+endpoint, i.e. the NVM image the loop carries is only guaranteed consistent
+at WAVE boundaries -- a real crash can land between the pwbs inside a
+round.  The torn-crash consistency engine (core/persistence.py +
+``wave_step_delta``; DESIGN.md §7) materializes and validates exactly those
+intermediate images; results the host never synced count as in-flight ops.
+
 The single-queue variants (``WaveQueue``) reuse the same loop bodies by
 stacking the state to Q=1 inside the jit boundary (a free reshape).
 """

@@ -40,11 +40,13 @@ import numpy as np
 
 from repro.core import driver as _drv
 from repro.core.backend import BackendLike, get_backend
+from repro.core.persistence import (apply_delta, crash_recover_images,
+                                    delta_records, torn_mask, torn_masks)
 from repro.core.wave import (EMPTY_V, WaveState, _dequeue_scan_impl,
                              _enqueue_scan_impl, _recover_impl, _wave_step,
                              bucket_pow2, crash, fold_dequeue_block,
-                             fold_enqueue_results, init_state, plan_waves,
-                             quantize_waves, state_empty)
+                             fold_enqueue_results, init_state, peek_items,
+                             plan_waves, quantize_waves, state_empty)
 
 
 def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
@@ -67,6 +69,49 @@ def fabric_step(vol, nvm, enq_vals, deq_mask, shard,
     return jax.vmap(
         lambda v, n, e, d: _wave_step(v, n, e, d, shard, b)
     )(vol, nvm, enq_vals, deq_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fabric_step_delta(vol, nvm, enq_vals, deq_mask, shard,
+                      backend: BackendLike = "jnp"):
+    """One fused wave across all Q queues persisting through ORDERED flush
+    deltas (one ``persistence.WaveDelta`` per queue, leaves stacked on a
+    leading [Q] axis).  NOT donated: the consistency engine keeps the
+    pre-wave NVM image and replays delta prefixes over it (torn crashes).
+    Returns (vol', nvm', enq_ok[Q, W], deq_out[Q, W], delta)."""
+    b = get_backend(backend)
+    return jax.vmap(
+        lambda v, n, e, d: _wave_step(v, n, e, d, shard, b, emit_delta=True)
+    )(vol, nvm, enq_vals, deq_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("n_points", "backend"))
+def fabric_crash_sweep(nvm_pre, delta, key, n_points: int,
+                       backend: BackendLike = "jnp", evict_rate=0.25):
+    """Vmap ``n_points`` torn-crash materializations of one fabric wave
+    through the vectorized recovery -- ONE device call.  Each queue tears
+    independently (the crash is global in time, but each shard's flush
+    progress is its own): every queue keeps the full deterministic
+    prefix-point coverage, but the points are PERMUTED per queue (seeded)
+    so sweep point i pairs divergent prefix progress across shards, plus
+    independent per-queue evictions.  Returns (recovered states stacked
+    [n_points, Q, ...], masks [n_points, Q, n_records])."""
+    b = get_backend(backend)
+    Q = nvm_pre.vals.shape[0]
+    n_rec = delta_records(delta)
+    keys = jax.random.split(key, Q)
+    qmasks = []
+    for q in range(Q):
+        ke, kp = jax.random.split(keys[q])
+        m, _ = torn_masks(ke, n_points, n_rec, evict_rate)
+        qmasks.append(jax.random.permutation(kp, m, axis=0))
+    masks = jnp.stack(qmasks, axis=1)                   # [n_points, Q, n_rec]
+
+    def one(mk):
+        img = jax.vmap(apply_delta)(nvm_pre, delta, mk)
+        return jax.vmap(lambda n: _recover_impl(n, b))(img)
+
+    return jax.vmap(one)(masks), masks
 
 
 @functools.partial(jax.jit, static_argnames=("backend",),
@@ -336,13 +381,70 @@ class ShardedWaveQueue:
     # -- fault tolerance ------------------------------------------------------
 
     def crash_and_recover(self):
-        """Full-fabric crash: all volatile images lost; every shard's
-        recovery scan runs in one vectorized call."""
-        self.vol = fabric_recover(crash(self.nvm), backend=self.backend)
-        # distinct buffers: the drivers donate vol and nvm separately, so
-        # the two images must never alias after recovery
-        self.nvm = jax.tree.map(jnp.copy, self.vol)
+        """Clean full-fabric crash at a wave boundary: all volatile images
+        lost; every shard's recovery scan runs in one vectorized call (the
+        donation-aliasing rule lives in ``persistence.crash_recover_images``)."""
+        self.vol, self.nvm = crash_recover_images(
+            crash(self.nvm),
+            lambda img: fabric_recover(img, backend=self.backend))
         return self.vol
+
+    def plan_torn_wave(self, enq_items=(), deq_lanes: int = 0):
+        """Lay out ONE wave over the fabric: ``enq_items`` placed round-robin
+        EXACTLY like ``enqueue_all`` (the placement cursor advances),
+        ``deq_lanes`` active dequeue lanes per queue.  Returns
+        (enq_vals[Q, W], deq_mask[Q, W], per_queue_items) -- the per-queue
+        item lists are the FIFO oracle ``consistency.check_wave_crash``
+        validates torn recoveries of this wave against, so this is the ONE
+        place the placement convention lives for crash injection (the
+        demo/test sweeps call it too)."""
+        Q, W = self.Q, self.W
+        pend: List[List[int]] = [[] for _ in range(Q)]
+        items = [int(x) for x in enq_items]
+        for i, it in enumerate(items):
+            pend[(self._place + i) % Q].append(it)
+        self._place = (self._place + len(items)) % Q
+        ev = np.full((Q, W), -1, np.int32)
+        for q in range(Q):
+            assert len(pend[q]) <= W
+            ev[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
+        assert deq_lanes <= W
+        dm = np.broadcast_to(np.arange(W) < deq_lanes, (Q, W)).copy()
+        return ev, dm, pend
+
+    def torn_crash_and_recover(self, enq_items=(), deq_lanes: int = 0,
+                               shard: int = 0, seed: int = 0,
+                               crash_point=None, evict_rate: float = 0.25):
+        """Crash MID-WAVE across the whole fabric: one wave (``enq_items``
+        placed round-robin like ``enqueue_all``; ``deq_lanes`` active dequeue
+        lanes PER QUEUE) runs over the live state, but each queue's ordered
+        flush is cut at an independent seeded prefix + eviction set before
+        recovery.  The wave's results are discarded (in-flight at the
+        crash).  Returns the recovered volatile state."""
+        Q = self.Q
+        ev, dm, _pend = self.plan_torn_wave(enq_items, deq_lanes)
+        _vol, _nvm, _ok, _out, delta = fabric_step_delta(
+            self.vol, self.nvm, jnp.asarray(ev), jnp.asarray(dm),
+            jnp.int32(shard), backend=self.backend)
+        n_rec = delta_records(delta)
+        keys = jax.random.split(jax.random.PRNGKey(seed), Q)
+        masks = jnp.stack([torn_mask(keys[q], n_rec, point=crash_point,
+                                     evict_rate=evict_rate)
+                           for q in range(Q)])
+        self.vol, self.nvm = crash_recover_images(
+            jax.vmap(apply_delta)(self.nvm, delta, masks),
+            lambda img: fabric_recover(img, backend=self.backend))
+        return self.vol
+
+    def peek_items_per_queue(self) -> List[List[int]]:
+        """Per-internal-queue contents in FIFO order (forensics)."""
+        v = jax.device_get(self.vol)
+        return [peek_items(jax.tree.map(lambda a: a[q], v))
+                for q in range(self.Q)]
+
+    def peek_items(self) -> List[int]:
+        """All queue contents, queue-major (each internal list is FIFO)."""
+        return [it for sub in self.peek_items_per_queue() for it in sub]
 
     # -- introspection --------------------------------------------------------
 

@@ -1,10 +1,32 @@
-"""The paper's failure-simulation framework (Section 5, "Evaluation of the
-recovery cost").
+"""The paper's failure-simulation framework (Section 5) generalized into ONE
+scenario API that drives BOTH stacks -- the faithful ``Machine`` queues and
+the wave/fabric engines -- through the same run / crash / recover cycles and
+feeds their histories to the same durable-linearizability checker
+(``core/consistency.py``).  DESIGN.md §7.
 
-A shared ``recovery_steps`` counter is decremented as threads execute; when it
-reaches 0 all threads cease (full-system crash), the recovery function runs,
-and the recovery time is measured.  A (run, crash, recover) triple is a
-*cycle*; an evaluation is the average recovery time over ``n_cycles`` cycles.
+A *scenario* is ``epochs`` repetitions of:
+
+    run a batch of operations  ->  crash (clean | torn | none)  ->  recover
+
+followed by a final drain; every epoch's op history (completed AND in-flight
+invocations) is recorded so ``check_fifo_history`` can verify no loss, no
+duplication, (per-queue) FIFO and conservation across the crashes.
+
+Drivers:
+
+  * ``MachineScenario`` -- the faithful stack: thread programs on the
+    simulated persistent-memory machine.  A machine crash is INHERENTLY
+    torn (pending pwbs are lost with the caches; evicted lines stay), so
+    the clean/torn distinction collapses here.
+  * ``WaveScenario``  -- the device stack: a ``WaveQueue`` or
+    ``ShardedWaveQueue``.  ``crash="clean"`` crashes at a wave boundary;
+    ``crash="torn"`` injects a crash MID-WAVE through the flush-delta
+    injector (``torn_crash_and_recover``), reporting the wave's operations
+    as in-flight (incomplete) invocations.
+
+``run_cycles`` (the paper's Section 5 recovery-cost measurement, used by the
+Figure 4/5 benchmarks) is a thin loop over ``MachineScenario`` keeping its
+original seeding and measurement surface.
 """
 from __future__ import annotations
 
@@ -12,8 +34,66 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
-from .harness import pairs_workload, random_schedule, run_epoch
+from .consistency import check_fifo_history
+from .harness import (OpRecord, drain, pairs_workload, random_schedule,
+                      run_epoch)
 from .machine import Machine
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec + runner (stack-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ScenarioSpec:
+    """One run/crash/recover scenario, independent of the stack under test.
+
+    ``crash``: "none" (run to completion), "clean" (crash at an operation /
+    wave boundary) or "torn" (crash mid-flush; on the machine stack every
+    crash is torn by construction)."""
+
+    epochs: int = 2
+    crash: str = "torn"
+    seed: int = 0
+
+
+def run_scenario(driver, spec: ScenarioSpec) -> Dict[str, Any]:
+    """Drive ``driver`` through ``spec`` and check the resulting multi-epoch
+    history with the shared durable-linearizability checker.
+
+    The driver protocol (duck-typed; see ``MachineScenario`` /
+    ``WaveScenario``):
+
+      * ``run_ops(epoch, seed, crash: bool) -> List[OpRecord]`` -- run one
+        epoch's operations (crashing mid-run when ``crash``),
+      * ``crash_recover(mode, seed) -> List[OpRecord]`` -- finish the crash
+        (torn injection where supported) + recover; returns the in-flight
+        op records of the crash, if any,
+      * ``drain_items() -> list`` -- drain everything after the last epoch,
+      * ``queue_of() -> Optional[dict]`` -- item -> internal-queue map for
+        Q-relaxed endpoints (None = strict FIFO).
+
+    Returns {"epochs": [...], "n_enqueued": ..., "n_consumed": ...}.
+    """
+    assert spec.crash in ("none", "clean", "torn"), spec.crash
+    epochs: List[Dict[str, Any]] = []
+    for e in range(spec.epochs):
+        crashed = spec.crash != "none"
+        hist = list(driver.run_ops(e, spec.seed + 31 * e, crashed))
+        if crashed:
+            hist += list(driver.crash_recover(spec.crash,
+                                              spec.seed * 7919 + e) or [])
+        drained = driver.drain_items() if e == spec.epochs - 1 else None
+        epochs.append({"history": hist, "crashed": crashed,
+                       "drained": drained})
+    stats = check_fifo_history(epochs, queue_of=driver.queue_of())
+    return {"epochs": epochs, **stats}
+
+
+# ---------------------------------------------------------------------------
+# Faithful-stack driver (Machine + generator queues)
+# ---------------------------------------------------------------------------
 
 
 @dataclass
@@ -23,6 +103,141 @@ class CycleResult:
     recovery_sim_time: float
     recovery_wall_s: float
     recovery_steps_scanned: int
+
+
+class MachineScenario:
+    """Scenario driver for the faithful stack: one ``Machine`` + one queue
+    (PerIQ / PerCRQ / PerLCRQ / combining) living across every epoch, so
+    recovery cost can grow with accumulated state (paper Figures 4/5).
+
+    Machine crashes are torn by construction: whatever lines were psync'd or
+    evicted before the crash survive, everything else is lost -- the
+    clean/torn mode distinction is a no-op here."""
+
+    def __init__(self, queue_factory: Callable[[Machine], Any],
+                 n_threads: int = 4, ops_per_thread: int = 20,
+                 crash_steps: int = 1500, seed: int = 0,
+                 eviction_rate: float = 0.0,
+                 workload_factory: Optional[Callable[[int, int, str], Dict]] = None,
+                 schedule_len: int = 400_000, trace: bool = False):
+        self.m = Machine(n_threads, seed=seed, eviction_rate=eviction_rate)
+        self.m.trace_enabled = trace
+        self.q = queue_factory(self.m)
+        self.n_threads = n_threads
+        self.ops_per_thread = ops_per_thread
+        self.crash_steps = crash_steps
+        self.schedule_len = schedule_len
+        self.workload_factory = workload_factory or (
+            lambda n, k, tag: pairs_workload(n, k, tag))
+        self.cycles: List[CycleResult] = []
+
+    def run_ops(self, epoch: int, seed: int, crash: bool) -> List[OpRecord]:
+        wl = self.workload_factory(self.n_threads, self.ops_per_thread,
+                                   f"c{epoch}.")
+        length = self.crash_steps if crash else self.schedule_len
+        sched = random_schedule(self.n_threads, length, seed=seed)
+        return run_epoch(self.m, self.q, wl, sched, epoch=epoch,
+                         crash_at_step=self.crash_steps if crash else None)
+
+    def crash_recover(self, mode: str, seed: int) -> List[OpRecord]:
+        self.m.restart()
+        t0 = time.perf_counter()
+        stats = self.q.recover() or {}
+        wall = time.perf_counter() - t0
+        self.cycles.append(CycleResult(
+            cycle=len(self.cycles),
+            ops_started=self.m.step_count,
+            recovery_sim_time=stats.get("sim_time", 0.0),
+            recovery_wall_s=wall,
+            recovery_steps_scanned=stats.get("steps", 0),
+        ))
+        return []  # in-flight invocations are already in the epoch history
+
+    def drain_items(self) -> List[Any]:
+        return drain(self.m, self.q)
+
+    def queue_of(self) -> Optional[Dict]:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Device-stack driver (WaveQueue / ShardedWaveQueue)
+# ---------------------------------------------------------------------------
+
+
+class WaveScenario:
+    """Scenario driver for the wave/fabric stack.  Each epoch enqueues a
+    fresh batch of unique int items and dequeues a few; a "torn" crash runs
+    one extra wave (``torn_enq`` new items + ``torn_deq_lanes`` dequeue
+    lanes per queue) whose flush is cut mid-delta -- those ops are reported
+    as in-flight invocations, exactly what the conservation invariant
+    charges torn losses against."""
+
+    def __init__(self, queue, batch: int = 12, deq: int = 5,
+                 torn_enq: int = 2, torn_deq_lanes: int = 2):
+        self.queue = queue
+        self.batch, self.deq = batch, deq
+        self.torn_enq, self.torn_deq_lanes = torn_enq, torn_deq_lanes
+        self._next_item = 0
+        self._t = 0.0
+        self._queue_of: Dict[int, int] = {}
+
+    # -- history plumbing --------------------------------------------------
+
+    def _rec(self, kind: str, epoch: int, arg=None, result=None,
+             completed: bool = True) -> OpRecord:
+        self._t += 1.0
+        return OpRecord(tid=0, kind=kind, arg=arg, result=result,
+                        completed=completed, epoch=epoch, t_inv=self._t,
+                        t_resp=self._t + 0.5 if completed else float("inf"))
+
+    def _fresh_items(self, n: int) -> List[int]:
+        items = list(range(self._next_item, self._next_item + n))
+        self._next_item += n
+        # mirror the endpoint's round-robin placement so the checker knows
+        # which internal queue each item is FIFO against
+        Q = getattr(self.queue, "Q", 1)
+        place = getattr(self.queue, "_place", 0)
+        for i, it in enumerate(items):
+            self._queue_of[it] = (place + i) % Q
+        return items
+
+    # -- driver protocol ---------------------------------------------------
+
+    def run_ops(self, epoch: int, seed: int, crash: bool) -> List[OpRecord]:
+        hist: List[OpRecord] = []
+        items = self._fresh_items(self.batch)
+        self.queue.enqueue_all(items)
+        hist += [self._rec("enq", epoch, arg=it) for it in items]
+        got, _ = self.queue.dequeue_n(self.deq)
+        hist += [self._rec("deq", epoch, result=int(it)) for it in got]
+        return hist
+
+    def crash_recover(self, mode: str, seed: int) -> List[OpRecord]:
+        epoch = 0  # epoch field is informational; times keep global order
+        if mode == "clean":
+            self.queue.crash_and_recover()
+            return []
+        items = self._fresh_items(self.torn_enq)
+        self.queue.torn_crash_and_recover(
+            enq_items=items, deq_lanes=self.torn_deq_lanes, seed=seed)
+        Q = getattr(self.queue, "Q", 1)
+        inflight = [self._rec("enq", epoch, arg=it, completed=False)
+                    for it in items]
+        inflight += [self._rec("deq", epoch, completed=False)
+                     for _ in range(self.torn_deq_lanes * Q)]
+        return inflight
+
+    def drain_items(self) -> List[int]:
+        return [int(v) for v in self.queue.drain()]
+
+    def queue_of(self) -> Optional[Dict]:
+        return dict(self._queue_of)
+
+
+# ---------------------------------------------------------------------------
+# Recovery-cost cycles (paper Section 5; Figures 4/5)
+# ---------------------------------------------------------------------------
 
 
 def run_cycles(
@@ -39,31 +254,19 @@ def run_cycles(
     cycles, so recovery cost can grow with queue size -- paper Figures 4/5).
 
     ``recovery_steps``: number of shared-memory steps before the simulated
-    full-system crash of each cycle.
+    full-system crash of each cycle.  Implemented over ``MachineScenario``
+    (the same driver the consistency tests use), preserving the original
+    per-cycle seeding.
     """
-    m = Machine(n_threads, seed=seed, eviction_rate=eviction_rate)
-    m.trace_enabled = False
-    queue = queue_factory(m)
-    results: List[CycleResult] = []
-    wf = workload_factory or (lambda n, k, tag: pairs_workload(n, k, tag))
+    sc = MachineScenario(queue_factory, n_threads=n_threads,
+                         ops_per_thread=ops_per_thread,
+                         crash_steps=recovery_steps, seed=seed,
+                         eviction_rate=eviction_rate,
+                         workload_factory=workload_factory)
     for cycle in range(n_cycles):
-        wl = wf(n_threads, ops_per_thread, f"c{cycle}.")
-        sched = random_schedule(n_threads, recovery_steps, seed=seed * 1000 + cycle)
-        run_epoch(m, queue, wl, sched, epoch=cycle, crash_at_step=recovery_steps)
-        t0 = time.perf_counter()
-        stats = queue.recover()
-        wall = time.perf_counter() - t0
-        m.restart()
-        results.append(
-            CycleResult(
-                cycle=cycle,
-                ops_started=m.step_count,
-                recovery_sim_time=stats.get("sim_time", 0.0),
-                recovery_wall_s=wall,
-                recovery_steps_scanned=stats.get("steps", 0),
-            )
-        )
-    return results
+        sc.run_ops(cycle, seed * 1000 + cycle, crash=True)
+        sc.crash_recover("torn", cycle)
+    return sc.cycles
 
 
 def mean_recovery(results: List[CycleResult]) -> Dict[str, float]:

@@ -17,8 +17,8 @@ from __future__ import annotations
 
 from typing import Any, Generator, Optional
 
-from .machine import (BOT, EMPTY, FAI, OK, TOP, CAS, GetSet, LocalWork,
-                      Machine, PSync, PWB, Read, Write)
+from .machine import (BOT, EMPTY, FAI, OK, TOP, GetSet,
+                      Machine, PSync, PWB, Read)
 
 TAIL = ("Tail",)
 HEAD = ("Head",)

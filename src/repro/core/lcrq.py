@@ -19,7 +19,7 @@ import itertools
 from typing import Any, Generator, Optional
 
 from .crq import CRQ
-from .machine import (BOT, CLOSED, EMPTY, FAI, OK, CAS, LocalWork, Machine,
+from .machine import (CLOSED, EMPTY, OK, CAS, LocalWork, Machine,
                       PSync, PWB, Read)
 
 NULL = None

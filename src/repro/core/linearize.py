@@ -1,34 +1,35 @@
-"""Durable-linearizability checking.
+"""PerIQ / PerCRQ linearization procedures (the ALGORITHM-SPECIFIC half of
+durable-linearizability checking).
 
-Two layers:
+  * ``periq_linearization`` -- a faithful implementation of the paper's
+    Algorithm 2 linearization procedure for PerIQ, driven by the machine's
+    NVM image at crash time.  For PerIQ the rules collapse to a crisp
+    characterization (Section 4.1):
 
-1. ``periq_linearization`` -- a faithful implementation of the paper's
-   Algorithm 2 linearization procedure for PerIQ, driven by the machine's NVM
-   image at crash time.  For PerIQ the rules collapse to a crisp
-   characterization (Section 4.1):
+      * enq_t linearized  iff NVM[Q[t]] == x_t (enqueue persisted) or
+                               NVM[Q[t]] == ⊤ (its matching dequeue persisted)
+      * deq_t linearized  iff NVM[Q[t]] == ⊤, or (enq_t linearized and some
+                               following dequeue persisted: ∃ t' > t with
+                               NVM[Q[t']] == ⊤; ticket density makes deq_t
+                               active whenever a later ticket was handed out)
 
-     * enq_t linearized  iff NVM[Q[t]] == x_t (enqueue persisted) or
-                              NVM[Q[t]] == ⊤ (its matching dequeue persisted)
-     * deq_t linearized  iff NVM[Q[t]] == ⊤, or (enq_t linearized and some
-                              following dequeue persisted: ∃ t' > t with
-                              NVM[Q[t']] == ⊤; ticket density makes deq_t
-                              active whenever a later ticket was handed out)
+    The durable queue state after recovery must therefore drain exactly
+    ``[x_t for t in sorted(E - D)]`` -- checked by ``check_periq_crash``.
 
-   The durable queue state after recovery must therefore drain exactly
-   ``[x_t for t in sorted(E - D)]`` -- checked by ``check_periq_crash``.
+  * ``percrq_linearization`` -- the paper's Algorithm 4 rules for one CRQ
+    instance.
 
-2. ``check_fifo_history`` -- an algorithm-agnostic checker for multi-epoch
-   histories with unique items: no duplication, no invention, real-time FIFO,
-   and conservation across crashes.  Used for PerCRQ / PerLCRQ / combining
-   queues under hypothesis-generated schedules.
+The algorithm-AGNOSTIC history checkers (generic FIFO invariants, Q-relaxed
+fabric order, torn-crash conservation) live in ``core/consistency.py`` and
+are re-exported here for compatibility.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
-from .harness import OpRecord
-from .iq import HEAD, TAIL, qcell
-from .machine import BOT, EMPTY, FAI, GetSet, Machine, TOP
+from .consistency import Consumption, check_fifo_history  # noqa: F401
+from .machine import BOT, EMPTY, GetSet, Machine, TOP  # noqa: F401
+from .iq import qcell
 
 
 # ---------------------------------------------------------------------------
@@ -158,144 +159,3 @@ def expected_percrq_drain(m: Machine, crq) -> List[Any]:
     return [items[i] for i in sorted(E - D) if i in items]
 
 
-# ---------------------------------------------------------------------------
-# Generic multi-epoch FIFO checker
-# ---------------------------------------------------------------------------
-
-
-class Consumption:
-    """Where/when an item was consumed: by a completed dequeue (epoch, times)
-    or by the final drain (position)."""
-
-    __slots__ = ("epoch", "t_inv", "t_resp", "drain_pos")
-
-    def __init__(self, epoch, t_inv, t_resp, drain_pos=None):
-        self.epoch, self.t_inv, self.t_resp = epoch, t_inv, t_resp
-        self.drain_pos = drain_pos
-
-    def surely_before(self, other: "Consumption") -> bool:
-        if self.epoch != other.epoch:
-            return self.epoch < other.epoch
-        if self.drain_pos is not None and other.drain_pos is not None:
-            return self.drain_pos < other.drain_pos
-        if self.drain_pos is None and other.drain_pos is None:
-            return self.t_resp < other.t_inv
-        # dequeue vs drain within an epoch: drain runs after recovery => after
-        return other.drain_pos is not None
-
-
-def check_fifo_history(
-    epochs: List[Dict[str, Any]],
-) -> Dict[str, Any]:
-    """Check a multi-epoch execution of a durable FIFO queue.
-
-    epochs: list of {"history": [OpRecord], "crashed": bool,
-                     "drained": [items] | None}
-    where "drained" are the items drained after the LAST epoch (only on the
-    final entry) or None.
-
-    Items must be globally unique.  Checks:
-      I1  no item is returned more than once (dequeues + drain),
-      I2  every returned item was the argument of some enqueue invocation,
-      I3  real-time FIFO: for completed enqueues a strictly-before b (both
-          consumed), a is not consumed strictly after b,
-      I4  conservation: an item of a COMPLETED enqueue that is never consumed
-          may only disappear in an epoch that CRASHED (linearized-but-
-          incomplete dequeues exist only around crashes),
-      I5  a completed-enqueue item may not be consumed before it was enqueued.
-    """
-    enq_by_item: Dict[Any, Tuple[int, OpRecord]] = {}
-    consumed: Dict[Any, Consumption] = {}
-    returned_counts: Dict[Any, int] = {}
-
-    for ei, ep in enumerate(epochs):
-        for rec in ep["history"]:
-            if rec.kind == "enq":
-                assert rec.arg not in enq_by_item, f"duplicate item {rec.arg}"
-                enq_by_item[rec.arg] = (ei, rec)
-    for ei, ep in enumerate(epochs):
-        for rec in ep["history"]:
-            if rec.kind == "deq" and rec.completed and rec.result is not EMPTY:
-                item = rec.result
-                returned_counts[item] = returned_counts.get(item, 0) + 1
-                consumed[item] = Consumption(ei, rec.t_inv, rec.t_resp)
-        if ep.get("drained") is not None:
-            for pos, item in enumerate(ep["drained"]):
-                returned_counts[item] = returned_counts.get(item, 0) + 1
-                consumed[item] = Consumption(ei, float("inf"), float("inf"), pos)
-
-    # I1
-    dups = {i: c for i, c in returned_counts.items() if c > 1}
-    assert not dups, f"items returned more than once: {dups}"
-    # I2
-    unknown = [i for i in returned_counts if i not in enq_by_item]
-    assert not unknown, f"items returned but never enqueued: {unknown}"
-    # I5
-    for item, cons in consumed.items():
-        eei, erec = enq_by_item[item]
-        assert (eei, 0 if cons.drain_pos is None else 1) >= (eei, 0), "impossible"
-        if cons.epoch < eei:
-            raise AssertionError(f"item {item} consumed before its enqueue epoch")
-    # I3: real-time FIFO among completed enqueues
-    completed_enqs = [
-        (ei, rec) for item, (ei, rec) in enq_by_item.items() if rec.completed
-    ]
-    for item_a, (ea, ra) in enq_by_item.items():
-        if not ra.completed:
-            continue
-        ca = consumed.get(item_a)
-        for item_b, (eb, rb) in enq_by_item.items():
-            if item_a is item_b or not rb.completed:
-                continue
-            # a strictly precedes b?
-            if not ((ea, ra.t_resp) < (eb, rb.t_inv)) or (ea == eb and ra.t_resp >= rb.t_inv):
-                continue
-            cb = consumed.get(item_b)
-            if cb is None:
-                continue
-            if ca is None:
-                # a vanished while b (enqueued later) was consumed: only legal
-                # if a's epoch crashed (a consumed by an unrecorded linearized
-                # dequeue around the crash)
-                assert epochs[ea]["crashed"] or any(
-                    epochs[k]["crashed"] for k in range(ea, cb.epoch + 1)
-                ), (
-                    f"FIFO violation: {item_a} (completed enqueue, earlier) lost "
-                    f"while later {item_b} was consumed, with no crash"
-                )
-            else:
-                assert not cb.surely_before(ca), (
-                    f"FIFO violation: {item_b} consumed before {item_a} "
-                    f"but enqueue({item_a}) completed before enqueue({item_b}) began"
-                )
-    # I4: conservation.  A completed enqueue's item that is never observed
-    # again ("vanished") is only legal if a linearized-but-incomplete dequeue
-    # could have consumed it around a crash: (a) some epoch >= its enqueue
-    # crashed, and (b) globally there are at least as many incomplete dequeue
-    # invocations in crashed epochs as vanished items.
-    final_crashes = [ep["crashed"] for ep in epochs]
-    drained_recorded = any(ep.get("drained") is not None for ep in epochs)
-    if drained_recorded:
-        vanished = []
-        for item, (ei, rec) in enq_by_item.items():
-            if rec.completed and item not in consumed:
-                assert any(final_crashes[ei:]), (
-                    f"item {item} from completed enqueue lost without any crash"
-                )
-                vanished.append(item)
-        incomplete_deqs = sum(
-            1
-            for ei, ep in enumerate(epochs)
-            if ep["crashed"]
-            for r in ep["history"]
-            if r.kind == "deq" and not r.completed
-        )
-        assert len(vanished) <= incomplete_deqs, (
-            f"{len(vanished)} completed-enqueue items vanished but only "
-            f"{incomplete_deqs} incomplete dequeues exist to account for them: "
-            f"{vanished}"
-        )
-    return {
-        "n_enqueued": len(enq_by_item),
-        "n_consumed": len(consumed),
-    }

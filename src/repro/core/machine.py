@@ -37,6 +37,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Generator, Iterable, List, Optional, Tuple
 
+from .persistence import LinePersistence
+
 # ---------------------------------------------------------------------------
 # Sentinels (the paper's special values)
 # ---------------------------------------------------------------------------
@@ -230,7 +232,11 @@ class Machine:
         self.lines: Dict[Any, _LineMeta] = {}
         self.defaults: Dict[Any, Any] = {}
         self.default_factory: Optional[Callable[[Any], Any]] = None
-        self.pending: Dict[int, set] = {t: set() for t in range(n_threads)}
+        # pwb/pfence/psync/eviction bookkeeping lives in the shared
+        # persistence model (core/persistence.py): the machine owns the
+        # cells, the model owns the write-back protocol state.
+        self.persistence = LinePersistence(
+            n_threads, self._flush_line, self._dirty_line_keys)
         self.clock: List[float] = [0.0] * n_threads
         self.line_clock: Dict[Any, float] = {}
         self.global_time: float = 0.0
@@ -239,11 +245,23 @@ class Machine:
         self.eviction_rate = eviction_rate
         self.trace: List[Tuple] = []      # (time, tid, action, result) events
         self.trace_enabled = True
-        self.persist_count = 0            # pwb count (persistence-cost metric)
-        self.psync_count = 0
         self.step_count = 0
         self.time_in_psync = [0.0] * n_threads
         self._last_flushed: List[Any] = []
+
+    # persistence-cost metrics (paper Figures 3/6), kept as properties for
+    # the benchmarks/tests that read them off the machine directly
+    @property
+    def persist_count(self) -> int:
+        return self.persistence.pwb_count
+
+    @property
+    def psync_count(self) -> int:
+        return self.persistence.psync_count
+
+    @property
+    def pending(self) -> Dict[int, set]:
+        return self.persistence.pending
 
     # -- memory helpers -----------------------------------------------------
 
@@ -306,21 +324,25 @@ class Machine:
         meta = self.lines.get(lk)
         return meta is not None and any(self.cells[v].dirty for v in meta.vars)
 
+    def _dirty_line_keys(self) -> List[Any]:
+        return [lk for lk in self.lines if self._line_dirty(lk)]
+
     def evict_random(self, k: int = 1) -> None:
         """The eviction adversary: system-initiated write-backs."""
-        dirty = [lk for lk in self.lines if self._line_dirty(lk)]
-        for lk in self.rng.sample(dirty, min(k, len(dirty))):
-            self._flush_line(lk)
+        self.persistence.evict(self.rng, k)
 
     def crash(self) -> None:
-        """Full-system crash: volatile image lost, NVM image survives."""
+        """Full-system crash: volatile image lost, NVM image survives.
+
+        The surviving image is in general TORN: only the lines that were
+        flushed (psync'd or evicted) before the crash hold their latest
+        values -- in-flight pwbs are lost with the caches."""
         self.crashed = True
         for cell in self.cells.values():
             cell.vol, cell.dirty = None, False
         for meta in self.lines.values():
             meta.recent.clear()
-        for t in range(self.n):
-            self.pending[t].clear()
+        self.persistence.crash()
 
     def restart(self) -> None:
         self.crashed = False
@@ -348,12 +370,12 @@ class Machine:
             return None, cm.local_op * act.cost
 
         if isinstance(act, (PFence,)):
+            self.persistence.pfence(tid)
             return None, cm.local_op
 
         if isinstance(act, PWB):
             self._get_cell(act.var)  # materialize
-            self.pending[tid].add(self.line_of(act.var))
-            self.persist_count += 1
+            self.persistence.pwb(tid, self.line_of(act.var))
             return None, cm.pwb_issue
 
         if isinstance(act, PSync):
@@ -361,16 +383,13 @@ class Machine:
             # worst single-line flush + a small pipeline increment per extra
             # line.  The DES scheduler additionally serializes the flushed
             # lines' clocks and a global NVM write port (see run_des).
-            flushed = list(self.pending[tid])
+            flushed = self.persistence.psync(tid)
             worst = 0.0
             for lk in flushed:
                 meta = self.lines.get(lk)
                 if meta is not None:
                     worst = max(worst, cm.flush_cost(len(meta.writers)))
-                    self._flush_line(lk)
             cost = cm.psync_base + worst + cm.flush_pipeline * max(0, len(flushed) - 1)
-            self.pending[tid].clear()
-            self.psync_count += 1
             self.time_in_psync[tid] += cost
             self._last_flushed = flushed
             return None, cost

@@ -1,0 +1,249 @@
+"""The shared persistence model: ONE write-back/crash semantics, two stacks.
+
+Both reproduction stacks implement the same explicit-epoch persistency
+contract (DESIGN.md §7):
+
+  * a store first lands in a *volatile* image,
+  * a ``pwb`` requests an asynchronous write-back of one cache line,
+  * a ``psync`` drains every requested write-back (the only point where
+    persistence is guaranteed),
+  * the *eviction adversary* may write any dirty line back at ANY time,
+  * a full-system crash keeps exactly the lines that landed -- which is, in
+    general, a TORN state: an arbitrary "prefix + evictions" cut of the
+    write-backs in flight at crash time.
+
+The two implementations:
+
+  * ``LinePersistence`` -- the host-side bookkeeping the faithful ``Machine``
+    (core/machine.py) delegates its pwb/pfence/psync/eviction handling to:
+    per-thread pending-line sets, flush-on-psync, random eviction, counters.
+  * ``WaveDelta`` + ``apply_delta`` + ``torn_masks`` -- the device-side
+    (jittable) equivalent for the wave engine: one wave's flush is an ORDERED
+    sequence of pwb records (enqueue cells, then dequeue cells, then the
+    Head-mirror line, then the segment-header line), and a crash point is a
+    boolean mask over that sequence (a prefix of the ordered pwbs landed,
+    plus arbitrary evicted records).  ``core/wave.py::crash_sweep`` vmaps
+    hundreds of such masks through recovery in one device call.
+
+Mapping table (the same model, two spellings):
+
+  | model concept        | Machine (faithful)         | wave engine (device)    |
+  |----------------------|----------------------------|-------------------------|
+  | volatile image       | ``_Cell.vol``/``dirty``    | ``vol: WaveState``      |
+  | durable image        | ``_Cell.nvm``              | ``nvm: WaveState``      |
+  | pwb                  | ``pending[tid].add(line)`` | one ``WaveDelta`` record|
+  | psync                | flush pending lines        | apply the whole delta   |
+  | eviction adversary   | ``evict_random``           | random record bits      |
+  | torn crash           | crash with pending unflushed | prefix+eviction mask  |
+  | recovery input       | the NVM cells              | ``apply_delta`` image   |
+
+``crash_recover_images`` is the ONE place that encodes the donation-aliasing
+rule every crash/recover cycle must follow: after recovery the volatile and
+durable images must be DISTINCT buffers (the hot-path jits donate both
+separately; aliasing them would let a donated update corrupt the other).
+"""
+from __future__ import annotations
+
+import random
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Host side: the Machine's pwb/pfence/psync/eviction bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class LinePersistence:
+    """Per-thread pending write-back sets + flush/evict/crash transitions.
+
+    The owner supplies two callbacks instead of handing over its memory:
+    ``flush_line(line_key)`` copies a line's volatile values into the durable
+    image, ``dirty_lines()`` lists the line keys with unflushed stores (the
+    eviction adversary's candidates).  ``Machine`` owns the cells; this class
+    owns the persistence *protocol* state.
+    """
+
+    def __init__(self, n_threads: int,
+                 flush_line: Callable[[Any], None],
+                 dirty_lines: Callable[[], List[Any]]) -> None:
+        self.n = n_threads
+        self._flush_line = flush_line
+        self._dirty_lines = dirty_lines
+        self.pending: Dict[int, set] = {t: set() for t in range(n_threads)}
+        self.pwb_count = 0
+        self.psync_count = 0
+
+    def pwb(self, tid: int, line: Any) -> None:
+        """Request an asynchronous write-back of ``line`` (not yet durable)."""
+        self.pending[tid].add(line)
+        self.pwb_count += 1
+
+    def pfence(self, tid: int) -> None:
+        """Ordering only: with the scheduler executing every shared step
+        atomically (TSO), no bookkeeping is needed beyond the cost model."""
+
+    def psync(self, tid: int) -> List[Any]:
+        """Drain ``tid``'s pending write-backs; returns the flushed lines
+        (the owner prices them and serializes their line clocks)."""
+        flushed = list(self.pending[tid])
+        for lk in flushed:
+            self._flush_line(lk)
+        self.pending[tid].clear()
+        self.psync_count += 1
+        return flushed
+
+    def evict(self, rng: random.Random, k: int = 1) -> List[Any]:
+        """The eviction adversary: write back up to ``k`` random dirty lines
+        without any thread asking."""
+        dirty = self._dirty_lines()
+        victims = rng.sample(dirty, min(k, len(dirty)))
+        for lk in victims:
+            self._flush_line(lk)
+        return victims
+
+    def crash(self) -> None:
+        """Full-system crash: in-flight write-backs are lost with the caches
+        (whatever already landed stays -- the owner keeps the NVM image)."""
+        for t in range(self.n):
+            self.pending[t].clear()
+
+
+# ---------------------------------------------------------------------------
+# Device side: one wave's flush as an ordered, maskable delta
+# ---------------------------------------------------------------------------
+
+
+class WaveDelta(NamedTuple):
+    """One wave's flush as ordered pwb records (all leaves jittable).
+
+    Record order (the pwb issue order of ``_wave_step``):
+      * records ``0..W-1``     -- enqueue cell flushes, lane/ticket order,
+      * records ``W..2W-1``    -- dequeue cell flushes, lane/ticket order,
+      * record  ``2W``         -- the consumer shard's Head-mirror line,
+      * record  ``2W+1``       -- the segment-header line (closed+allocated).
+
+    ``live`` marks records that flush anything at all (idle/failed lanes
+    are dead records); a crash mask selects which LIVE records landed.
+    """
+
+    seg: jnp.ndarray          # [2W] int32 segment row of each cell record
+    slot: jnp.ndarray         # [2W] int32 ring slot of each cell record
+    val: jnp.ndarray          # [2W] int32 flushed cell value
+    idx: jnp.ndarray          # [2W] int32 flushed cell index
+    safe: jnp.ndarray         # [2W] bool  flushed cell safe bit
+    live: jnp.ndarray         # [2W] bool  record flushes at all
+    mirror_shard: jnp.ndarray  # scalar int32
+    mirror_val: jnp.ndarray    # scalar int32 flushed Head mirror
+    mirror_seg: jnp.ndarray    # scalar int32 flushed mirror segment
+    mirror_live: jnp.ndarray   # scalar bool (a dequeue half ran)
+    closed: jnp.ndarray        # [S] bool   flushed closed bits
+    allocated: jnp.ndarray     # [S] bool   flushed allocation bits
+
+
+def delta_records(delta: WaveDelta) -> int:
+    """Number of maskable pwb records per queue in ``delta`` (2W cells +
+    mirror + header).  The record axis is the LAST one, so this is correct
+    for single-queue deltas ([2W] leaves) and Q-stacked fabric deltas
+    ([Q, 2W] leaves) alike."""
+    return int(delta.slot.shape[-1]) + 2
+
+
+def apply_delta(nvm, delta: WaveDelta,
+                applied: Optional[jnp.ndarray] = None):
+    """Materialize the durable image after a (possibly torn) wave flush.
+
+    ``applied``: bool[2W+2] mask over the ordered records (None = every
+    record landed = the completed-psync image -- bit-identical to the fused
+    in-kernel flush, which the parity tests assert).  The two cell halves
+    apply in issue order (enqueues, then dequeues), so a dequeue transition
+    that reuses an enqueue's cell wins exactly when both records landed.
+    """
+    W2 = delta.slot.shape[0]
+    W = W2 // 2
+    S = nvm.vals.shape[0]
+    P = nvm.mirrors.shape[0]
+    if applied is None:
+        applied = jnp.ones((W2 + 2,), bool)
+    live = delta.live & applied[:W2]
+
+    vals, idxs, safes = nvm.vals, nvm.idxs, nvm.safes
+    for lo, hi in ((0, W), (W, W2)):
+        m = live[lo:hi]
+        s = jnp.where(m, delta.seg[lo:hi], S)          # S = out-of-range drop
+        u = delta.slot[lo:hi]
+        vals = vals.at[s, u].set(delta.val[lo:hi], mode="drop")
+        idxs = idxs.at[s, u].set(delta.idx[lo:hi], mode="drop")
+        safes = safes.at[s, u].set(delta.safe[lo:hi], mode="drop")
+
+    ml = delta.mirror_live & applied[W2]
+    sh = jnp.where(ml, delta.mirror_shard, P)
+    mirrors = nvm.mirrors.at[sh].set(delta.mirror_val, mode="drop")
+    mirror_seg = nvm.mirror_seg.at[sh].set(delta.mirror_seg, mode="drop")
+
+    hl = applied[W2 + 1]
+    closed = jnp.where(hl, delta.closed, nvm.closed)
+    allocated = jnp.where(hl, delta.allocated, nvm.allocated)
+    return nvm._replace(vals=vals, idxs=idxs, safes=safes, mirrors=mirrors,
+                        mirror_seg=mirror_seg, closed=closed,
+                        allocated=allocated)
+
+
+def torn_masks(key: jax.Array, n_points: int, n_records: int,
+               evict_rate: float = 0.25
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Crash-point masks for a sweep: point i's mask admits the first
+    ``points[i]`` ordered records (the pwbs that issued before the crash)
+    plus an independent Bernoulli(evict_rate) set of later records (the
+    eviction adversary).  Points are spread deterministically over
+    ``[0, n_records]`` so a sweep of >= n_records+1 points covers every
+    exact prefix; the evictions come from the seeded PRNG.
+
+    Returns (masks[n_points, n_records] bool, points[n_points] int32).
+    """
+    points = ((jnp.arange(n_points, dtype=jnp.int32) * (n_records + 1))
+              // max(n_points, 1))
+    evict = jax.random.bernoulli(key, evict_rate, (n_points, n_records))
+    order = jnp.arange(n_records, dtype=jnp.int32)
+    masks = (order[None, :] < points[:, None]) | evict
+    return masks, points
+
+
+def torn_mask(key: jax.Array, n_records: int, point: Optional[int] = None,
+              evict_rate: float = 0.25) -> jnp.ndarray:
+    """One crash mask: a random (or given) prefix point + random evictions."""
+    kp, ke = jax.random.split(key)
+    pt = (jax.random.randint(kp, (), 0, n_records + 1)
+          if point is None else jnp.int32(point))
+    evict = jax.random.bernoulli(ke, evict_rate, (n_records,))
+    return (jnp.arange(n_records, dtype=jnp.int32) < pt) | evict
+
+
+# ---------------------------------------------------------------------------
+# Crash/recover image discipline (shared by every endpoint)
+# ---------------------------------------------------------------------------
+
+
+def tree_copy(tree):
+    """Deep-copy every array leaf (jnp or numpy) of a pytree."""
+    return jax.tree.map(
+        lambda a: a.copy() if isinstance(a, np.ndarray) else jnp.copy(a),
+        tree)
+
+
+def crash_recover_images(nvm_image, recover_fn: Optional[Callable] = None):
+    """THE crash/recover image rule, in one place (DESIGN.md §7).
+
+    A crash loses the volatile image; ``recover_fn`` (e.g. ``recover`` /
+    ``fabric_recover``) rebuilds a consistent state from the durable image
+    (identity when the image needs no repair, e.g. a payload slab).  The
+    recovered state becomes BOTH images -- but the hot-path jits donate vol
+    and nvm separately, so they must never alias: the second return is a
+    deep copy.  Use as ``vol, nvm = crash_recover_images(nvm, recover_fn)``.
+    """
+    vol = nvm_image if recover_fn is None else recover_fn(nvm_image)
+    return vol, tree_copy(vol)

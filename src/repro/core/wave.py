@@ -15,7 +15,12 @@ follows the paper's discipline exactly:
     appended (closedFlag / node-header rules of Algorithm 3/5),
   * global Head / Tail are NEVER flushed -- recovery reconstructs them with
     the paper's scan (Algorithm 3 lines 58-83, vectorized; the backend's
-    ``recover_scan``).
+    ``recover_scan``),
+  * the per-wave flush is NOT atomic: it is an ordered sequence of pwb
+    records (enqueue cells, dequeue cells, mirror line, header line) drained
+    by one psync, and a crash may land between any two of them.
+    ``wave_step_delta`` exposes that sequence as a ``persistence.WaveDelta``;
+    ``crash_sweep`` vmaps hundreds of torn-crash points through recovery.
 
 The queue is a pool of S ring segments (the LCRQ linked list flattened into
 allocation order -- append-only, so segment s's successor is s+1; the
@@ -54,6 +59,9 @@ import numpy as np
 from repro.core.backend import (BOT, EMPTY_V, IDLE_V, RETRY_V,  # noqa: F401
                                 BackendLike, QueueBackend, available_backends,
                                 get_backend, register_backend)
+from repro.core.persistence import (WaveDelta, apply_delta,
+                                    crash_recover_images, delta_records,
+                                    torn_mask, torn_masks)
 
 
 class WaveState(NamedTuple):
@@ -129,10 +137,21 @@ def _wave_step(
     do_enq: bool = True,
     do_deq: bool = True,
     prefix_lanes: bool = False,
+    emit_delta: bool = False,
 ) -> Tuple[WaveState, WaveState, jnp.ndarray, jnp.ndarray]:
     """One bulk-synchronous wave: enqueues, then dequeues, then the
     persistence flush (cells + mirrors + segment headers ONLY -- never the
     global Head/Tail, per the paper's persistence principles).
+
+    The flush is an ORDERED sequence of pwb records (enqueue cells, dequeue
+    cells, the Head-mirror line, the segment-header line) drained by one
+    psync at the end of the wave -- a crash can land BETWEEN those pwbs, so
+    the durable image is only guaranteed consistent at wave boundaries, not
+    atomically per wave.  With ``emit_delta`` (STATIC) the wave returns that
+    sequence as a ``persistence.WaveDelta`` and materializes the NVM image
+    by applying it in full (bit-identical to the fused in-backend flush of
+    the hot path, which the parity tests assert); the torn-crash injector
+    replays any prefix+eviction mask of the same delta instead.
 
     The cell work runs through the backend's ``fused_wave`` against the two
     dynamically-sliced LIVE rows (segments ``last`` = L and ``first`` = F);
@@ -213,7 +232,30 @@ def _wave_step(
         mirrors=mirrors, mirror_seg=mirror_seg,
     )
     vol = _advance_segments(vol)
-    # ---- persistence write-back (the pwb+psync analog) -------------------
+    if emit_delta:
+        # ---- persistence write-back as an ORDERED flush delta ------------
+        # (torn-crash path: the NVM image is materialized by applying the
+        # records, so a crash injector can stop after any prefix of them)
+        dslot = deq_tickets % R
+        fW = jnp.zeros((W,), bool)
+        delta = WaveDelta(
+            seg=jnp.concatenate([jnp.broadcast_to(L, (W,)),
+                                 jnp.broadcast_to(F, (W,))]),
+            slot=jnp.concatenate([enq_tickets % R, dslot]),
+            val=jnp.concatenate([enq_vals, vals_F[dslot]]),
+            idx=jnp.concatenate([enq_tickets, idxs_F[dslot]]),
+            safe=jnp.concatenate([jnp.ones((W,), bool), safes_F[dslot]]),
+            live=jnp.concatenate([enq_ok if do_enq else fW,
+                                  (deq_out != IDLE_V) if do_deq else fW]),
+            mirror_shard=jnp.asarray(shard, jnp.int32),
+            mirror_val=mirrors[shard],
+            mirror_seg=mirror_seg[shard],
+            mirror_live=jnp.bool_(do_deq),
+            closed=vol.closed,
+            allocated=vol.allocated,
+        )
+        return vol, apply_delta(nvm, delta), enq_ok, deq_out, delta
+    # ---- persistence write-back (the pwb+psync analog, fused hot path) ---
     nvals, nidxs, nsafes = nvm.vals, nvm.idxs, nvm.safes
     if do_enq:
         nvals = nvals.at[L].set(nvals_L)
@@ -254,6 +296,25 @@ def wave_step(
     buffers (rebind them to the returned states)."""
     return _wave_step(vol, nvm, enq_vals, deq_mask, shard,
                       get_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def wave_step_delta(
+    vol: WaveState,
+    nvm: WaveState,
+    enq_vals: jnp.ndarray,
+    deq_mask: jnp.ndarray,
+    shard: jnp.ndarray,
+    backend: BackendLike = "jnp",
+):
+    """One wave that persists through the ORDERED flush delta
+    (``persistence.WaveDelta``) instead of the fused in-backend flush.
+    Returns (vol', nvm', enq_ok, deq_out, delta); nvm' equals the hot path's
+    bit for bit (asserted by the parity tests).  NOT donated -- this is the
+    consistency-engine path and callers keep the pre-wave NVM image so the
+    torn-crash injector can replay any prefix of ``delta`` over it."""
+    return _wave_step(vol, nvm, enq_vals, deq_mask, shard,
+                      get_backend(backend), emit_delta=True)
 
 
 # ---------------------------------------------------------------------------
@@ -323,9 +384,50 @@ def dequeue_scan(vol, nvm, counts, shard, W: int,
 
 
 def crash(nvm: WaveState) -> WaveState:
-    """Full-system crash: the volatile image is lost; computation restarts
-    from (a recovered version of) the NVM image."""
+    """CLEAN full-system crash: the volatile image is lost; computation
+    restarts from (a recovered version of) the NVM image.  This models a
+    crash at a wave boundary -- after the wave's psync drained every pwb.
+    A crash can also land MID-WAVE, between the ordered pwbs of the flush:
+    materialize that image with ``persistence.apply_delta`` over a
+    ``wave_step_delta`` delta (see ``crash_sweep`` /
+    ``WaveQueue.torn_crash_and_recover``)."""
     return nvm
+
+
+@functools.partial(jax.jit, static_argnames=("n_points", "backend"))
+def crash_sweep(nvm_pre: WaveState, delta: WaveDelta, key, n_points: int,
+                backend: BackendLike = "jnp", evict_rate=0.25):
+    """Materialize ``n_points`` torn-crash images of one wave's flush delta
+    and run every one through recovery -- vmapped, ONE device call.
+
+    ``nvm_pre`` is the durable image BEFORE the wave; each crash point
+    applies a prefix of the delta's ordered pwb records plus a seeded random
+    eviction set (``persistence.torn_masks``).  Returns (recovered states
+    stacked on a leading [n_points] axis, crash points [n_points])."""
+    b = get_backend(backend)
+    masks, points = torn_masks(key, n_points, delta_records(delta),
+                               evict_rate)
+    recovered = jax.vmap(
+        lambda mk: _recover_impl(apply_delta(nvm_pre, delta, mk), b))(masks)
+    return recovered, points
+
+
+def peek_items(state: WaveState) -> List[int]:
+    """Items present in ``state`` in FIFO (segment, index) order -- what a
+    full drain of a RECOVERED state would deliver, without running one
+    (recovery re-initializes every cell outside the live ranges, so the
+    in-range occupied cells ARE the queue contents).  Host-side forensics;
+    works on device or host pytrees."""
+    v = jax.device_get(state)
+    out: List[int] = []
+    S, R = v.vals.shape
+    for s in range(S):
+        h, t = int(v.heads[s]), int(v.tails[s])
+        for p in range(h, t):
+            u = p % R
+            if int(v.idxs[s][u]) == p and int(v.vals[s][u]) >= 0:
+                out.append(int(v.vals[s][u]))
+    return out
 
 
 def _recover_impl(nvm: WaveState, b: QueueBackend) -> WaveState:
@@ -594,11 +696,41 @@ class WaveQueue:
         return out
 
     def crash_and_recover(self):
-        self.vol = recover(crash(self.nvm), backend=self.backend)
-        # distinct buffers: the drivers donate vol and nvm separately, so
-        # the two images must never alias after recovery
-        self.nvm = jax.tree.map(jnp.copy, self.vol)
+        """Clean crash at a wave boundary + recovery (the donation-aliasing
+        rule lives in ``persistence.crash_recover_images``)."""
+        self.vol, self.nvm = crash_recover_images(
+            crash(self.nvm), lambda img: recover(img, backend=self.backend))
         return self.vol
+
+    def torn_crash_and_recover(self, enq_items=(), deq_lanes: int = 0,
+                               shard: int = 0, seed: int = 0,
+                               crash_point: Optional[int] = None,
+                               evict_rate: float = 0.25):
+        """Crash MID-WAVE: run one wave (``enq_items`` on the enqueue lanes,
+        ``deq_lanes`` active dequeue lanes) over the live state, but let only
+        a prefix of its ordered flush records -- plus a seeded random
+        eviction set -- land before the crash, then recover from the torn
+        image.  The wave's results are DISCARDED (the host never synced
+        them), so its operations are in-flight at the crash: each may or may
+        not have linearized.  Returns the recovered volatile state."""
+        items = np.asarray(list(enq_items), np.int32).reshape(-1)
+        assert items.size <= self.W and deq_lanes <= self.W
+        ev = np.full((self.W,), -1, np.int32)
+        ev[:items.size] = items
+        dm = np.arange(self.W) < deq_lanes
+        _vol, _nvm, _ok, _out, delta = wave_step_delta(
+            self.vol, self.nvm, jnp.asarray(ev), jnp.asarray(dm),
+            jnp.int32(shard), backend=self.backend)
+        mask = torn_mask(jax.random.PRNGKey(seed), delta_records(delta),
+                         point=crash_point, evict_rate=evict_rate)
+        self.vol, self.nvm = crash_recover_images(
+            apply_delta(self.nvm, delta, mask),
+            lambda img: recover(img, backend=self.backend))
+        return self.vol
+
+    def peek_items(self) -> List[int]:
+        """Durably-presentable queue contents in FIFO order (forensics)."""
+        return peek_items(self.vol)
 
     def persist_stats(self) -> dict:
         ops = np.maximum(self.ops, 1)

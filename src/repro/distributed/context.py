@@ -2,7 +2,7 @@
 model function (the mesh object is static; set by the launcher/dry-run)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 _MESH = None
 

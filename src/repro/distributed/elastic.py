@@ -14,7 +14,7 @@ stall the collective); recovery cost grows accordingly (paper Figs 4-6)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

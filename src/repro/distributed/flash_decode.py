@@ -9,8 +9,6 @@ all-gathering the whole cache.  Per-shard compute is T/16 of the baseline
 and the collective payload drops from O(T * KV * hd) to O(H * hd)."""
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

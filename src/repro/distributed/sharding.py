@@ -14,8 +14,7 @@ import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 
 def DP_AXES(mesh) -> Tuple[str, ...]:

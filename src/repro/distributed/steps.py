@@ -11,8 +11,7 @@ These are the functions the dry-run lowers and the launcher drives:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,12 +6,11 @@ backend set ``interpret=False`` (the default flips automatically)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import crq_wave as _crq_wave
 from . import fai_ticket as _fai_ticket
 from . import recovery_scan as _recovery_scan
-from . import ref as ref  # re-export for callers that want the oracle
+from . import ref as ref  # noqa: F401  (re-export: the jnp oracle)
 from . import wave_fused as _wave_fused
 
 

@@ -11,6 +11,14 @@ those rows while they sit in VMEM:
   3. the NVM cell flush of ONLY the touched slots (the pwb analog) for both
      rows -- the durable image rows ride along in the same VMEM residency.
 
+Semantically the flush is an ORDERED pwb sequence (enqueue cells in ticket
+order, then dequeue cells, then mirror + header lines) drained by the
+wave-end psync -- NOT an atomic image overwrite.  This kernel computes the
+all-records-landed endpoint of that sequence; ``core/wave.wave_step_delta``
+exposes the sequence itself as a ``persistence.WaveDelta`` (bit-identical
+when fully applied -- the parity tests assert it), which the torn-crash
+injector cuts at arbitrary prefix+eviction points (DESIGN.md §7).
+
 The caller (core/wave.py ``_wave_step``) dynamic-slices the rows out of the
 [S, R] pool and writes the results back with one dynamic-update-slice per
 array -- so a wave costs two row round-trips instead of the chain of

@@ -30,23 +30,22 @@ Usage:
 """
 import argparse
 import dataclasses
-import functools
 import json
 import math
 import re
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES
-from repro.configs.registry import (ARCHS, GRAD_ACCUM, cell_is_applicable,
-                                    get_config, input_specs, skip_reason)
-from repro.distributed.sharding import (batch_specs, cache_specs, DP_AXES,
+from repro.configs.registry import (ARCHS, GRAD_ACCUM, get_config,
+                                    input_specs, skip_reason)
+from repro.distributed.sharding import (batch_specs, cache_specs,
                                         opt_state_specs, param_specs)
 from repro.distributed.steps import (make_prefill_step, make_serve_step,
                                      make_train_step)
@@ -64,6 +63,16 @@ SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s32|u32|s64|u64|pred)\[([\d,]*)\
 DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
                "s32": 4, "u32": 4, "s64": 8, "u64": 8, "pred": 1}
 COLL_WEIGHT = {"all-reduce": 2.0}  # ring all-reduce moves ~2x the payload
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` across jax versions: newer jax returns
+    one dict, older versions a per-device list of dicts -- normalize to the
+    (first) dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
@@ -195,7 +204,7 @@ def _compile_costs(arch, shape, mesh, n_moe_groups, cfg, batch, ga,
                                   shard_kv=shard_kv, accum=accum)
     with mesh:
         compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -316,7 +325,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, fast: bool = False,
             "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
         }
         result["gate_cost_analysis"] = {
-            k: float(v) for k, v in compiled.cost_analysis().items()
+            k: float(v) for k, v in cost_analysis_dict(compiled).items()
             if k in ("flops", "bytes accessed", "transcendentals")
         }
         result["compile_gate_seconds"] = time.time() - t0

@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import ARCHS, get_config

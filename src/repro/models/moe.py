@@ -17,7 +17,7 @@ Design constraints (kimi-k2 scale: 384 experts, top-8, 61 layers):
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -17,9 +17,8 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

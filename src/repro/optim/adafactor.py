@@ -6,7 +6,7 @@ State layout: a flat list aligned with jax.tree.leaves(params) (robust to
 arbitrary param-tree nesting)."""
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,12 +13,13 @@ flow through the queue; the slab is persisted by the same wave flush.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fabric import ShardedWaveQueue
+from repro.core.persistence import crash_recover_images
 
 
 class PersistentDataPipeline:
@@ -47,6 +48,15 @@ class PersistentDataPipeline:
         self.produced = 0
         self.consumed = 0
         self.delivered_ids: List[int] = []
+        # acknowledged (durably enqueued) handles: the exactly-once recovery
+        # contract is defined over these.  Handles recycle mod slab_capacity;
+        # when a slot is reused its previous incarnation's lifecycle is
+        # FORGOTTEN (see produce), so recycled handles never alias in the
+        # recovery accounting.  Producing over a handle still live in the
+        # queue remains out of contract (the slab payload would be gone).
+        self.acked: List[int] = []
+        self._acked_set: set = set()
+        self._stash: List[int] = []
 
     # -- producer side ---------------------------------------------------------
 
@@ -58,10 +68,21 @@ class PersistentDataPipeline:
             sid, seq = next(self.source)
             h = self._next_handle % self.slab_capacity
             self._next_handle += 1
+            if h in self._acked_set:
+                # slot recycled: the previous incarnation's exactly-once
+                # lifecycle is over -- forget it so handle reuse cannot
+                # alias into the recovery accounting
+                assert h not in self._stash, \
+                    "slab overrun: recycling an undelivered handle"
+                self.acked.remove(h)
+                if h in self.delivered_ids:
+                    self.delivered_ids.remove(h)
             self.slab[h] = seq
             self.slab_nvm[h] = seq  # payload persisted BEFORE the handle
             handles.append(h)
         self.queue.enqueue_all(handles, shard=shard)
+        self.acked.extend(handles)
+        self._acked_set.update(handles)
         self.produced += len(handles)
         return len(handles)
 
@@ -75,7 +96,7 @@ class PersistentDataPipeline:
             # partial batch: push back is not allowed (queue semantics);
             # deliver only full batches in this reference impl, so requeue
             # remains impossible -- instead stash for the next call.
-            self._stash = getattr(self, "_stash", []) + handles
+            self._stash = self._stash + handles
             if len(self._stash) < self.batch_size:
                 return None
             handles, self._stash = (self._stash[: self.batch_size],
@@ -90,13 +111,30 @@ class PersistentDataPipeline:
 
     # -- fault tolerance ---------------------------------------------------------
 
-    def crash_and_recover(self) -> None:
+    def crash_and_recover(self, torn: Optional[dict] = None,
+                          seed: int = 0) -> None:
         """Full-system crash: volatile queue state lost; recovery per the
-        paper (mirrors -> Head, array scan -> Tail).  The slab NVM image is
-        the payload store."""
-        self.queue.crash_and_recover()
-        self.slab = self.slab_nvm.copy()
+        paper (mirrors -> Head, array scan -> Tail).  ``torn`` (e.g.
+        ``{"deq_lanes": 2}``) injects the crash MID-WAVE through the
+        flush-delta injector instead of at a wave boundary.
+
+        Exactly-once delivery: acknowledged samples whose dequeue transition
+        persisted but that never reached the trainer (the stash, and torn
+        mid-wave dequeues) are re-enqueued; samples still durably queued or
+        already delivered are not.  The slab's volatile copy rebinds through
+        ``crash_recover_images`` (the shared non-aliasing rule)."""
+        if torn is None:
+            self.queue.crash_and_recover()
+        else:
+            self.queue.torn_crash_and_recover(seed=seed, **torn)
+        survivors = set(self.queue.peek_items())
+        delivered = set(self.delivered_ids)
+        lost = [h for h in self.acked
+                if h not in delivered and h not in survivors]
         self._stash = []
+        if lost:
+            self.queue.enqueue_all(lost)
+        self.slab, self.slab_nvm = crash_recover_images(self.slab_nvm)
 
     def backlog(self) -> int:
         return self.queue.backlog()

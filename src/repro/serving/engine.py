@@ -15,7 +15,7 @@ completed requests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +63,20 @@ class ServingEngine:
 
     # -- admission ------------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+    def register(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        """Allocate a rid and record the request WITHOUT durable admission.
+        Used by the torn-submission path: the enqueue then happens inside a
+        crashed wave (``crash_and_recover(torn={"enq_items": [rid]})``), so
+        it may or may not have linearized -- recovery re-admits it iff it
+        did not survive."""
         rid = self._rid
         self._rid += 1
         self.requests[rid] = Request(rid, np.asarray(prompt, np.int32),
                                      max_new, [])
+        return rid
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        rid = self.register(prompt, max_new)
         self.queue.enqueue_all([rid])     # durable admission
         return rid
 
@@ -144,22 +153,35 @@ class ServingEngine:
 
     # -- fault tolerance -------------------------------------------------------------
 
-    def crash_and_recover(self) -> None:
+    def crash_and_recover(self, torn: Optional[dict] = None,
+                          seed: int = 0) -> None:
         """Crash: decode state (caches) is volatile and lost; the request
-        queue and completion results recover from NVM.  In-flight requests
-        (admitted = dequeued, not completed) are RE-ADMITTED by re-enqueueing
-        their ids -- durable linearizability of the queue guarantees
-        completed requests are not replayed and waiting requests are not
-        lost."""
-        self.queue.crash_and_recover()
-        inflight = [int(r) for r, d in zip(self.slot_rid, self.slot_done)
-                    if r >= 0 and not d]
+        queue recovers from NVM.  ``torn`` (e.g. ``{"deq_lanes": 2}`` or
+        ``{"enq_items": [rid]}``) injects the crash MID-WAVE through the
+        flush-delta injector instead of at a wave boundary.
+
+        Recovery re-admits EXACTLY the known requests that are neither
+        completed nor durably present in the recovered queue.  That covers
+        (a) requests lost with their decode slots, and (b) requests whose
+        dequeue transition persisted while the crash killed the host before
+        admission -- the torn case a slot-based re-admission (and clean-crash
+        testing) silently loses.  Durable linearizability of the queue plus
+        the completion record make admission exactly-once: a completed
+        request is never replayed, a surviving one never double-queued."""
+        if torn is None:
+            self.queue.crash_and_recover()
+        else:
+            self.queue.torn_crash_and_recover(seed=seed, **torn)
+        survivors = set(self.queue.peek_items())
         # volatile state reset
         self.caches = None
         self.slot_rid[:] = -1
         self.slot_done[:] = True
         self.slot_len[:] = 0
         self.slot_mirror[:] = 0
-        for rid in inflight:
+        lost = [rid for rid in self.requests
+                if rid not in self.completed and rid not in survivors]
+        for rid in lost:
             self.requests[rid].generated = []
-            self.queue.enqueue_all([rid])
+        if lost:
+            self.queue.enqueue_all(lost)

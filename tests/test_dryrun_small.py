@@ -24,7 +24,7 @@ SCRIPT = textwrap.dedent("""
                                             opt_state_specs, param_specs)
     from repro.distributed.steps import make_train_step, make_serve_step
     from repro.models.transformer import Model
-    from repro.launch.dryrun import collective_bytes
+    from repro.launch.dryrun import collective_bytes, cost_analysis_dict
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     arch, kind = "{arch}", "{kind}"
@@ -71,7 +71,7 @@ SCRIPT = textwrap.dedent("""
         lowered = jax.jit(step, donate_argnums=donate).lower(*args)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     print(json.dumps(dict(
         ok=True,

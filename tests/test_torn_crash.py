@@ -1,0 +1,357 @@
+"""Torn-crash consistency engine (DESIGN.md §7).
+
+The device stack's flush is an ORDERED pwb sequence drained by one psync; a
+crash may land between any two records.  These tests hold the wave/fabric
+engines to durable linearizability at EVERY such crash point:
+
+  * delta parity: the delta-materialized NVM image is bit-identical to the
+    fused in-backend flush (both backends),
+  * vmapped sweeps of >= 200 torn crash points per backend recover and pass
+    the shared checker on WaveQueue AND ShardedWaveQueue,
+  * the same scenario API drives Machine-layer PerCRQ cycles and wave/fabric
+    cycles through the same ``check_fifo_history``,
+  * the checkers themselves catch seeded violations (mutation tests).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consistency import check_fifo_history, check_wave_crash
+from repro.core.fabric import (ShardedWaveQueue, fabric_crash_sweep,
+                               fabric_step_delta)
+from repro.core.failures import (MachineScenario, ScenarioSpec, WaveScenario,
+                                 run_scenario)
+from repro.core.harness import OpRecord
+from repro.core.lcrq import LCRQ, install_line_map
+from repro.core.persistence import apply_delta, torn_masks, tree_copy
+from repro.core.wave import (WaveQueue, crash_sweep, peek_items,
+                             wave_step, wave_step_delta)
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _state_at(stacked, i):
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _rec(kind, t, arg=None, result=None, completed=True):
+    return OpRecord(tid=0, kind=kind, arg=arg, result=result,
+                    completed=completed, epoch=0, t_inv=t,
+                    t_resp=t + 0.5 if completed else float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# Delta parity: the ordered-record flush IS the fused flush
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_delta_flush_matches_fused_flush(backend):
+    """apply_delta(nvm_pre, delta) must equal the fused in-backend NVM flush
+    bit for bit -- including the same-segment aliasing case."""
+    q = WaveQueue(S=4, R=16, W=8, backend=backend)
+    q.enqueue_all(list(range(100, 120)))
+    q.dequeue_n(5)
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        ev = np.where(rng.random(8) < 0.6,
+                      rng.integers(200, 300, 8), -1).astype(np.int32)
+        dm = jnp.asarray(rng.random(8) < 0.6)
+        nvm_pre = tree_copy(q.nvm)
+        v1, n1, ok1, out1 = wave_step(
+            tree_copy(q.vol), tree_copy(q.nvm), jnp.asarray(ev), dm,
+            jnp.int32(0), backend=backend)
+        v2, n2, ok2, out2, delta = wave_step_delta(
+            q.vol, q.nvm, jnp.asarray(ev), dm, jnp.int32(0), backend=backend)
+        for a, b in zip(jax.tree.leaves(n1), jax.tree.leaves(n2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(v1), jax.tree.leaves(v2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        n3 = apply_delta(nvm_pre, delta)   # full mask == completed psync
+        for a, b in zip(jax.tree.leaves(n1), jax.tree.leaves(n3)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        q.vol, q.nvm = v2, n2
+
+
+def test_torn_masks_cover_every_prefix():
+    masks, points = torn_masks(jax.random.PRNGKey(0), 40, 18, evict_rate=0.0)
+    pts = set(np.asarray(points).tolist())
+    assert pts == set(range(19))           # 40 points over 18 records: all
+    m = np.asarray(masks)
+    for i, p in enumerate(np.asarray(points)):
+        assert m[i].sum() == p             # pure prefixes when evict_rate=0
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweeps: >= 200 torn crash points, vmapped, per backend
+# ---------------------------------------------------------------------------
+
+
+def _epoch_for_point(pre_enqueued, consumed_before, wave_enqs, n_deq_lanes,
+                     recovered):
+    """One torn-crash epoch for the generic history checker: every pre-wave
+    op completed, the crashed wave's ops in-flight, drain = recovery."""
+    t = 0.0
+    hist = []
+    for it in pre_enqueued:
+        t += 1.0
+        hist.append(_rec("enq", t, arg=it))
+    for it in consumed_before:
+        t += 1.0
+        hist.append(_rec("deq", t, result=it))
+    for it in wave_enqs:
+        t += 1.0
+        hist.append(_rec("enq", t, arg=it, completed=False))
+    for _ in range(n_deq_lanes):
+        t += 1.0
+        hist.append(_rec("deq", t, completed=False))
+    return [{"history": hist, "crashed": True, "drained": list(recovered)}]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_torn_crash_sweep_wavequeue(backend):
+    N_POINTS = 256
+    q = WaveQueue(S=4, R=16, W=8, backend=backend)
+    enqueued = list(range(100, 130))       # spans segments (R=16)
+    q.enqueue_all(enqueued)
+    consumed, _ = q.dequeue_n(7)
+    pre = q.peek_items()
+    assert sorted(consumed + pre) == sorted(enqueued)
+    nvm_pre = tree_copy(q.nvm)
+
+    wave_enqs = [200 + i for i in range(5)]
+    n_lanes = 6
+    ev = np.full((8,), -1, np.int32)
+    ev[:5] = wave_enqs
+    dm = jnp.asarray(np.arange(8) < n_lanes)
+    _v, _n, _ok, _out, delta = wave_step_delta(
+        q.vol, q.nvm, jnp.asarray(ev), dm, jnp.int32(0), backend=backend)
+
+    rec, points = crash_sweep(nvm_pre, delta, jax.random.PRNGKey(7),
+                              N_POINTS, backend=backend)
+    rec = jax.device_get(rec)
+    assert np.asarray(points).shape[0] == N_POINTS
+    for i in range(N_POINTS):
+        out = peek_items(_state_at(rec, i))
+        check_wave_crash(pre, wave_enqs, n_lanes, out)
+        if i % 16 == 0:   # the generic multi-epoch checker agrees
+            check_fifo_history(_epoch_for_point(
+                enqueued, consumed, wave_enqs, n_lanes, out))
+
+    # peek == a real drain of the recovered state (spot checks)
+    for i in (0, N_POINTS // 2, N_POINTS - 1):
+        expected = peek_items(_state_at(rec, i))   # from the host copy
+        q2 = WaveQueue(S=4, R=16, W=8, backend=backend)
+        q2.vol = jax.tree.map(jnp.asarray, _state_at(rec, i))
+        q2.nvm = tree_copy(q2.vol)                 # drain donates both
+        assert q2.drain() == expected
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_torn_crash_sweep_fabric(backend):
+    N_POINTS = 208 if backend == "jnp" else 200
+    Q = 2
+    f = ShardedWaveQueue(Q=Q, S=4, R=16, W=8, backend=backend)
+    enqueued = list(range(100, 140))
+    f.enqueue_all(enqueued)
+    consumed, _ = f.dequeue_n(6)
+    pre_q = f.peek_items_per_queue()
+    nvm_pre = tree_copy(f.nvm)
+
+    wave_items = list(range(500, 504))
+    n_lanes = 3
+    ev, dm, per_q = f.plan_torn_wave(wave_items, n_lanes)
+    _v, _n, _ok, _out, delta = fabric_step_delta(
+        f.vol, f.nvm, jnp.asarray(ev), jnp.asarray(dm), jnp.int32(0),
+        backend=backend)
+
+    rec, masks = fabric_crash_sweep(nvm_pre, delta, jax.random.PRNGKey(9),
+                                    N_POINTS, backend=backend)
+    rec = jax.device_get(rec)
+    for i in range(N_POINTS):
+        st = _state_at(rec, i)
+        seen = []
+        for qi in range(Q):
+            out = peek_items(_state_at(st, qi))
+            check_wave_crash(pre_q[qi], per_q[qi], n_lanes, out)
+            seen += out
+        assert len(seen) == len(set(seen)), "item duplicated across shards"
+
+
+# ---------------------------------------------------------------------------
+# One scenario API, both stacks, one checker
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_machine_percrq_shared_checker():
+    """Machine-layer PerCRQ run/crash/recover cycles through the unified
+    scenario API, validated by the SAME checker as the wave sweeps."""
+    def factory(m):
+        install_line_map(m)
+        return LCRQ(m, R=8, mode="percrq")
+
+    for seed in range(3):
+        r = run_scenario(
+            MachineScenario(factory, eviction_rate=0.01,
+                            crash_steps=900 + 333 * seed, seed=seed),
+            ScenarioSpec(epochs=2, crash="torn", seed=seed))
+        assert r["n_enqueued"] > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scenario_wave_and_fabric_torn(backend):
+    """WaveQueue and ShardedWaveQueue multi-epoch torn-crash cycles through
+    the same scenario API + checker (fabric order checked Q-relaxed)."""
+    for make in (lambda: WaveQueue(S=4, R=16, W=8, backend=backend),
+                 lambda: ShardedWaveQueue(Q=2, S=4, R=16, W=8,
+                                          backend=backend)):
+        for seed in range(2):
+            r = run_scenario(WaveScenario(make()),
+                             ScenarioSpec(epochs=2, crash="torn", seed=seed))
+            assert r["n_enqueued"] > 0
+
+
+def test_scenario_wave_clean_crash_loses_nothing():
+    r = run_scenario(WaveScenario(ShardedWaveQueue(Q=2, S=4, R=16, W=8)),
+                     ScenarioSpec(epochs=2, crash="clean", seed=5))
+    assert r["n_enqueued"] == r["n_consumed"]  # boundary crashes lose nothing
+
+
+# ---------------------------------------------------------------------------
+# The checkers catch seeded violations (mutation tests)
+# ---------------------------------------------------------------------------
+
+
+def test_check_wave_crash_catches_violations():
+    pre = [1, 2, 3]
+    check_wave_crash(pre, [9], 1, [2, 3, 9])        # legal: k=1 <= 1
+    with pytest.raises(AssertionError):             # loss beyond in-flight
+        check_wave_crash(pre, [9], 1, [3, 9])
+    with pytest.raises(AssertionError):             # completed out of order
+        check_wave_crash(pre, [], 1, [3, 2])
+    with pytest.raises(AssertionError):             # mid-queue (non-prefix) loss
+        check_wave_crash(pre, [], 1, [1, 3])
+    with pytest.raises(AssertionError):             # invented item
+        check_wave_crash(pre, [9], 3, [3, 7])
+    with pytest.raises(AssertionError):             # wave ticket order
+        check_wave_crash([], [5, 6], 0, [6, 5])
+    with pytest.raises(AssertionError):             # duplication
+        check_wave_crash(pre, [], 0, [1, 1, 2, 3])
+    with pytest.raises(AssertionError):             # completed after in-flight
+        check_wave_crash(pre, [9], 1, [2, 9, 3])
+
+
+def _tiny_engine():
+    from repro.configs.registry import get_config
+    from repro.models.transformer import Model
+    from repro.serving import ServingEngine
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, max_batch=3, max_len=64), cfg
+
+
+def test_serving_torn_refill_crash_exactly_once():
+    """Crash MID-WAVE inside a refill dequeue: some requests' dequeue
+    transitions persist without the host ever seeing them.  Slot-based
+    re-admission would lose those; survivor-based recovery must not."""
+    eng, cfg = _tiny_engine()
+    rng = np.random.default_rng(2)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, 5), max_new=3)
+            for _ in range(6)]
+    eng.step()
+    completed_before = dict(eng.completed)
+    eng.crash_and_recover(torn={"deq_lanes": 2}, seed=3)
+    done = eng.run_until_drained()
+    assert sorted(done) == sorted(rids)            # exactly once, none lost
+    for rid, toks in completed_before.items():
+        assert done[rid] == toks                   # not replayed
+
+
+def test_serving_torn_submission_crash_exactly_once():
+    """Crash MID-WAVE inside the admission enqueue itself: the submitted
+    request may or may not have linearized; recovery re-admits it iff it
+    did not survive -- either way it completes exactly once."""
+    eng, cfg = _tiny_engine()
+    rng = np.random.default_rng(3)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, 5), max_new=2)
+            for _ in range(3)]
+    torn_rid = eng.register(rng.integers(0, cfg.vocab, 5), max_new=2)
+    eng.crash_and_recover(torn={"enq_items": [torn_rid]}, seed=8)
+    done = eng.run_until_drained()
+    assert sorted(done) == sorted(rids + [torn_rid])
+
+
+def test_pipeline_torn_crash_no_loss_no_dup():
+    """Crash MID-WAVE inside a consumer dequeue of the data pipeline: every
+    acknowledged sample is still delivered exactly once."""
+    from repro.pipeline import PersistentDataPipeline, synthetic_token_source
+    src = synthetic_token_source(vocab=64, seq_len=8)
+    p = PersistentDataPipeline(src, batch_size=4, seq_len=8, R=64,
+                               n_queues=2, W=8)
+    p.produce(24)
+    for _ in range(2):
+        assert p.next_batch() is not None
+    p.crash_and_recover(torn={"deq_lanes": 3}, seed=11)
+    while p.next_batch() is not None:
+        pass
+    ids = list(p.delivered_ids)
+    assert len(ids) == len(set(ids)), "sample delivered twice"
+    assert sorted(ids) == sorted(p.acked), "acknowledged sample lost"
+
+
+def test_pipeline_torn_crash_with_stash_in_flight():
+    """A partial batch sits in the consumer stash (dequeued, undelivered)
+    when a torn crash hits: the stash must be re-enqueued, not lost."""
+    from repro.pipeline import PersistentDataPipeline, synthetic_token_source
+    src = synthetic_token_source(vocab=64, seq_len=8)
+    p = PersistentDataPipeline(src, batch_size=4, seq_len=8, R=64, W=8)
+    p.produce(6)
+    assert p.next_batch() is not None      # 4 delivered
+    assert p.next_batch() is None          # 2 left -> stashed
+    assert len(p._stash) == 2
+    p.crash_and_recover(torn={"deq_lanes": 2}, seed=4)
+    p.produce(6)                           # 2 requeued + 6 new = 2 batches
+    while p.next_batch() is not None:
+        pass
+    ids = list(p.delivered_ids)
+    assert len(ids) == len(set(ids))
+    assert sorted(ids) == sorted(p.acked)
+
+
+def test_pipeline_handle_recycling_keeps_exactly_once():
+    """Handles recycle mod slab_capacity; a recycled slot must not alias its
+    previous incarnation in the recovery accounting (stale 'delivered'
+    records would silently drop the new sample at a torn crash)."""
+    from repro.pipeline import PersistentDataPipeline, synthetic_token_source
+    src = synthetic_token_source(vocab=64, seq_len=8)
+    p = PersistentDataPipeline(src, batch_size=4, seq_len=8, R=64, W=8,
+                               slab_capacity=8)
+    for _ in range(2):                     # run the handle space around twice
+        p.produce(8)
+        while p.next_batch() is not None:
+            pass
+    p.produce(8)                           # third incarnation of handles 0-7
+    assert p.next_batch() is not None
+    p.crash_and_recover(torn={"deq_lanes": 2}, seed=9)
+    while p.next_batch() is not None:
+        pass
+    ids = list(p.delivered_ids)
+    assert len(ids) == len(set(ids))
+    assert sorted(ids) == sorted(p.acked)  # current incarnations: all exactly once
+
+
+def test_check_fifo_history_queue_of_relaxation():
+    """Cross-queue overtaking is legal exactly when queue_of says the items
+    live on different internal queues."""
+    t = iter(range(1, 100))
+    hist = [_rec("enq", next(t), arg="a"), _rec("enq", next(t), arg="b")]
+    ep = [{"history": hist, "crashed": False, "drained": ["b", "a"]}]
+    with pytest.raises(AssertionError):
+        check_fifo_history(ep)                       # strict FIFO: violation
+    check_fifo_history(ep, queue_of={"a": 0, "b": 1})   # different shards: ok
+    with pytest.raises(AssertionError):
+        check_fifo_history(ep, queue_of={"a": 0, "b": 0})  # same shard
