@@ -37,6 +37,11 @@ ROW_SCHEMA = {
                     "(wave_recovery_sweep rows)",
     "us_per_point": "amortized recovery microseconds per torn crash point "
                     "(wave_recovery_sweep rows)",
+    "segment_allocs": "segment allocations (appends + recycles) performed "
+                      "during the churn sweep (wave_churn rows; DESIGN.md "
+                      "§3c -- pre-PR-4 this could never exceed S per queue)",
+    "churn_pool_S": "segment-pool size per queue in the churn sweep (the "
+                    "claim threshold: allocs must exceed S * shards)",
 }
 
 
@@ -70,6 +75,10 @@ def main() -> None:
     ap.add_argument("--recovery", action="store_true",
                     help="additionally sweep torn-crash recovery latency "
                          "(queue size x crash point x backend)")
+    ap.add_argument("--churn", action="store_true",
+                    help="additionally sweep steady-state sustained "
+                         "throughput under continuous segment recycling "
+                         "(fill/close/recycle cycles on a tiny pool)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -142,6 +151,8 @@ def main() -> None:
                             backends=backends, shard_counts=shard_counts)
     if args.recovery:
         rowsw += wave_engine.run_recovery(backends=backends, fast=args.fast)
+    if args.churn:
+        rowsw += wave_engine.run_churn(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]
@@ -167,6 +178,14 @@ def main() -> None:
                     mine[qx] >= 2.0 * hmine[qx])
             claims["fabric"][f"speedup_device_vs_host_{be}_q{qx}"] = (
                 mine[qx] / hmine[qx])
+    # PR-4 tentpole: sustained churn must outlive the S-allocation cap that
+    # wedged the append-only pool (allocs > S per queue proves recycling ran)
+    churn = [r for r in rowsw if r["path"].startswith("wave_churn/")]
+    if churn:
+        claims["churn"] = {
+            f"claim_unbounded_lifetime_{r['backend']}_q{r['shards']}":
+                r["segment_allocs"] > r["churn_pool_S"] * r["shards"]
+            for r in churn}
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

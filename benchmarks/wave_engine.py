@@ -128,6 +128,60 @@ def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
     return rows
 
 
+def run_churn(backends: Sequence[str] = ("jnp", "pallas"),
+              fast: bool = False, Q: int = 4):
+    """Steady-state SUSTAINED throughput under continuous segment churn
+    (DESIGN.md §3c): an S=2 pool driven through fill -> tantrum-close ->
+    drain -> recycle cycles, so every fill retires and reallocates a ring.
+    Pre-PR-4 this workload wedged permanently after the first S fills (the
+    append-only pool); the rows prove unbounded lifetime and report the
+    recycling rate (``segment_allocs``) plus the persist discipline under
+    churn.  One row per (backend, shard count)."""
+    rows = []
+    S = 2                               # tiny pool: every fill recycles
+    for backend in backends:
+        r = 64 if backend == "pallas" else 512
+        w = 16 if backend == "pallas" else 64
+        cycles = 3 if (fast or backend == "pallas") else 12
+        for Qi in (1, Q):
+            if Qi == 1:
+                q = WaveQueue(S=S, R=r, W=w, backend=backend)
+            else:
+                q = ShardedWaveQueue(Q=Qi, S=S, R=r, W=w, backend=backend)
+            chunk = Qi * 2 * r          # one full pool fill per cycle
+            nxt = 0
+
+            def cycle():
+                nonlocal nxt
+                q.enqueue_all(list(range(nxt, nxt + chunk)))
+                nxt += chunk
+                got = q.drain()
+                assert len(got) == chunk, (backend, Qi, len(got))
+
+            cycle()                     # warm pass compiles every shape
+            t0 = time.perf_counter()
+            for _ in range(cycles):
+                cycle()
+            dt = time.perf_counter() - t0
+            st = q.persist_stats()
+            # allocations per queue = max epoch + 1 (epochs are dense from 0)
+            epochs = np.asarray(jax.device_get(q.vol.epoch))
+            allocs = int((epochs.max(axis=-1) + 1).sum())
+            rows.append({
+                "path": f"wave_churn/{backend}/q{Qi}",
+                "backend": backend, "shards": Qi,
+                "us_per_call": dt * 1e6 / (2 * cycles),
+                "ops_per_sec": 2 * chunk * cycles / dt,
+                "pwbs_per_op": float(st["pwbs"].sum()
+                                     / max(1, st["ops"].sum())),
+                "psyncs_per_op": float(st["psyncs"].sum()
+                                       / max(1, st["ops"].sum())),
+                "segment_allocs": allocs,
+                "churn_pool_S": S,
+            })
+    return rows
+
+
 def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
                  fast: bool = False, Q: int = 4, S: int = 8):
     """Torn-crash recovery latency (queue size x crash point x backend) --

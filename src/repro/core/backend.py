@@ -84,7 +84,11 @@ class QueueBackend(Protocol):
         ``persistence.WaveDelta`` the delta path emits for the same wave
         (core/wave.py ``emit_delta``; asserted by the parity tests).  The
         torn-crash injector owns every intermediate point of that sequence;
-        backends only ever compute the endpoint.
+        backends only ever compute the endpoint.  The wave's trailing
+        Head-mirror and segment-header records (closed bits + allocation
+        epochs + recycling bases, DESIGN.md §3c) are [P]/[S]-sized metadata
+        flushed OUTSIDE the backend, in ``_wave_step`` itself -- identical
+        on every backend, so the fused rows here stay a pure cell pipeline.
 
         ``do_enq``/``do_deq`` are STATIC flags: the device drivers issue
         enqueue-only / dequeue-only waves, and an all-idle half never changes
@@ -102,7 +106,13 @@ class QueueBackend(Protocol):
     def recover_scan(self, vals, idxs, head0
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(head, tail) recovered for one ring segment from the persisted
-        cells + the mirror-derived head0 (Algorithm 3 lines 61-80)."""
+        cells + the mirror-derived head0 (Algorithm 3 lines 61-80).
+
+        Recycled rows need no special handling here: the caller seeds
+        ``head0 = max(mirror head, base)``, and every stale cell of a
+        previous incarnation carries an index < base, so its contribution
+        sits below the seed and falls out of the max/min reductions (the
+        epoch-mismatch => ⊥ rule of DESIGN.md §3c)."""
         ...
 
 

@@ -193,6 +193,16 @@ def check_wave_crash(
     with 0 <= k <= inflight_deqs -- completed items are consumed in FIFO
     order only, at most one per in-flight dequeue, and surviving in-flight
     enqueues keep ticket order behind every surviving completed item.
+
+    A recycled-segment cut (the crashed wave retired a drained row and
+    reallocated it -- DESIGN.md §3c) needs no extra case: whether or not
+    the epoch/base header record landed, the reclamation-durability
+    invariant guarantees recovery either resurrects the retiring
+    incarnation's remainder (header torn: a FIFO suffix, k bounded by the
+    wave's in-flight dequeues) or an empty fresh incarnation (header
+    landed: stale cells read as ⊥ under the new base) -- both already
+    admitted shapes.  The mid-reallocation sweeps in tests/test_torn_crash
+    hold every such point to this same contract.
     Returns {"lost_prefix": k, "survived_wave_enqs": n}.
     """
     recovered = list(recovered)

@@ -11,7 +11,10 @@ drivers move that decision onto the device with ``lax.while_loop``:
     submits the first W not-yet-enqueued items per queue (selection by
     exclusive prefix-sum over the remaining mask), so a failed item is
     retried BEFORE anything placed after it -- per-queue FIFO is preserved
-    exactly like the halting host scan.
+    exactly like the halting host scan.  Segment-recycling progress happens
+    between rounds inside the while_loop (every ``_wave_step`` ends with
+    ``_advance_segments``), so a batch that tantrum-closes rings mid-flight
+    reclaims retired rows and keeps going without a host trip.
   * ``device_dequeue_n`` -- in-device backlog computation + lane
     reassignment across the Q axis.  Each round snapshots the per-queue
     backlogs, assigns the remaining demand proportionally (empty shards
@@ -80,17 +83,26 @@ def _select_rows(items: jnp.ndarray, done: jnp.ndarray, W: int):
 def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
                       b: QueueBackend):
     """items: [Q, N] int32 (-1 = padding).  Returns
-    (vol, nvm, done[Q, N], rounds, pwbs[Q]); ops == pwbs (one flushed cell
-    per completed enqueue), psyncs == rounds (one drain per fused wave)."""
+    (vol, nvm, done[Q, N], rounds, pwbs[Q], ops[Q]).
+
+    Accounting follows the ordered-record flush (``persistence.WaveDelta``):
+    ops = completed enqueues; pwbs = one flushed cell per completed enqueue
+    PLUS the segment-header line (closed/epoch/base) per active wave -- a
+    failing wave closes a segment and may recycle a retired row, both of
+    which flush through the header record; psyncs == rounds (one drain per
+    fused wave).  Recycling progress happens INSIDE the loop: every
+    ``_wave_step`` ends with ``_advance_segments``, so a round whose lanes
+    all failed on a closed ring reclaims/appends before the retry round --
+    the same between-waves guarantee the host loop has."""
     Q, N = items.shape
     dm = jnp.zeros((Q, W), bool)
 
     def cond(c):
-        _, _, done, rounds, _ = c
+        _, _, done, rounds, _, _ = c
         return jnp.any(~done) & (rounds < max_rounds)
 
     def body(c):
-        vol, nvm, done, rounds, pwbs = c
+        vol, nvm, done, rounds, pwbs, ops = c
         ev, idx = jax.vmap(_select_rows, in_axes=(0, 0, None))(items, done, W)
         # enqueue-only half-wave; lanes are prefix-active (the selection
         # fills lanes 0..k-1), so the windowed fast path applies
@@ -103,10 +115,13 @@ def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
         hit = jnp.where(ok & (ev >= 0), idx, N)
         done = jax.vmap(
             lambda d, h: d.at[h].set(True, mode="drop"))(done, hit)
-        pwbs = pwbs + jnp.sum(ok & (ev >= 0), axis=1, dtype=jnp.int32)
-        return vol, nvm, done, rounds + 1, pwbs
+        ok_cnt = jnp.sum(ok & (ev >= 0), axis=1, dtype=jnp.int32)
+        pwbs = pwbs + ok_cnt + jnp.any(ev >= 0, axis=1)
+        ops = ops + ok_cnt
+        return vol, nvm, done, rounds + 1, pwbs, ops
 
-    init = (vol, nvm, items < 0, jnp.int32(0), jnp.zeros((Q,), jnp.int32))
+    init = (vol, nvm, items < 0, jnp.int32(0), jnp.zeros((Q,), jnp.int32),
+            jnp.zeros((Q,), jnp.int32))
     return jax.lax.while_loop(cond, body, init)
 
 
@@ -114,7 +129,8 @@ def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
                    donate_argnums=(0, 1))
 def fabric_enqueue_all(vol, nvm, items, shard, max_rounds,
                        W: int, backend: BackendLike = "jnp"):
-    """Fabric entry point: items [Q, N] already placed across queues."""
+    """Fabric entry point: items [Q, N] already placed across queues.
+    Returns (vol, nvm, done[Q, N], rounds, pwbs[Q], ops[Q])."""
     return _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W,
                              get_backend(backend))
 
@@ -124,11 +140,11 @@ def fabric_enqueue_all(vol, nvm, items, shard, max_rounds,
 def device_enqueue_all(vol, nvm, items, shard, max_rounds,
                        W: int, backend: BackendLike = "jnp"):
     """Single-queue entry point: items [N].  Returns
-    (vol, nvm, done[N], rounds, pwbs)."""
-    vol, nvm, done, rounds, pwbs = _enqueue_all_impl(
+    (vol, nvm, done[N], rounds, pwbs, ops)."""
+    vol, nvm, done, rounds, pwbs, ops = _enqueue_all_impl(
         _stack1(vol), _stack1(nvm), items[None], shard, max_rounds, W,
         get_backend(backend))
-    return _unstack1(vol), _unstack1(nvm), done[0], rounds, pwbs[0]
+    return _unstack1(vol), _unstack1(nvm), done[0], rounds, pwbs[0], ops[0]
 
 
 # ---------------------------------------------------------------------------
@@ -187,10 +203,12 @@ def _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W: int, cap: int,
         pos = jnp.cumsum(fmask.astype(jnp.int32)) - fmask
         out = out.at[jnp.where(fmask, got + pos, cap)].set(flat, mode="drop")
         got = got + jnp.sum(fmask, dtype=jnp.int32)
-        # persist accounting: touched cells + one mirror line per active
-        # queue; the psync is per fused wave (= per round), counted once
+        # persist accounting: touched cells + the Head-mirror line + the
+        # segment-header line per active queue (a dequeue wave can retire a
+        # drained segment and recycle it -- closed/epoch/base flush); the
+        # psync is per fused wave (= per round), counted once
         pwbs = pwbs + jnp.sum((outw != IDLE_V) & dmv, axis=1,
-                              dtype=jnp.int32) + (counts > 0)
+                              dtype=jnp.int32) + 2 * (counts > 0)
         ops = ops + jnp.sum((outw >= 0) & dmv, axis=1, dtype=jnp.int32)
         # probe came back all-EMPTY and every queue is structurally empty
         all_empty = jnp.all(jnp.where(dmv, outw == EMPTY_V, True))

@@ -207,14 +207,15 @@ class ShardedWaveQueue:
         rows = np.full((Q, N), -1, np.int32)
         for q in range(Q):
             rows[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
-        self.vol, self.nvm, done, rounds, pwbs = _drv.fabric_enqueue_all(
+        (self.vol, self.nvm, done, rounds, pwbs,
+         ops) = _drv.fabric_enqueue_all(
             self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
             jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
-        done, rounds, pwbs = jax.device_get((done, rounds, pwbs))
+        done, rounds, pwbs, ops = jax.device_get((done, rounds, pwbs, ops))
         assert bool(np.asarray(done).all()), \
             "fabric full: could not enqueue everything"
         self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
-        self.ops[:, shard] += np.asarray(pwbs, np.int64)
+        self.ops[:, shard] += np.asarray(ops, np.int64)
         self.psyncs[shard] += int(rounds)
         return int(rounds)
 
@@ -243,7 +244,9 @@ class ShardedWaveQueue:
                     chunk, rows[q], oks[q], sub[q], W)
                 pend[q] = retry + pend[q][taken:]
                 fused = max(fused, active)
-                self.pwbs[q, shard] += int(ok_flat.sum())
+                # completed-enqueue cells + the segment-header line
+                # (closed/epoch/base) per active wave on this queue
+                self.pwbs[q, shard] += int(ok_flat.sum()) + active
                 self.ops[q, shard] += int(ok_flat.sum())
             # the fused wave drains once per round across all Q shards
             self.psyncs[shard] += max(fused, 1)
@@ -350,7 +353,8 @@ class ShardedWaveQueue:
                     act_all.append(lane_vals)
                     items, touched, delivered = fold_dequeue_block(lane_vals)
                     got.extend(items)
-                    self.pwbs[q, shard] += touched + 1
+                    # touched cells + Head-mirror line + segment-header line
+                    self.pwbs[q, shard] += touched + 2
                     self.ops[q, shard] += delivered
             self._take = (self._take + 1) % Q
             # one psync per fused wave: the whole Q-wide wave drains once,
@@ -374,8 +378,11 @@ class ShardedWaveQueue:
             for q in range(self.Q))
 
     def drain(self, shard: int = 0, max_waves: int = 10_000):
-        out, _ = self.dequeue_n(self.Q * self.S * self.R + 1, shard,
-                                max_waves)
+        """Dequeue everything.  Demand (and the device output buffer) is
+        sized from the live backlog, not the Q*S*R pool capacity; the
+        in-device empty-probe exit handles ticket holes that inflate the
+        backlog estimate."""
+        out, _ = self.dequeue_n(self.backlog(), shard, max_waves)
         return out
 
     # -- fault tolerance ------------------------------------------------------

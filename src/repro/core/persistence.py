@@ -125,7 +125,9 @@ class WaveDelta(NamedTuple):
       * records ``0..W-1``     -- enqueue cell flushes, lane/ticket order,
       * records ``W..2W-1``    -- dequeue cell flushes, lane/ticket order,
       * record  ``2W``         -- the consumer shard's Head-mirror line,
-      * record  ``2W+1``       -- the segment-header line (closed+allocated).
+      * record  ``2W+1``       -- the segment-header line (closed bits +
+        allocation epochs + incarnation bases -- the persisted list order
+        and the reclamation-durability word of DESIGN.md §3c).
 
     ``live`` marks records that flush anything at all (idle/failed lanes
     are dead records); a crash mask selects which LIVE records landed.
@@ -142,7 +144,8 @@ class WaveDelta(NamedTuple):
     mirror_seg: jnp.ndarray    # scalar int32 flushed mirror segment
     mirror_live: jnp.ndarray   # scalar bool (a dequeue half ran)
     closed: jnp.ndarray        # [S] bool   flushed closed bits
-    allocated: jnp.ndarray     # [S] bool   flushed allocation bits
+    epoch: jnp.ndarray         # [S] int32  flushed allocation epochs
+    base: jnp.ndarray          # [S] int32  flushed incarnation ticket bases
 
 
 def delta_records(delta: WaveDelta) -> int:
@@ -187,10 +190,11 @@ def apply_delta(nvm, delta: WaveDelta,
 
     hl = applied[W2 + 1]
     closed = jnp.where(hl, delta.closed, nvm.closed)
-    allocated = jnp.where(hl, delta.allocated, nvm.allocated)
+    epoch = jnp.where(hl, delta.epoch, nvm.epoch)
+    base = jnp.where(hl, delta.base, nvm.base)
     return nvm._replace(vals=vals, idxs=idxs, safes=safes, mirrors=mirrors,
                         mirror_seg=mirror_seg, closed=closed,
-                        allocated=allocated)
+                        epoch=epoch, base=base)
 
 
 def torn_masks(key: jax.Array, n_points: int, n_records: int,

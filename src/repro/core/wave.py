@@ -11,8 +11,9 @@ follows the paper's discipline exactly:
 
   * per-wave, ONLY the touched ring cells and the per-shard Head mirrors are
     flushed to the NVM image (low-contention persists),
-  * Tail / segment headers are persisted only when a segment closes or is
-    appended (closedFlag / node-header rules of Algorithm 3/5),
+  * Tail / segment headers are persisted only when a segment closes, is
+    appended or is recycled (closedFlag / node-header rules of Algorithm
+    3/5; the epoch+base header line of DESIGN.md §3c),
   * global Head / Tail are NEVER flushed -- recovery reconstructs them with
     the paper's scan (Algorithm 3 lines 58-83, vectorized; the backend's
     ``recover_scan``),
@@ -22,9 +23,24 @@ follows the paper's discipline exactly:
     ``wave_step_delta`` exposes that sequence as a ``persistence.WaveDelta``;
     ``crash_sweep`` vmaps hundreds of torn-crash points through recovery.
 
-The queue is a pool of S ring segments (the LCRQ linked list flattened into
-allocation order -- append-only, so segment s's successor is s+1; the
-persisted ``allocated`` bit plays the role of the persisted next pointer).
+The queue is a pool of S ring segments run as a RING OF RINGS (the LCRQ
+linked list flattened into a fixed pool; DESIGN.md §3c).  Each row carries a
+persisted int32 allocation ``epoch`` (-1 = pristine): live list order IS
+epoch order -- the epoch plays the role of the persisted Michael-Scott next
+pointer, and epochs are allocated densely, so segment ``first``'s successor
+is the row holding ``epoch[first] + 1``.  When ``last`` tantrum-closes and
+no pristine row remains, ``_advance_segments`` RECYCLES the oldest retired
+row (drained, closed, epoch behind ``first``): bump its epoch, clear its
+closed bit, and advance its ticket ``base`` past every index the previous
+incarnation could have persisted -- stale cells then read as ⊥ to both the
+transitions and recovery (idx < base <=> previous incarnation), so the
+pool's lifetime throughput is unbounded instead of capped at S*R enqueues.
+The epoch + base + closed bits form the persisted segment-header line; a
+reclamation becomes durable only with the wave that performed it (recovery
+can never resurrect pre-recycling cells).  Tickets/indices/bases stay int32
+(the TPU-native width) and grow monotonically per row, so one row's ticket
+space holds ~2^31 enqueues before needing a quiescent rebase (DESIGN.md
+§3c "ticket horizon").
 
 State arrays are a pytree => the whole step is jit/vmap/shard_map-able; the
 sharded fabric (core/fabric.py) stacks Q of these states and vmaps the step
@@ -73,9 +89,13 @@ class WaveState(NamedTuple):
     heads: jnp.ndarray     # [S] int32 per-segment Head
     tails: jnp.ndarray     # [S] int32 per-segment Tail
     closed: jnp.ndarray    # [S] bool (tantrum closed bit)
-    allocated: jnp.ndarray  # [S] bool (segment appended to the list)
-    first: jnp.ndarray     # scalar int32 (dequeue segment)
-    last: jnp.ndarray      # scalar int32 (enqueue segment)
+    epoch: jnp.ndarray     # [S] int32 allocation epoch (-1 = pristine; the
+    #                        persisted next pointer: live order = epoch order)
+    base: jnp.ndarray      # [S] int32 ticket base of the row's current
+    #                        incarnation (persisted; cells with idx < base
+    #                        belong to a previous incarnation and read as ⊥)
+    first: jnp.ndarray     # scalar int32 (dequeue segment row)
+    last: jnp.ndarray      # scalar int32 (enqueue segment row)
     mirrors: jnp.ndarray   # [P] int32 per-shard local Head mirror
     mirror_seg: jnp.ndarray  # [P] int32 which segment the mirror refers to
 
@@ -88,7 +108,8 @@ def init_state(S: int, R: int, P: int = 1) -> WaveState:
         heads=jnp.zeros((S,), jnp.int32),
         tails=jnp.zeros((S,), jnp.int32),
         closed=jnp.zeros((S,), bool),
-        allocated=jnp.zeros((S,), bool).at[0].set(True),
+        epoch=jnp.full((S,), -1, jnp.int32).at[0].set(0),
+        base=jnp.zeros((S,), jnp.int32),
         first=jnp.int32(0),
         last=jnp.int32(0),
         mirrors=jnp.zeros((P,), jnp.int32),
@@ -114,17 +135,61 @@ def exclusive_cumsum(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def _advance_segments(st: WaveState) -> WaveState:
-    """Between waves: append a fresh segment if `last` closed (Michael-Scott
-    append, flattened), advance `first` past a drained closed segment."""
-    S = st.vals.shape[0]
+    """Between waves: advance ``first`` past a drained closed segment (to the
+    row holding the next allocation epoch), and when ``last`` is closed,
+    append a fresh segment -- a pristine row if any remains, else RECYCLE
+    the oldest retired row (the Michael-Scott append, flattened into an
+    epoch-ordered ring of reusable rows; DESIGN.md §3c).
+
+    Recycling is O(1) metadata: bump the victim's allocation epoch, clear
+    its closed bit, and advance its ticket ``base`` (= Head = Tail) past
+    every cell index its previous incarnation could have written --
+    ``tails[victim] + R`` bounds them all (enqueues install idx = t < Tail,
+    dequeue/empty transitions install idx = t + R with t < Head <= Tail).
+    Stale cells then fail every transition predicate of the new incarnation
+    (idx < base <= any new ticket) and read as ⊥ to recovery, so the cell
+    rows need no eager reset.  The new epoch/base land in the same persisted
+    header line as the closed bits, flushed by the wave that performed the
+    reclamation: until that wave's records land, the durable image still
+    describes the retired incarnation (the reclamation-durability invariant
+    the torn-crash sweeps exercise)."""
+    S, R = st.vals.shape
     L, F = st.last, st.first
-    can_append = st.closed[L] & (L + 1 < S)
-    new_last = jnp.where(can_append, L + 1, L)
-    allocated = st.allocated.at[new_last].set(True)
-    drained = ((st.heads[F] >= st.tails[F])
-               & st.closed[F] & (F < new_last))
-    new_first = jnp.where(drained, F + 1, F)
-    return st._replace(last=new_last, first=new_first, allocated=allocated)
+    eL, eF = st.epoch[L], st.epoch[F]
+    # advance `first`: epochs are allocated densely, so the live list is
+    # exactly the rows holding epochs [epoch[first] .. epoch[last]] and the
+    # successor of `first` is the row holding epoch[first] + 1
+    succ = jnp.argmax(st.epoch == eF + 1).astype(jnp.int32)
+    drained = (st.heads[F] >= st.tails[F]) & st.closed[F] & (eF < eL)
+    new_first = jnp.where(drained, succ, F)
+    # append on close: prefer a pristine row (lowest index first, matching
+    # the pre-recycling allocation order); else reclaim the oldest retired
+    # row -- allocated, epoch strictly behind the (advanced) first, hence
+    # drained and off the live list
+    pristine_any = jnp.any(st.epoch < 0)
+    pristine = jnp.argmin(st.epoch).astype(jnp.int32)
+    retired = (st.epoch >= 0) & (st.epoch < st.epoch[new_first])
+    oldest = jnp.argmin(
+        jnp.where(retired, st.epoch, jnp.int32(2**31 - 1))).astype(jnp.int32)
+    victim = jnp.where(pristine_any, pristine, oldest)
+    can_append = st.closed[L] & (pristine_any | jnp.any(retired))
+    new_last = jnp.where(can_append, victim, L)
+    vbase = jnp.where(st.epoch[victim] < 0, 0, st.tails[victim] + R)
+
+    def upd(a, v):
+        return a.at[new_last].set(jnp.where(can_append, v, a[new_last]))
+
+    return st._replace(
+        last=new_last, first=new_first,
+        epoch=upd(st.epoch, eL + 1),
+        closed=upd(st.closed, False),
+        base=upd(st.base, vbase),
+        heads=upd(st.heads, vbase),
+        tails=upd(st.tails, vbase),
+        # a fresh incarnation starts all-safe (the recovery line-83 analog)
+        safes=st.safes.at[new_last].set(
+            jnp.where(can_append, jnp.ones((R,), bool), st.safes[new_last])),
+    )
 
 
 def _wave_step(
@@ -252,7 +317,8 @@ def _wave_step(
             mirror_seg=mirror_seg[shard],
             mirror_live=jnp.bool_(do_deq),
             closed=vol.closed,
-            allocated=vol.allocated,
+            epoch=vol.epoch,
+            base=vol.base,
         )
         return vol, apply_delta(nvm, delta), enq_ok, deq_out, delta
     # ---- persistence write-back (the pwb+psync analog, fused hot path) ---
@@ -273,10 +339,12 @@ def _wave_step(
                  if do_deq else nvm.mirrors),
         mirror_seg=(nvm.mirror_seg.at[shard].set(vol.mirror_seg[shard])
                     if do_deq else nvm.mirror_seg),
-        # segment headers: closed bits + allocation (the persisted "next
-        # pointer" / closed-Tail of Algorithm 3 line 20 & Algorithm 5 line 29)
+        # segment headers: closed bits + allocation epochs + incarnation
+        # bases (the persisted "next pointer" / closed-Tail of Algorithm 3
+        # line 20 & Algorithm 5 line 29, epoch-ordered -- DESIGN.md §3c)
         closed=vol.closed,
-        allocated=vol.allocated,
+        epoch=vol.epoch,
+        base=vol.base,
     )
     return vol, nvm, enq_ok, deq_out
 
@@ -416,12 +484,17 @@ def peek_items(state: WaveState) -> List[int]:
     """Items present in ``state`` in FIFO (segment, index) order -- what a
     full drain of a RECOVERED state would deliver, without running one
     (recovery re-initializes every cell outside the live ranges, so the
-    in-range occupied cells ARE the queue contents).  Host-side forensics;
-    works on device or host pytrees."""
+    in-range occupied cells ARE the queue contents).  Segments are visited
+    in ALLOCATION-EPOCH order (the list order; with recycling, row order is
+    not FIFO order); retired rows are drained and contribute nothing, and
+    stale pre-incarnation cells never match ``idx == p`` for p >= base.
+    Host-side forensics; works on device or host pytrees."""
     v = jax.device_get(state)
     out: List[int] = []
     S, R = v.vals.shape
-    for s in range(S):
+    order = sorted((s for s in range(S) if int(v.epoch[s]) >= 0),
+                   key=lambda s: int(v.epoch[s]))
+    for s in order:
         h, t = int(v.heads[s]), int(v.tails[s])
         for p in range(h, t):
             u = p % R
@@ -432,19 +505,35 @@ def peek_items(state: WaveState) -> List[int]:
 
 def _recover_impl(nvm: WaveState, b: QueueBackend) -> WaveState:
     """Vectorized Algorithm 3 recovery (lines 58-83) over every allocated
-    segment + Algorithm 5 list recovery (last = max allocated segment).
+    segment + Algorithm 5 list recovery ordered by the persisted allocation
+    EPOCHS (with recycling, row order is not list order -- DESIGN.md §3c).
     The per-segment Head/Tail reductions run through the backend's
-    ``recover_scan``; the cell re-initialization is vectorized here."""
+    ``recover_scan``; the cell re-initialization is vectorized here.
+
+    Per-incarnation cell validity: every persisted index of a row's current
+    incarnation is >= its persisted ``base``, and every index of previous
+    incarnations is < it (bases advance by at least R per reclamation).
+    Clamping the mirror-derived Head seed to ``base`` therefore makes the
+    unchanged recover_scan immune to stale cells AND stale mirrors: their
+    contributions sit below the seed and fall out of every max/min, so a
+    torn reclamation whose header landed without (all of) the retiring
+    wave's cell records recovers to an empty fresh incarnation -- the lost
+    items are exactly the crashed wave's in-flight dequeues."""
     S, R = nvm.vals.shape
     seg_ids = jnp.arange(S, dtype=jnp.int32)
-    # line 60: per-segment Head <- max over this segment's persisted mirrors
+    alloc = nvm.epoch >= 0
+    # line 60: per-segment Head <- max over this segment's persisted
+    # mirrors, clamped to the row's incarnation base (a mirror recorded for
+    # a previous incarnation always reads below it)
     mine = nvm.mirror_seg[None, :] == seg_ids[:, None]          # [S, P]
     head0 = jnp.max(jnp.where(mine, nvm.mirrors[None, :], 0), axis=1)
+    head0 = jnp.maximum(head0, nvm.base)
     heads, tails = jax.vmap(b.recover_scan)(nvm.vals, nvm.idxs, head0)
-    # unallocated segments stay pristine
-    heads = jnp.where(nvm.allocated, heads, 0).astype(jnp.int32)
-    tails = jnp.where(nvm.allocated, tails, 0).astype(jnp.int32)
-    # lines 81-82: re-initialize cells outside the live range
+    # pristine rows stay pristine
+    heads = jnp.where(alloc, heads, 0).astype(jnp.int32)
+    tails = jnp.where(alloc, tails, 0).astype(jnp.int32)
+    # lines 81-82: re-initialize cells outside the live range (this also
+    # scrubs any stale pre-incarnation cells of a recycled row)
     u = jnp.arange(R, dtype=jnp.int32)[None, :]
     live = jnp.minimum(jnp.maximum(tails - heads, 0), R)[:, None]
     offset = (u - heads[:, None]) % R
@@ -453,19 +542,21 @@ def _recover_impl(nvm: WaveState, b: QueueBackend) -> WaveState:
     i_unwrapped = heads[:, None] - 1 - ((heads[:, None] - 1 - u) % R)
     new_idx = jnp.where(dead, i_unwrapped + R, nvm.idxs)
     new_val = jnp.where(dead, BOT, nvm.vals)
-    alloc = nvm.allocated[:, None]
-    new_idx = jnp.where(alloc, new_idx, jnp.broadcast_to(u, (S, R)))
-    new_val = jnp.where(alloc, new_val, BOT)
+    alloc2 = alloc[:, None]
+    new_idx = jnp.where(alloc2, new_idx, jnp.broadcast_to(u, (S, R)))
+    new_val = jnp.where(alloc2, new_val, BOT)
     # line 83: all safe bits set
     new_safe = jnp.ones_like(nvm.safes)
-    # Algorithm 5 list recovery: Last = furthest allocated segment; First
-    # stays (recovery never moves First; drained segments are skipped by the
-    # empty-advance rule during normal operation).
-    last = jnp.max(jnp.where(nvm.allocated, seg_ids, 0)).astype(jnp.int32)
-    first = jnp.minimum(nvm.first, last)
+    # Algorithm 5 list recovery, epoch-ordered: Last = the row holding the
+    # maximum allocation epoch, First = the row holding the minimum (retired
+    # rows recover drained; the empty-advance rule skips them during normal
+    # operation, exactly as it skips drained live segments).
+    last = jnp.argmax(nvm.epoch).astype(jnp.int32)
+    first = jnp.argmin(
+        jnp.where(alloc, nvm.epoch, jnp.int32(2**31 - 1))).astype(jnp.int32)
     return WaveState(
         vals=new_val, idxs=new_idx, safes=new_safe, heads=heads, tails=tails,
-        closed=nvm.closed, allocated=nvm.allocated,
+        closed=nvm.closed, epoch=nvm.epoch, base=nvm.base,
         first=first, last=last,
         mirrors=nvm.mirrors, mirror_seg=nvm.mirror_seg,
     )
@@ -562,8 +653,11 @@ class WaveQueue:
 
     Persistence accounting (``persist_stats``): per consumer shard, pwbs =
     flushed cache lines (one ring cell per completed op + one Head-mirror
-    line per dequeue wave), psyncs = one drain per wave -- the wave-batched
-    version of the paper's pwb+psync pair per operation."""
+    line per dequeue wave + one segment-header line per active wave -- any
+    wave can close/recycle a row, DESIGN.md §3c), ops = completed
+    operations (counted separately; headers are not ops), psyncs = one
+    drain per wave -- the wave-batched version of the paper's pwb+psync
+    pair per operation."""
 
     def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
                  backend: BackendLike = "jnp", waves_per_call: int = 8,
@@ -604,14 +698,15 @@ class WaveQueue:
             return 0
         buf = np.full((bucket_pow2(items.size),), -1, np.int32)
         buf[:items.size] = items
-        self.vol, self.nvm, done, rounds, pwbs = _drv.device_enqueue_all(
+        (self.vol, self.nvm, done, rounds, pwbs,
+         ops) = _drv.device_enqueue_all(
             self.vol, self.nvm, jnp.asarray(buf), jnp.int32(shard),
             jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
-        done, rounds, pwbs = jax.device_get((done, rounds, pwbs))
+        done, rounds, pwbs, ops = jax.device_get((done, rounds, pwbs, ops))
         assert bool(np.asarray(done).all()), \
             "queue full: could not enqueue everything"
         self.pwbs[shard] += int(pwbs)
-        self.ops[shard] += int(pwbs)
+        self.ops[shard] += int(ops)
         self.psyncs[shard] += int(rounds)
         return int(rounds)
 
@@ -635,7 +730,9 @@ class WaveQueue:
                 W)
             pending = retry + pending[taken:]
             waves += max(active_waves, 1)
-            self.pwbs[shard] += int(ok_flat.sum())
+            # one flushed cell per completed enqueue + the segment-header
+            # line (closed/epoch/base) per active wave
+            self.pwbs[shard] += int(ok_flat.sum()) + active_waves
             self.ops[shard] += int(ok_flat.sum())
             self.psyncs[shard] += active_waves
         assert not pending, "queue full: could not enqueue everything"
@@ -681,7 +778,9 @@ class WaveQueue:
             got.extend(items)
             active_waves = int((counts > 0).sum())
             waves += active_waves
-            self.pwbs[shard] += touched + active_waves
+            # touched cells + the Head-mirror line + the segment-header line
+            # per active wave (a dequeue wave can retire + recycle a row)
+            self.pwbs[shard] += touched + 2 * active_waves
             self.psyncs[shard] += active_waves
             self.ops[shard] += delivered
             if (act == EMPTY_V).all():
@@ -691,8 +790,18 @@ class WaveQueue:
                     break
         return got, waves
 
+    def backlog(self) -> int:
+        """Live-item upper bound (sum of per-segment Tail - Head; holes from
+        failed enqueue tickets may inflate it, never deflate it)."""
+        heads, tails = jax.device_get((self.vol.heads, self.vol.tails))
+        return int(np.maximum(np.asarray(tails) - np.asarray(heads), 0).sum())
+
     def drain(self, shard: int = 0, max_waves: int = 10_000):
-        out, _ = self.dequeue_n(self.S * self.R + 1, shard, max_waves)
+        """Dequeue everything.  The demand (and hence the device output
+        buffer, ``bucket_pow2``-quantized) is sized from the live backlog,
+        not the S*R pool capacity; the driver's empty-probe exit handles
+        ticket holes that inflate the backlog estimate."""
+        out, _ = self.dequeue_n(self.backlog(), shard, max_waves)
         return out
 
     def crash_and_recover(self):

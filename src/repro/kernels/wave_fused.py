@@ -17,7 +17,13 @@ wave-end psync -- NOT an atomic image overwrite.  This kernel computes the
 all-records-landed endpoint of that sequence; ``core/wave.wave_step_delta``
 exposes the sequence itself as a ``persistence.WaveDelta`` (bit-identical
 when fully applied -- the parity tests assert it), which the torn-crash
-injector cuts at arbitrary prefix+eviction points (DESIGN.md §7).
+injector cuts at arbitrary prefix+eviction points (DESIGN.md §7).  The
+trailing mirror and segment-header records (closed bits + allocation
+epochs + recycling bases -- the epoch-ordered list word of DESIGN.md §3c)
+are tiny [P]/[S] metadata lines flushed by ``_wave_step`` itself, shared
+verbatim across backends: the kernel stays a pure cell pipeline, and a
+recycled row's stale cells need no in-kernel scrubbing because every
+pre-incarnation index sits below the row's persisted base.
 
 The caller (core/wave.py ``_wave_step``) dynamic-slices the rows out of the
 [S, R] pool and writes the results back with one dynamic-update-slice per

@@ -1,0 +1,286 @@
+"""Segment recycling (DESIGN.md §3c): the append-only S-row pool is now an
+epoch-ordered ring of reusable CRQs.
+
+The headline regression is the WEDGE: pre-PR-4, a queue whose S segments all
+tantrum-closed once was dead forever (``_advance_segments`` only appended,
+recovery ordered the list by row index), capping lifetime throughput at
+S*R enqueues.  These tests push >= 50*S*R items through tiny pools with
+forced closes on every cycle -- both backends x both drivers x the fabric --
+and hold the stream to FIFO end to end, plus the epoch/base invariants,
+recovery after heavy recycling, driver persist-accounting parity with the
+ordered-delta records, and backlog-sized drain demand.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import get_backend
+from repro.core.fabric import ShardedWaveQueue
+from repro.core.persistence import delta_records, tree_copy
+from repro.core.wave import WaveQueue, _wave_step, peek_items, recover
+
+BACKENDS = ("jnp", "pallas")
+DRIVERS = ("device", "host")
+
+
+def _churn(q, total: int, chunk: int):
+    """fill-to-close -> drain -> refill cycles; returns (sent, got)."""
+    sent, got = [], []
+    nxt = 0
+    while nxt < total:
+        batch = list(range(nxt, nxt + chunk))
+        nxt += chunk
+        q.enqueue_all(batch)
+        sent += batch
+        got += q.drain()
+    return sent, got
+
+
+# ---------------------------------------------------------------------------
+# the wedge regression: >= 50*S*R items through an S-segment queue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_unbounded_lifetime_single_queue(backend, driver):
+    """Every cycle fills the whole pool (the second wave's tickets overflow
+    the ring => tantrum close => append/recycle), then drains it.  50 cycles
+    of S*R items need ~50 reallocations on an S=2 pool: pre-PR-4 this died
+    with "queue full" on cycle 2."""
+    S, R = 2, 8
+    q = WaveQueue(S=S, R=R, W=8, backend=backend, driver=driver)
+    total = 50 * S * R
+    sent, got = _churn(q, total, chunk=S * R)
+    assert got == sent, "FIFO violated (or items lost) across recycling"
+    # the pool really was recycled, not silently grown: ~one reallocation
+    # per fill cycle, far beyond the S-1 appends the pool could ever do
+    epochs = np.asarray(jax.device_get(q.vol.epoch))
+    assert epochs.max() >= total // (S * R) - S, epochs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_unbounded_lifetime_fabric(backend, driver):
+    Q, S, R = 2, 2, 8
+    f = ShardedWaveQueue(Q=Q, S=S, R=R, W=8, backend=backend, driver=driver)
+    total = 50 * S * R * Q
+    sent, got = _churn(f, total, chunk=Q * S * R)
+    assert sorted(got) == sorted(sent)
+    for q in range(Q):  # chunk % Q == 0 => placement is i % Q; per-queue FIFO
+        sub = [v for v in got if v % Q == q]
+        assert sub == sorted(sub), f"per-queue FIFO violated on shard {q}"
+    epochs = np.asarray(jax.device_get(f.vol.epoch))
+    assert (epochs.max(axis=1) >= total // (Q * S * R) - S).all(), epochs
+
+
+def test_wedge_repro_exact():
+    """The ISSUE repro, step by step: fill until BOTH segments tantrum-close,
+    drain to empty, enqueue again.  closed == [True, True] and first == last
+    used to wedge every future enqueue_all."""
+    S, R = 2, 4
+    q = WaveQueue(S=S, R=R, W=4)
+    q.enqueue_all(list(range(S * R)))          # seg0 closes, seg1 fills
+    ok, _ = q.step(jnp.arange(100, 104, dtype=jnp.int32),
+                   jnp.zeros((4,), bool))      # overflow: seg1 tantrum-closes
+    assert not bool(np.asarray(ok).any())
+    closed = np.asarray(jax.device_get(q.vol.closed))
+    assert closed.all(), closed                # the wedge precondition
+    assert q.drain() == list(range(S * R))
+    # the un-wedge: this call died with "queue full" pre-PR-4
+    q.enqueue_all(list(range(200, 200 + S * R)))
+    assert q.drain() == list(range(200, 200 + S * R))
+
+
+# ---------------------------------------------------------------------------
+# invariants + recovery under recycling
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_and_base_invariants_under_churn():
+    S, R = 2, 8
+    q = WaveQueue(S=S, R=R, W=8)
+    prev_base = np.zeros((S,), np.int64)
+    prev_epoch = np.full((S,), -1, np.int64)
+    for c in range(20):
+        q.enqueue_all(list(range(c * S * R, (c + 1) * S * R)))
+        q.drain()
+        v = jax.device_get(q.vol)
+        epochs = np.asarray(v.epoch)
+        alloc = epochs >= 0
+        # allocated epochs are pairwise distinct (the list order is total)
+        assert len(set(epochs[alloc])) == alloc.sum()
+        # last sits at the max epoch; every row whose epoch is behind
+        # first is RETIRED: off the live list, drained and closed (the
+        # reclaim-eligibility precondition)
+        assert epochs[int(v.last)] == epochs[alloc].max()
+        assert epochs[int(v.first)] <= epochs[int(v.last)]
+        behind = alloc & (epochs < epochs[int(v.first)])
+        assert (np.asarray(v.heads)[behind]
+                >= np.asarray(v.tails)[behind]).all()
+        assert np.asarray(v.closed)[behind].all()
+        # heads/tails never fall below the incarnation base
+        assert (np.asarray(v.heads) >= np.asarray(v.base)).all()
+        assert (np.asarray(v.tails) >= np.asarray(v.heads)).all()
+        # per row: epochs only grow, and every rebirth advances the base by
+        # at least R (the stale-cell tombstone gap)
+        base = np.asarray(v.base).astype(np.int64)
+        reborn = epochs > prev_epoch
+        assert (epochs >= prev_epoch).all()
+        assert (base[reborn & (prev_epoch >= 0)]
+                >= prev_base[reborn & (prev_epoch >= 0)] + R).all()
+        assert (base[~reborn] == prev_base[~reborn]).all()
+        prev_base, prev_epoch = base, epochs.astype(np.int64)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recovery_after_heavy_recycling(backend):
+    """Clean crash mid-backlog after many reallocations: recovery must order
+    the live rows by epoch (row order is scrambled by then) and resurrect
+    exactly the un-dequeued suffix."""
+    S, R = 2, 8
+    q = WaveQueue(S=S, R=R, W=8, backend=backend)
+    for c in range(8):
+        q.enqueue_all(list(range(c * 100, c * 100 + S * R)))
+        if c < 7:
+            q.drain()
+    got = q.dequeue_n(5)[0]
+    q.crash_and_recover()
+    rest = q.drain()
+    expect = list(range(700, 700 + S * R))
+    assert got + rest == expect, (got, rest)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recovery_ignores_stale_incarnation_cells(backend):
+    """Adversarial durable image: a recycled row whose NVM cells still hold
+    the RETIRED incarnation (epoch/base header landed, nothing of the new
+    incarnation flushed yet).  Recovery must not resurrect a single stale
+    cell -- idx < base reads as ⊥."""
+    S, R = 2, 8
+    q = WaveQueue(S=S, R=R, W=8, backend=backend)
+    q.enqueue_all(list(range(2 * R)))       # seg0 closed+full, seg1 full
+    q.drain()                               # both drained; seg0 retired
+    q.enqueue_all(list(range(50, 50 + R)))  # refill live seg1
+    # force the reallocation of seg0 with an overflow wave
+    ok, _ = q.step(jnp.arange(90, 98, dtype=jnp.int32), jnp.zeros((8,), bool))
+    assert not bool(np.asarray(ok).any())
+    v = jax.device_get(q.vol)
+    recycled = int(np.argmax(np.asarray(v.epoch)))
+    assert np.asarray(v.epoch)[recycled] == 2  # seg0 reborn as the new last
+    st = recover(q.nvm, backend=backend)
+    out = peek_items(st)
+    assert out == list(range(50, 50 + R)), out  # nothing stale resurrected
+    sv = jax.device_get(st)
+    assert int(sv.heads[recycled]) == int(sv.tails[recycled]) \
+        == int(sv.base[recycled])
+
+
+# ---------------------------------------------------------------------------
+# satellite: driver persist accounting (ops vs pwbs; header/mirror lines)
+# ---------------------------------------------------------------------------
+
+
+def test_driver_ops_and_pwbs_counted_separately():
+    """``enqueue_all`` used to credit ops += pwbs.  ops must be the
+    completed-enqueue count exactly; pwbs adds the segment-header line per
+    active wave on top of the per-op cell flushes."""
+    q = WaveQueue(S=4, R=64, W=8)          # one wave, no failures
+    rounds = q.enqueue_all(list(range(5)))
+    assert int(q.ops[0]) == 5
+    assert int(q.pwbs[0]) == 5 + rounds    # cells + header line per round
+    out, rounds_d = q.dequeue_n(5)
+    assert out == list(range(5))
+    assert int(q.ops[0]) == 10
+    # dequeue rounds add touched cells + mirror + header lines
+    assert int(q.pwbs[0]) >= 10 + rounds + 2 * rounds_d
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_driver_pwb_accounting_matches_delta_records(backend):
+    """Parity with the ordered flush: replay the driver's half-waves through
+    the delta-emitting core and count LIVE records (cells + mirror + header).
+    The driver-side counters must equal that sum, and the full record space
+    must equal ``delta_records`` (2W + 2)."""
+    S, R, W = 4, 64, 8
+    b = get_backend(backend)
+
+    def live_records(delta, do_deq):
+        n = int(np.asarray(delta.live).sum()) + 1          # cells + header
+        return n + (1 if do_deq else 0)                    # + mirror line
+
+    q = WaveQueue(S=S, R=R, W=W, backend=backend)
+    ref = WaveQueue(S=S, R=R, W=W, backend=backend)
+    items = list(range(7))
+    q.enqueue_all(items)
+    ev = jnp.asarray(np.r_[items, -np.ones(1)].astype(np.int32))
+    dm = jnp.zeros((W,), bool)
+    *_, d_enq = _wave_step(ref.vol, ref.nvm, ev, dm, jnp.int32(0), b,
+                           do_enq=True, do_deq=False, prefix_lanes=True,
+                           emit_delta=True)
+    assert int(q.pwbs[0]) == live_records(d_enq, do_deq=False)
+    assert delta_records(d_enq) == 2 * W + 2
+    ref.vol, ref.nvm = tree_copy(q.vol), tree_copy(q.nvm)
+
+    pwb0 = int(q.pwbs[0])
+    out, _ = q.dequeue_n(7)
+    assert out == items
+    evn = jnp.full((W,), -1, jnp.int32)
+    dmn = jnp.arange(W) < 7
+    *_, d_deq = _wave_step(ref.vol, ref.nvm, evn, dmn, jnp.int32(0), b,
+                           do_enq=False, do_deq=True, prefix_lanes=True,
+                           emit_delta=True)
+    assert int(q.pwbs[0]) - pwb0 == live_records(d_deq, do_deq=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite: drain demand is backlog-sized, not pool-capacity-sized
+# ---------------------------------------------------------------------------
+
+
+def test_drain_demand_sized_by_backlog():
+    """A 10-item drain on an S*R = 2048 pool must not demand (and device-
+    allocate, via bucket_pow2's ~2x rounding) thousands of output slots."""
+    q = WaveQueue(S=8, R=256, W=16)
+    q.enqueue_all(list(range(10)))
+    seen = {}
+    orig = q.dequeue_n
+
+    def spy(n, *a, **k):
+        seen["n"] = n
+        return orig(n, *a, **k)
+
+    q.dequeue_n = spy
+    assert q.drain() == list(range(10))
+    assert seen["n"] == 10, seen
+    assert q.drain() == [] and seen["n"] == 0   # empty: no device call
+
+
+def test_fabric_drain_demand_sized_by_backlog():
+    f = ShardedWaveQueue(Q=4, S=8, R=256, W=16)
+    f.enqueue_all(list(range(12)))
+    seen = {}
+    orig = f.dequeue_n
+
+    def spy(n, *a, **k):
+        seen["n"] = n
+        return orig(n, *a, **k)
+
+    f.dequeue_n = spy
+    assert sorted(f.drain()) == list(range(12))
+    assert seen["n"] == 12, seen
+
+
+def test_drain_completes_despite_ticket_holes():
+    """Failed enqueue tickets leave Tail - Head > live items; the backlog-
+    sized drain must still deliver everything via the empty-probe exit."""
+    S, R = 2, 4
+    q = WaveQueue(S=S, R=R, W=4)
+    q.enqueue_all(list(range(R)))
+    # overflow wave: burns 4 tickets on seg0 (holes), closes it, no items
+    ok, _ = q.step(jnp.arange(50, 54, dtype=jnp.int32), jnp.zeros((4,), bool))
+    assert not bool(np.asarray(ok).any())
+    q.enqueue_all(list(range(100, 104)))       # lands in seg1 after retry
+    assert q.backlog() > 8                     # holes inflate the estimate
+    assert q.drain() == list(range(R)) + list(range(100, 104))
