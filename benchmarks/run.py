@@ -42,6 +42,10 @@ ROW_SCHEMA = {
                       "§3c -- pre-PR-4 this could never exceed S per queue)",
     "churn_pool_S": "segment-pool size per queue in the churn sweep (the "
                     "claim threshold: allocs must exceed S * shards)",
+    "api_rows": "api_facade = repro.api.PersistentQueue batches; api_direct"
+                " = the same shapes hand-driven through the functional core"
+                " (driver.fabric_enqueue_all/fabric_dequeue_n) -- the"
+                " facade-dispatch-overhead comparison (--api rows)",
 }
 
 
@@ -79,6 +83,10 @@ def main() -> None:
                     help="additionally sweep steady-state sustained "
                          "throughput under continuous segment recycling "
                          "(fill/close/recycle cycles on a tiny pool)")
+    ap.add_argument("--api", action="store_true",
+                    help="additionally measure the repro.api facade against "
+                         "the direct functional-core hot path at equal "
+                         "total ops (dispatch-overhead rows + claim)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -153,6 +161,8 @@ def main() -> None:
         rowsw += wave_engine.run_recovery(backends=backends, fast=args.fast)
     if args.churn:
         rowsw += wave_engine.run_churn(backends=backends, fast=args.fast)
+    if args.api:
+        rowsw += wave_engine.run_api(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]
@@ -186,6 +196,22 @@ def main() -> None:
             f"claim_unbounded_lifetime_{r['backend']}_q{r['shards']}":
                 r["segment_allocs"] > r["churn_pool_S"] * r["shards"]
             for r in churn}
+    # PR-5 tentpole: the repro.api facade must not tax the hot path -- its
+    # throughput stays within 5% of the direct functional-core drive at
+    # equal total ops.  Checked on the compiled (jnp) backend; interpret-
+    # mode Pallas ratios are reported informationally (Python tracing
+    # dominates both sides there).
+    fac = {r["backend"]: r["ops_per_sec"] for r in rowsw
+           if r["path"].startswith("api_facade/")}
+    direct = {r["backend"]: r["ops_per_sec"] for r in rowsw
+              if r["path"].startswith("api_direct/")}
+    if fac:
+        claims["api"] = {}
+        for be in fac:
+            ratio = fac[be] / max(direct[be], 1e-9)
+            claims["api"][f"facade_vs_direct_{be}"] = ratio
+            if be == "jnp":
+                claims["api"]["claim_api_zero_overhead"] = ratio >= 0.95
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

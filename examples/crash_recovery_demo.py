@@ -28,44 +28,40 @@ assert p.returncode == 0
 print("\ncrash/recovery demo complete: training resumed from the last "
       "durable checkpoint (max over per-worker step mirrors).")
 
-print("\n=== phase 3: fabric torn-crash sweep (DESIGN.md §7) ===")
+print("\n=== phase 3: fabric torn-crash sweep (DESIGN.md §7/§8) ===")
 import os                                                    # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__) or ".", "..",
                                 "src"))
-import jax                                                   # noqa: E402
-import jax.numpy as jnp                                      # noqa: E402
-
-from repro.core.consistency import check_wave_crash          # noqa: E402
-from repro.core.fabric import (ShardedWaveQueue,             # noqa: E402
-                               fabric_crash_sweep, fabric_step_delta)
-from repro.core.persistence import tree_copy                 # noqa: E402
-from repro.core.wave import peek_items                       # noqa: E402
+from repro.api import FaultPlan, QueueConfig, open_queue     # noqa: E402
 
 N_POINTS = 256
-Q, W = 2, 8
-f = ShardedWaveQueue(Q=Q, S=4, R=32, W=W)
+Q = 2
+f = open_queue(QueueConfig(Q=Q, S=4, R=32, W=8))
 f.enqueue_all(list(range(100, 140)))
 f.dequeue_n(6)
-pre_q = f.peek_items_per_queue()
-nvm_pre = tree_copy(f.nvm)
 
-# one in-flight wave: 4 enqueues (round-robin placed) + 3 dequeue lanes/queue
-wave_items = list(range(500, 504))
-ev, dm, per_q = f.plan_torn_wave(wave_items, 3)
-_, _, _, _, delta = fabric_step_delta(
-    f.vol, f.nvm, jnp.asarray(ev), jnp.asarray(dm), jnp.int32(0))
-
-# materialize + recover N_POINTS torn images in ONE vmapped device call
-rec, _ = fabric_crash_sweep(nvm_pre, delta, jax.random.PRNGKey(0), N_POINTS)
-rec = jax.device_get(rec)
-lost = survived = 0
-for i in range(N_POINTS):
-    for q in range(Q):
-        out = peek_items(jax.tree.map(lambda a: a[i][q], rec))
-        r = check_wave_crash(pre_q[q], per_q[q], 3, out)
-        lost += r["lost_prefix"]
-        survived += r["survived_wave_enqs"]
+# one in-flight wave (4 round-robin enqueues + 3 dequeue lanes/queue),
+# swept over N_POINTS torn crash points in ONE vmapped device call; the
+# SweepResult feeds every recovery through the shared checker
+sweep = f.crash(FaultPlan("sweep", enq_items=range(500, 504), deq_lanes=3,
+                          n_points=N_POINTS))
+r = sweep.check()
 print(f"{N_POINTS} torn crash points x {Q} shards recovered; every one "
       f"durably linearizable")
-print(f"  in-flight dequeues that had linearized: {lost} cells; in-flight "
-      f"enqueues that survived: {survived}")
+print(f"  in-flight dequeues that had linearized: {r['lost_prefix']} cells; "
+      f"in-flight enqueues that survived: {r['survived_wave_enqs']}")
+
+print("\n=== phase 4: quiescent ticket rebase survives torn crashes ===")
+f.drain()                                 # quiesce: maintenance needs empty
+for i in range(3):                        # churn: recycle rows, grow bases
+    f.enqueue_all(range(1000 + 256 * i, 1000 + 256 * (i + 1)))
+    f.drain()
+rec = f.maintenance().rebase_sweep(n_points=128, seed=1)
+import jax                                                   # noqa: E402
+from repro.core.wave import peek_items                       # noqa: E402
+rec = jax.device_get(rec)
+assert all(not peek_items(jax.tree.map(lambda a: a[i][q], rec))
+           for i in range(128) for q in range(Q))
+report = f.maintenance().rebase()
+print(f"128 mid-rebase crash points x {Q} shards all recovered EMPTY; "
+      f"completed rebase reset bases {report.max_base_before} -> 0")

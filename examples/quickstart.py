@@ -1,24 +1,20 @@
-"""Quickstart: the persistent queue four ways.
+"""Quickstart: the persistent queue through the ONE public handle.
 
 1. The faithful PerLCRQ on the simulated NVM machine (paper Algorithm 3/5),
    with a crash + recovery.
-2. The TPU-native wave engine (JAX) -- same semantics, batched.
-3. The Pallas kernels validating against their oracles.
-4. The sharded queue fabric: Q wave queues behind one endpoint, with a
-   fabric-wide crash + one vectorized recovery.
+2. `repro.api.open_queue`: a strict-FIFO handle (Q=1), batched waves,
+   a clean crash and a drain.
+3. The same handle as a Q=4 fabric -- same API, negotiated capabilities,
+   one vectorized fabric-wide recovery -- plus a torn mid-wave crash
+   through the unified FaultPlan surface.
+4. Maintenance: the quiescent int32 ticket rebase (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import random
-
-import jax.numpy as jnp
-
-from repro.core.fabric import ShardedWaveQueue
+from repro.api import FaultPlan, QueueConfig, open_queue
 from repro.core.harness import drain, pairs_workload, random_schedule, run_epoch
 from repro.core.lcrq import LCRQ, install_line_map
 from repro.core.machine import Machine
-from repro.core.wave import WaveQueue
-from repro.kernels import ops, ref
 
 # --- 1. faithful PerLCRQ with a crash ---------------------------------------
 m = Machine(4, eviction_rate=0.01, seed=7)
@@ -35,32 +31,50 @@ print(f"[PerLCRQ/sim] {done} ops completed before the crash; recovery walked "
 print(f"[PerLCRQ/sim] pwbs={m.persist_count} psyncs={m.psync_count} "
       f"(~1 pair per completed op -- the paper's optimal)")
 
-# --- 2. wave engine ----------------------------------------------------------
-wq = WaveQueue(S=8, R=64, W=16)
-wq.enqueue_all(list(range(40)))
+# --- 2. one handle, strict FIFO (Q=1) ----------------------------------------
+wq = open_queue(QueueConfig(Q=1, S=8, R=64, W=16))
+assert wq.capabilities.ordering == "strict_fifo"
+wq.enqueue_all(range(40))
 got, _ = wq.dequeue_n(10)
-wq.crash_and_recover()
+wq.crash(FaultPlan("clean"))
 rest = wq.drain()
-print(f"[wave] dequeued {got[:5]}... then crashed; recovered {len(rest)} items,"
-      f" order intact: {rest[:5]}...")
+print(f"[api/Q=1] dequeued {got[:5]}... then crashed; recovered {len(rest)} "
+      f"items, order intact: {rest[:5]}...")
 assert got == list(range(10)) and rest == list(range(10, 40))
 
-# --- 3. kernels vs oracles ----------------------------------------------------
-mask = jnp.array([1, 0, 1, 1, 0, 1, 1, 0], bool)
-tk, nb = ops.fai_ticket(jnp.int32(100), mask)
-tr, nr = ref.fai_ticket(jnp.int32(100), mask)
-assert (tk == tr).all() and nb == nr
-print(f"[kernels] fai_ticket OK: tickets={list(map(int, tk))} (base 100)")
-
-# --- 4. sharded fabric --------------------------------------------------------
-fab = ShardedWaveQueue(Q=4, S=8, R=64, W=16)
-fab.enqueue_all(list(range(80)))          # round-robin across 4 shards
+# --- 3. same handle as a Q=4 fabric + a torn mid-wave crash ------------------
+fab = open_queue(QueueConfig(Q=4, S=8, R=64, W=16, backend="jnp"))
+caps = fab.capabilities
+print(f"[api/Q=4] negotiated: ordering={caps.ordering} "
+      f"rank_error<={caps.rank_error} capacity~{caps.capacity_hint}")
+fab.enqueue_all(range(80))                # round-robin across 4 queues
 got = fab.dequeue_n(20)[0]
-fab.crash_and_recover()                   # one vectorized scan, all shards
+fab.crash(FaultPlan("torn", enq_items=(500, 501), deq_lanes=2, seed=3))
 rest = fab.drain()
 stats = fab.persist_stats()
-assert sorted(got + rest) == list(range(80))
-print(f"[fabric] Q=4 shards: {len(got)} dequeued, crashed, {len(rest)} "
-      f"recovered; pwbs/op={stats['pwbs'].sum() / stats['ops'].sum():.2f} "
+delivered = got + rest
+assert len(delivered) == len(set(delivered)), "duplicate across torn crash"
+# losses are bounded by the crashed wave's in-flight dequeues (2 lanes x 4
+# queues); the two in-flight enqueues may or may not have linearized
+lost = set(range(80)) - set(delivered)
+assert len(lost) <= 2 * 4, lost
+print(f"[api/Q=4] {len(got)} dequeued, torn mid-wave crash, {len(rest)} "
+      f"recovered; pwbs/op={stats['pwbs_total'] / max(stats['ops_total'], 1):.2f} "
       f"(pair-per-op discipline per shard)")
+
+# --- 4. maintenance: the quiescent ticket rebase -----------------------------
+churn = open_queue(QueueConfig(Q=2, S=2, R=32, W=16))
+n = 0
+for _ in range(4):                        # recycle segments, grow the bases
+    churn.enqueue_all(range(n, n + 128))
+    n += 128
+    churn.drain()
+mnt = churn.maintenance()
+before = mnt.ticket_headroom()
+report = mnt.rebase()                     # drained => quiescent => rebase
+churn.enqueue_all(range(10))
+assert sorted(churn.drain()) == list(range(10))
+print(f"[maintenance] rebase reclaimed base<={report.headroom_reclaimed} "
+      f"per row (headroom {before} -> {mnt.ticket_headroom()}); "
+      f"queue fully functional after")
 print("quickstart complete.")

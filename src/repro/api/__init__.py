@@ -1,0 +1,43 @@
+"""``repro.api`` -- one queue, one handle (DESIGN.md §8).
+
+The single public surface over the persistent-FIFO reproduction stack:
+
+    from repro.api import QueueConfig, open_queue, FaultPlan
+
+    q = open_queue(QueueConfig(Q=4, S=8, R=256, backend="jnp"))
+    q.enqueue_all(range(100))
+    items, _ = q.dequeue_n(10)
+    q.crash(FaultPlan("torn", deq_lanes=2, seed=7))
+    rest = q.drain()
+    q.maintenance().rebase()          # quiescent int32 ticket rebase
+
+Everything below ``repro.api`` (wave steps, drivers, kernels, backends) is
+the functional core: stable for power users, but only this module is the
+supported constructor surface -- ``tests/test_api_surface.py`` snapshots
+``__all__`` so it cannot grow by accident.
+"""
+from repro.api.config import (TICKET_HORIZON, Capabilities, CapabilityError,
+                              QueueConfig, negotiate)
+from repro.api.faults import FaultPlan, SweepResult, as_fault_plan
+from repro.api.maintenance import (Maintenance, RebaseNotQuiescent,
+                                   RebaseReport)
+from repro.api.queue import (PersistentQueue, QueueFull, QueueState,
+                             open_queue)
+
+__all__ = [
+    "Capabilities",
+    "CapabilityError",
+    "FaultPlan",
+    "Maintenance",
+    "PersistentQueue",
+    "QueueConfig",
+    "QueueFull",
+    "QueueState",
+    "RebaseNotQuiescent",
+    "RebaseReport",
+    "SweepResult",
+    "TICKET_HORIZON",
+    "as_fault_plan",
+    "negotiate",
+    "open_queue",
+]

@@ -1,0 +1,104 @@
+"""Deprecation shims for the pre-facade constructors.
+
+``WaveQueue`` and ``ShardedWaveQueue`` were the two divergent endpoint
+classes the facade replaced (DESIGN.md §8).  Both survive here as thin
+subclasses of ``PersistentQueue`` that emit a ``DeprecationWarning`` and
+delegate everything; ``core.wave``/``core.fabric`` re-export them lazily
+(PEP 562) so every historical import path keeps working:
+
+    from repro.core.wave import WaveQueue            # still works, warns
+    from repro.core.fabric import ShardedWaveQueue   # still works, warns
+
+``WaveQueue`` additionally preserves its historical SINGLE-QUEUE view:
+``vol``/``nvm`` read and write unstacked ``WaveState`` pytrees, ``step``
+takes [W]-shaped lanes, crash methods return unstacked states and
+``persist_stats`` keeps the [P]-shaped legacy schema -- all views over the
+same Q=1 stacked engine.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import QueueConfig
+from repro.api.queue import PersistentQueue
+
+
+def _warn(old: str, hint: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use repro.api.open_queue({hint}) instead "
+        f"(one PersistentQueue handle for every topology)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _stack1(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def _unstack1(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+class ShardedWaveQueue(PersistentQueue):
+    """Deprecated alias of ``PersistentQueue`` (the stacked surface was
+    already the facade's; only the constructor spelling changed)."""
+
+    def __init__(self, Q: int = 4, S: int = 16, R: int = 256, P: int = 1,
+                 W: int = 64, backend: str = "jnp",
+                 waves_per_call: int = 8, driver: str = "device"):
+        _warn("ShardedWaveQueue", f"QueueConfig(Q={Q}, ...)")
+        super().__init__(QueueConfig(
+            Q=Q, S=S, R=R, P=P, W=W, backend=backend, driver=driver,
+            waves_per_call=waves_per_call))
+
+
+class WaveQueue(PersistentQueue):
+    """Deprecated single-queue endpoint: a Q=1 ``PersistentQueue`` behind
+    the historical unstacked view."""
+
+    def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
+                 backend: str = "jnp", waves_per_call: int = 8,
+                 driver: str = "device"):
+        _warn("WaveQueue", f"QueueConfig(Q=1, S={S}, ...)")
+        super().__init__(QueueConfig(
+            Q=1, S=S, R=R, P=P, W=W, backend=backend, driver=driver,
+            waves_per_call=waves_per_call))
+
+    # -- the historical single-queue views ---------------------------------
+
+    @property
+    def vol(self):
+        return _unstack1(self._vol)
+
+    @vol.setter
+    def vol(self, st):
+        self._vol = _stack1(st)
+
+    @property
+    def nvm(self):
+        return _unstack1(self._nvm)
+
+    @nvm.setter
+    def nvm(self, st):
+        self._nvm = _stack1(st)
+
+    def step(self, enq_vals, deq_mask, shard: int = 0):
+        """One raw wave with [W]-shaped lanes (historical signature)."""
+        ok, out = super().step(jnp.asarray(enq_vals, jnp.int32)[None],
+                               jnp.asarray(deq_mask, bool)[None], shard)
+        return ok[0], out[0]
+
+    def crash_and_recover(self):
+        return _unstack1(super().crash_and_recover())
+
+    def torn_crash_and_recover(self, *a, **kw):
+        return _unstack1(super().torn_crash_and_recover(*a, **kw))
+
+    def persist_stats(self) -> dict:
+        """Historical [P]-shaped schema (totals ride along, as everywhere)."""
+        st = super().persist_stats()
+        for k in ("pwbs", "ops", "pwbs_per_op", "psyncs_per_op"):
+            st[k] = st[k][0]
+        return st

@@ -1,0 +1,137 @@
+"""Queue configuration + capability negotiation (DESIGN.md §8).
+
+One frozen ``QueueConfig`` describes every queue this repo can build --
+single queue, sharded fabric, mesh-placed fabric, either backend, either
+driver.  ``negotiate`` turns a *requested* config into a *granted*
+(config, Capabilities) pair: the capability sheet states, as interface
+properties, what the paper proves about the implementation (durable
+linearizability, detectable recovery, the pwb+psync-per-op discipline) and
+what the topology relaxes (the MultiFIFO rank-error bound), in the spirit
+of Durable Queues: The Second Amendment (detectability as an interface) and
+BlockFIFO/MultiFIFO (relaxation as a contract, not a class hierarchy).
+
+Negotiation rules (all deterministic, all surfaced on the Capabilities):
+
+  * ``relax_rank`` is the ordering contract: an item may be overtaken by at
+    most ``relax_rank`` later-enqueued items.  Round-robin placement over Q
+    internal queues yields rank error Q-1, so Q is clamped DOWN to
+    ``relax_rank + 1`` when the requested shard count would violate the
+    contract (``relax_rank=0`` forces a strict-FIFO single queue).
+  * ``backend`` must be registered (``core.backend``); ``driver`` is
+    ``device`` (one device call per batch) or ``host`` (the scan reference).
+  * ``placement="mesh"`` shard_maps the wave step over the available
+    devices; the mesh size is negotiated to the largest device count that
+    divides the granted Q (1 on a single-device host -- the step then
+    degenerates to the local vmap, bit-identically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.backend import available_backends
+
+#: int32 tickets/bases (the TPU-native width): one row's ticket space holds
+#: this many enqueues before ``maintenance().rebase()`` must run.
+TICKET_HORIZON = 2**31 - 1
+
+
+class CapabilityError(ValueError):
+    """The requested QueueConfig cannot be granted (no negotiable fix)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    """Everything needed to open a queue.  Frozen: a config hash/eq is the
+    jit-cache-friendly identity of the queue family it opens."""
+
+    Q: int = 1               # internal queues (fabric shards)
+    S: int = 16              # ring segments (rows) per internal queue
+    R: int = 256             # ring capacity per segment
+    P: int = 1               # consumer shards (per-shard Head mirrors)
+    W: int = 64              # consumer-facing wave width (lanes)
+    backend: str = "jnp"    # registered QueueBackend name
+    driver: str = "device"  # "device" (while_loop drivers) | "host" (scans)
+    placement: str = "local"  # "local" (vmap) | "mesh" (shard_map)
+    relax_rank: Optional[int] = None  # max overtakes allowed (None = Q-1)
+    waves_per_call: int = 8  # host-driver scan depth (K waves per jit call)
+
+    def replace(self, **kw) -> "QueueConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """The granted contract of an opened queue (negotiate()'s output)."""
+
+    ordering: str            # "strict_fifo" | "q_relaxed"
+    rank_error: int          # max items that may overtake one item
+    shards: int              # granted Q
+    backend: str
+    driver: str
+    placement: str
+    mesh_devices: int        # devices the step is shard_mapped over (1=local)
+    fused_wave: bool         # backend runs the fused live-row wave path
+    durable_linearizability: bool  # torn-crash recovery contract (§7)
+    detectable_recovery: bool      # crash()/FaultPlan + peek_items surface
+    ticket_width: int        # bits per ticket/base
+    ticket_horizon: int      # enqueues per row before rebase() is required
+    capacity_hint: int       # live items the pool holds (Q * S * R)
+
+
+def negotiate(config: QueueConfig) -> Tuple[QueueConfig, Capabilities]:
+    """Validate ``config`` and negotiate the granted (config, capabilities).
+
+    Raises ``CapabilityError`` for requests with no negotiable fix (unknown
+    backend/driver/placement, non-positive sizes, W > R).  Softens what a
+    contract allows softening: Q is clamped down to ``relax_rank + 1``."""
+    c = config
+    for name in ("Q", "S", "R", "P", "W"):
+        v = getattr(c, name)
+        if not isinstance(v, int) or v < 1:
+            raise CapabilityError(f"{name} must be a positive int, got {v!r}")
+    if c.S < 2:
+        raise CapabilityError(
+            f"S must be >= 2 (segment append needs a spare row), got {c.S}")
+    if c.W > c.R:
+        raise CapabilityError(
+            f"W (wave width, {c.W}) cannot exceed R (ring capacity, {c.R}):"
+            " within-wave tickets must be distinct mod R")
+    if c.backend not in available_backends():
+        raise CapabilityError(
+            f"unknown backend {c.backend!r}; registered:"
+            f" {available_backends()}")
+    if c.driver not in ("device", "host"):
+        raise CapabilityError(
+            f"driver must be 'device' or 'host', got {c.driver!r}")
+    if c.placement not in ("local", "mesh"):
+        raise CapabilityError(
+            f"placement must be 'local' or 'mesh', got {c.placement!r}")
+    if c.relax_rank is not None and c.relax_rank < 0:
+        raise CapabilityError(f"relax_rank must be >= 0, got {c.relax_rank}")
+
+    Q = c.Q
+    if c.relax_rank is not None and Q - 1 > c.relax_rank:
+        Q = c.relax_rank + 1   # clamp: honor the ordering contract
+    mesh_devices = 1
+    if c.placement == "mesh":
+        import jax
+        n = len(jax.devices())
+        mesh_devices = max(d for d in range(1, n + 1) if Q % d == 0)
+    granted = c.replace(Q=Q)
+    caps = Capabilities(
+        ordering="strict_fifo" if Q == 1 else "q_relaxed",
+        rank_error=Q - 1,
+        shards=Q,
+        backend=c.backend,
+        driver=c.driver,
+        placement=c.placement,
+        mesh_devices=mesh_devices,
+        fused_wave=True,   # every registered backend provides fused_wave
+        durable_linearizability=True,
+        detectable_recovery=True,
+        ticket_width=32,
+        ticket_horizon=TICKET_HORIZON,
+        capacity_hint=Q * c.S * c.R,
+    )
+    return granted, caps

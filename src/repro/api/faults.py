@@ -1,0 +1,101 @@
+"""The unified crash API: one FaultPlan for clean, torn and swept crashes.
+
+Before the facade, every endpoint grew its own crash surface
+(``crash_and_recover()``, ``torn_crash_and_recover(...)``, the
+``crash_sweep``/``fabric_crash_sweep`` free functions).  ``FaultPlan``
+folds them into one declarative object consumed by
+``PersistentQueue.crash(plan)``:
+
+  * ``FaultPlan()`` / ``FaultPlan("clean")`` -- full-system crash at a wave
+    boundary (every pwb of the last wave drained), then recovery.
+  * ``FaultPlan("torn", enq_items=..., deq_lanes=..., seed=...)`` -- run ONE
+    wave over the live queue and crash BETWEEN the pwbs of its ordered
+    flush (prefix + seeded evictions); the wave's results are discarded
+    (in-flight ops), recovery runs on the torn image.
+  * ``FaultPlan("sweep", n_points=256, ...)`` -- forensics: materialize
+    n_points torn images of one wave and recover ALL of them in one vmapped
+    device call, WITHOUT mutating the live queue.  Returns a ``SweepResult``
+    whose per-point/per-queue contents feed ``consistency.check_wave_crash``
+    directly (``SweepResult.check`` runs the whole sweep through it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from repro.core.consistency import check_wave_crash
+from repro.core.wave import peek_items
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One crash, declaratively.  ``kind``: "clean" | "torn" | "sweep"."""
+
+    kind: str = "clean"
+    enq_items: Tuple[int, ...] = ()   # in-flight enqueues of the crashed wave
+    deq_lanes: int = 0                # in-flight dequeue lanes PER queue
+    shard: int = 0                    # consumer shard driving the torn wave
+    seed: int = 0                     # PRNG seed (crash point + evictions)
+    crash_point: Any = None           # pin the flush prefix (None = random)
+    evict_rate: float = 0.25          # eviction-adversary rate
+    n_points: int = 256               # sweep only: crash points to cover
+
+    def __post_init__(self):
+        if self.kind not in ("clean", "torn", "sweep"):
+            raise ValueError(
+                f"FaultPlan.kind must be 'clean', 'torn' or 'sweep',"
+                f" got {self.kind!r}")
+        object.__setattr__(self, "enq_items",
+                           tuple(int(x) for x in self.enq_items))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """A torn-crash sweep's evidence: ``states`` stacks the recovered
+    WaveStates on a leading [n_points, Q] axis; the oracle fields are what
+    ``check_wave_crash`` validates each point against."""
+
+    states: Any                       # recovered states, [n_points, Q, ...]
+    points: Any                       # crash-point masks / points
+    pre_items: Tuple[Tuple[int, ...], ...]   # per-queue pre-wave contents
+    wave_enqs: Tuple[Tuple[int, ...], ...]   # per-queue in-flight enqueues
+    deq_lanes: int                    # in-flight dequeue lanes per queue
+    n_points: int
+
+    def state_at(self, point: int, q: int):
+        """One recovered WaveState (unstacked) for (crash point, queue)."""
+        return jax.tree.map(lambda a: a[point][q], self.states)
+
+    def check(self) -> Dict[str, int]:
+        """Run every (point, queue) recovery through the shared
+        durable-linearizability checker; raises on the first violation.
+        Returns aggregate {"lost_prefix": ..., "survived_wave_enqs": ...}."""
+        states = jax.device_get(self.states)
+        lost = survived = 0
+        for i in range(self.n_points):
+            for q in range(len(self.pre_items)):
+                out = peek_items(jax.tree.map(lambda a: a[i][q], states))
+                r = check_wave_crash(list(self.pre_items[q]),
+                                     list(self.wave_enqs[q]),
+                                     self.deq_lanes, out)
+                lost += r["lost_prefix"]
+                survived += r["survived_wave_enqs"]
+        return {"lost_prefix": lost, "survived_wave_enqs": survived}
+
+
+def as_fault_plan(torn: Any, seed: int = 0) -> FaultPlan:
+    """Legacy-consumer adapter: the serving/pipeline ``crash_and_recover``
+    surface took ``torn=None`` (clean) or a kwargs dict for the torn
+    injector; fold both spellings into a FaultPlan."""
+    if torn is None:
+        return FaultPlan("clean")
+    if isinstance(torn, FaultPlan):
+        return torn
+    kw = dict(torn)
+    kw.setdefault("seed", seed)
+    return FaultPlan("torn", **kw)
+
+
+__all__: List[str] = ["FaultPlan", "SweepResult", "as_fault_plan"]

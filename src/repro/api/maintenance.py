@@ -1,0 +1,171 @@
+"""Maintenance ops on a live handle.  First op: the quiescent ticket
+rebase (the ROADMAP int32 ticket-horizon fix; DESIGN.md §3c/§8).
+
+Why a rebase exists: tickets, cell indices and per-row ``base`` values are
+int32 (the TPU-native width) and grow monotonically per row across segment
+recycles -- one row's ticket space overflows after ~2^31 enqueues through
+that row.  The rebase resets every per-row ticket space (and the allocation
+epochs) to zero without losing the queue's durability guarantees.
+
+The rebase contract:
+
+  * **Quiescence**: the queue must be DRAINED (backlog 0) with no in-flight
+    waves -- the engine is bulk-synchronous, so between host calls the only
+    remaining requirement is emptiness; ``rebase()`` raises
+    ``RebaseNotQuiescent`` otherwise.  (An in-place rebase of LIVE items
+    cannot be made torn-crash-safe at pwb granularity: any mix of shifted
+    and unshifted live cells in one row is unrecoverable under either
+    header.  Draining first makes every row's re-init invisible under the
+    old header -- see below.)
+  * **Durability across a torn rebase**: the rebase flushes as an ordered
+    ``persistence.RebaseDelta`` spanning TWO psync epochs -- cell re-init
+    records and mirror records first, one psync, then the segment-header
+    record (epochs + bases + closed bits) as the single atomic COMMIT.  A
+    crash anywhere inside the rebase recovers an EMPTY, fully functional
+    queue: before the commit record, every re-init cell reads as a previous
+    incarnation's cell (idx below the old base) or a dead cell of a drained
+    row, so recovery under the old header still finds nothing; after the
+    commit, the psync barrier guarantees every re-init record landed, so
+    recovery under the new header sees exactly the pristine image.  The
+    ``rebase_sweep`` tests hold >= 128 crash points per backend to this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fabric import fabric_init, fabric_recover
+from repro.core.persistence import (apply_rebase, crash_recover_images,
+                                    make_rebase_delta, rebase_mask,
+                                    rebase_masks, rebase_records, tree_copy)
+
+
+class RebaseNotQuiescent(RuntimeError):
+    """rebase() requires a drained queue (backlog 0, no in-flight waves)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RebaseReport:
+    """What a completed rebase reclaimed, per internal queue."""
+
+    max_base_before: List[int]    # highest per-row ticket base, per queue
+    max_epoch_before: List[int]   # highest allocation epoch, per queue
+    records_flushed: int          # pwb records per queue (cells+mirrors+hdr)
+    psyncs: int                   # drains per queue (the two-epoch flush)
+
+    @property
+    def headroom_reclaimed(self) -> int:
+        """Ticket headroom returned to the hottest row (enqueues until the
+        next rebase would be needed, had one not run)."""
+        return max(self.max_base_before, default=0)
+
+
+class Maintenance:
+    """Namespace returned by ``PersistentQueue.maintenance()``."""
+
+    def __init__(self, queue):
+        self.q = queue
+
+    # -- introspection ------------------------------------------------------
+
+    def ticket_headroom(self) -> int:
+        """Enqueues the hottest row can still absorb before its int32
+        ticket space overflows (when this gets low: drain + ``rebase()``)."""
+        from repro.api.config import TICKET_HORIZON
+        tails = np.asarray(jax.device_get(self.q._vol.tails))
+        return int(TICKET_HORIZON - tails.max())
+
+    # -- the quiescent ticket rebase ----------------------------------------
+
+    def _delta(self):
+        """The stacked RebaseDelta re-initializing every internal queue."""
+        q = self.q
+        fresh = fabric_init(q.Q, q.S, q.R, q.P)
+        return jax.vmap(make_rebase_delta)(fresh), fresh
+
+    def rebase(self, shard: int = 0) -> RebaseReport:
+        """Reset every per-row ticket space (bases, indices, epochs) of a
+        DRAINED queue to zero, flushing through the two-psync-epoch
+        ``RebaseDelta`` (see the module docstring for the torn-crash
+        argument).  Raises ``RebaseNotQuiescent`` if the queue holds items.
+        Counters: the rebase charges its own pwbs/psyncs (it is maintenance
+        I/O, not operations -- ``ops`` is untouched)."""
+        q = self.q
+        if q.backlog() != 0:
+            raise RebaseNotQuiescent(
+                f"rebase() needs a drained queue; backlog={q.backlog()}")
+        # NOTE: maintenance reaches the Q-STACKED images (q._vol/q._nvm)
+        # directly -- the legacy WaveQueue shim overrides the public
+        # vol/nvm accessors with an unstacked single-queue view
+        vol = jax.device_get(q._vol)
+        report = RebaseReport(
+            max_base_before=[int(vol.base[i].max()) for i in range(q.Q)],
+            max_epoch_before=[int(vol.epoch[i].max()) for i in range(q.Q)],
+            records_flushed=rebase_records(q.S, q.R, q.P),
+            psyncs=2,
+        )
+        delta, fresh = self._delta()
+        nvm = jax.vmap(apply_rebase)(q._nvm, delta)
+        # the granted image pair must not alias (the hot jits donate both)
+        q._vol, q._nvm = fresh, tree_copy(nvm)
+        q.pwbs[:, shard] += report.records_flushed
+        # two drains for the whole Q-wide rebase flush (the fused-round
+        # discipline: a Q-wide flush epoch syncs once)
+        q.psyncs[shard] += 2
+        return report
+
+    def torn_rebase(self, seed: int = 0, crash_point=None,
+                    evict_rate: float = 0.25):
+        """Crash MID-REBASE: cut each queue's rebase flush at an independent
+        seeded point (respecting the psync barrier before the header
+        commit), then recover from the torn image.  The queue must be
+        drained, exactly as for ``rebase()``; the recovered queue is empty
+        either way -- that IS the invariant.  Returns the recovered
+        volatile state (the handle is mutated, like ``crash('torn')``)."""
+        q = self.q
+        if q.backlog() != 0:
+            raise RebaseNotQuiescent(
+                f"torn_rebase() needs a drained queue; backlog={q.backlog()}")
+        delta, _fresh = self._delta()
+        n_rec = rebase_records(q.S, q.R, q.P)
+        keys = jax.random.split(jax.random.PRNGKey(seed), q.Q)
+        masks = jnp.stack([
+            rebase_mask(keys[i], n_rec, point=crash_point,
+                        evict_rate=evict_rate)
+            for i in range(q.Q)])
+        q._vol, q._nvm = crash_recover_images(
+            jax.vmap(apply_rebase)(q._nvm, delta, masks),
+            lambda img: fabric_recover(img, backend=q.backend))
+        return q._vol
+
+    def rebase_sweep(self, n_points: int = 128, seed: int = 0,
+                     evict_rate: float = 0.25):
+        """Forensics: materialize ``n_points`` torn-crash images of the
+        rebase flush (per-queue independent cuts, psync barrier respected)
+        and recover ALL of them in one vmapped device call WITHOUT mutating
+        the live queue.  Returns recovered states stacked [n_points, Q, ...]
+        -- every one must be empty, which the api test suite asserts."""
+        q = self.q
+        if q.backlog() != 0:
+            raise RebaseNotQuiescent(
+                f"rebase_sweep() needs a drained queue; backlog={q.backlog()}")
+        delta, _fresh = self._delta()
+        n_rec = rebase_records(q.S, q.R, q.P)
+        keys = jax.random.split(jax.random.PRNGKey(seed), q.Q)
+        qmasks = []
+        for i in range(q.Q):
+            ke, kp = jax.random.split(keys[i])
+            m, _ = rebase_masks(ke, n_points, n_rec, evict_rate)
+            qmasks.append(jax.random.permutation(kp, m, axis=0))
+        masks = jnp.stack(qmasks, axis=1)        # [n_points, Q, n_rec]
+        nvm_pre = tree_copy(q._nvm)
+
+        def one(mk):
+            img = jax.vmap(apply_rebase)(nvm_pre, delta, mk)
+            return fabric_recover(img, backend=q.backend)
+
+        return jax.vmap(one)(masks)

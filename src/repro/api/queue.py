@@ -1,0 +1,527 @@
+"""One queue, one handle: the ``PersistentQueue`` facade (DESIGN.md §8).
+
+This is the single constructor surface over the whole reproduction stack:
+``open_queue(QueueConfig(...))`` negotiates capabilities and returns a
+``PersistentQueue`` that subsumes the former ``WaveQueue`` (Q=1) and
+``ShardedWaveQueue`` (Q>1) endpoints -- a Q=1 handle IS a degenerate
+fabric, one stacked state, one driver path, one persist-accounting scheme.
+The functional core stays where it was (``core/wave.py`` ``wave_step``,
+``core/fabric.py`` ``fabric_step`` and friends); this class owns exactly
+the host-side driving that used to be duplicated across two classes.
+
+State is a pytree handle (``QueueState``, a NamedTuple of the volatile and
+NVM ``WaveState`` stacks) so it composes with ``jax.jit`` / ``vmap`` /
+``shard_map``: ``queue.state`` reads it, ``queue.bind(state)`` rebinds it,
+and ``placement="mesh"`` routes ``step`` through the shard_mapped wave step
+(``distributed/fabric_map``) with no other code change.
+
+Crash surface: ONE method, ``crash(plan)``, driven by ``FaultPlan``
+(clean wave-boundary crash, torn mid-flush crash, or a non-mutating
+vmapped sweep of crash points).  Maintenance surface: ``maintenance()``
+(first op: the quiescent ticket rebase of DESIGN.md §3c/§8).
+
+Queue-full contract: ``enqueue_all`` either durably enqueues every item or
+raises ``QueueFull`` carrying the items that did NOT make it (per-queue
+FIFO order preserved; items already enqueued stay enqueued) -- the same
+exception, with the same payload, on the device driver, the host driver
+and every Q (the pre-facade paths drifted: bare AssertionErrors with
+different messages and no pending-item information).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import Capabilities, QueueConfig, negotiate
+from repro.api.faults import FaultPlan, SweepResult
+from repro.core import driver as _drv
+from repro.core.fabric import (fabric_crash_sweep, fabric_dequeue_scan,
+                               fabric_enqueue_scan, fabric_init,
+                               fabric_recover, fabric_step, fabric_step_delta)
+from repro.core.persistence import (apply_delta, crash_recover_images,
+                                    delta_records, torn_mask, tree_copy)
+from repro.core.wave import (EMPTY_V, bucket_pow2, crash, fold_dequeue_block,
+                             fold_enqueue_results, peek_items, plan_waves,
+                             quantize_waves, state_empty)
+
+
+class QueueState(NamedTuple):
+    """The queue's two images as one jit/vmap/shard_map-composable pytree
+    (every leaf carries a leading [Q] queue axis)."""
+
+    vol: object   # WaveState stack: the volatile image
+    nvm: object   # WaveState stack: the durable image
+
+
+class QueueFull(RuntimeError):
+    """``enqueue_all`` could not durably enqueue every item within
+    ``max_waves``.  ``pending`` holds the items that did not make it, in
+    their per-queue FIFO submission order; everything else IS enqueued."""
+
+    def __init__(self, pending: Sequence[int], waves: int):
+        self.pending = [int(x) for x in pending]
+        self.waves = int(waves)
+        super().__init__(
+            f"queue full: {len(self.pending)} item(s) not enqueued after "
+            f"{self.waves} wave(s)")
+
+
+def open_queue(config: QueueConfig = QueueConfig()) -> "PersistentQueue":
+    """Negotiate ``config`` and open the queue it describes."""
+    return PersistentQueue(config)
+
+
+class PersistentQueue:
+    """The one queue endpoint: Q >= 1 internal queues behind one handle.
+
+    Ordering: items are placed round-robin across the Q internal queues and
+    each internal queue is strictly FIFO, so the handle is a Q-relaxed FIFO
+    (rank error Q-1; ``capabilities.ordering == "strict_fifo"`` at Q=1).
+
+    Driving: ``driver="device"`` (default) runs whole batches as
+    ``lax.while_loop`` programs (one device call + one host sync per
+    ``enqueue_all``/``dequeue_n``; ``core/driver.py``); ``driver="host"``
+    keeps the scan-batched host loop as the tested reference.
+
+    Persistence accounting (``persist_stats``, ONE schema for every Q):
+    per (internal queue, consumer shard) -- ``pwbs`` = flushed cache lines
+    (one ring cell per completed op + one Head-mirror line per dequeue wave
+    + one segment-header line per active wave), ``ops`` = completed
+    operations; per consumer shard -- ``psyncs``, one drain per FUSED wave
+    round (the Q-wide wave drains once).  Totals ride along so consumers
+    stop re-deriving them."""
+
+    def __init__(self, config: QueueConfig = QueueConfig()):
+        granted, caps = negotiate(config)
+        self.config: QueueConfig = granted
+        self.capabilities: Capabilities = caps
+        self.Q, self.S, self.R = granted.Q, granted.S, granted.R
+        self.P, self.W = granted.P, granted.W
+        self.backend = granted.backend
+        self.driver = granted.driver
+        self.placement = granted.placement
+        self.waves_per_call = max(1, granted.waves_per_call)
+        # device drivers batch wider than the consumer-facing wave width W:
+        # device residency makes wide waves free (no host marshalling), and
+        # within-wave tickets are lane-ordered, so per-queue FIFO is exact
+        # at ANY width <= R (ring-full failures are suffix-shaped)
+        self.device_wave = min(self.R, max(self.W, 512))
+        self._vol = fabric_init(self.Q, self.S, self.R, self.P)
+        self._nvm = fabric_init(self.Q, self.S, self.R, self.P)
+        self._place = 0   # round-robin placement cursor (enqueue side)
+        self._take = 0    # round-robin service cursor (dequeue side)
+        self._mesh_step = None
+        self.pwbs = np.zeros((self.Q, self.P), np.int64)
+        # one psync per FUSED wave round (the Q-wide wave drains once),
+        # charged to the consumer shard that drove the round
+        self.psyncs = np.zeros((self.P,), np.int64)
+        self.ops = np.zeros((self.Q, self.P), np.int64)
+
+    # -- pytree state handle --------------------------------------------------
+
+    @property
+    def vol(self):
+        return self._vol
+
+    @vol.setter
+    def vol(self, st):
+        self._vol = st
+
+    @property
+    def nvm(self):
+        return self._nvm
+
+    @nvm.setter
+    def nvm(self, st):
+        self._nvm = st
+
+    @property
+    def state(self) -> QueueState:
+        """The (vol, nvm) image pair as one pytree handle."""
+        return QueueState(self._vol, self._nvm)
+
+    def bind(self, state: QueueState) -> "PersistentQueue":
+        """Rebind the handle to ``state`` (e.g. after pushing it through a
+        jitted/vmapped/shard_mapped transform).  Returns self."""
+        self._vol, self._nvm = state.vol, state.nvm
+        return self
+
+    # -- raw access -----------------------------------------------------------
+
+    def step(self, enq_vals, deq_mask, shard: int = 0):
+        """One raw fused wave across all Q queues: enq_vals [Q, W] int32
+        (-1 = idle lane), deq_mask [Q, W] bool.  With ``placement="mesh"``
+        the step runs shard_mapped over the negotiated device mesh."""
+        ev = jnp.asarray(enq_vals, jnp.int32)
+        dm = jnp.asarray(deq_mask, bool)
+        if self.placement == "mesh":
+            if self._mesh_step is None:
+                from repro.distributed.fabric_map import (
+                    make_sharded_fabric_step, queue_mesh)
+                mesh = queue_mesh(self.capabilities.mesh_devices)
+                self._mesh_step = make_sharded_fabric_step(
+                    mesh, backend=self.backend)
+            self._vol, self._nvm, ok, out = self._mesh_step(
+                self._vol, self._nvm, ev, dm, self._shard_arr(shard))
+        else:
+            self._vol, self._nvm, ok, out = fabric_step(
+                self._vol, self._nvm, ev, dm, self._shard_arr(shard),
+                backend=self.backend)
+        return ok, out
+
+    @staticmethod
+    def _shard_arr(shard) -> jnp.ndarray:
+        return jnp.int32(shard)
+
+    # -- producer side --------------------------------------------------------
+
+    def _placed(self, items) -> List[np.ndarray]:
+        """Round-robin place ``items`` across the Q internal queues,
+        advancing the placement cursor (the one placement oracle; the torn
+        injector's ``plan_torn_wave`` uses the same walk).  Vectorized:
+        placement is on the hot path and must not cost O(n) Python."""
+        arr = np.asarray(
+            items if isinstance(items, np.ndarray) else list(items),
+            np.int32).reshape(-1)
+        place = self._place
+        self._place = int((place + arr.size) % self.Q)
+        # item i lands on queue (place + i) % Q  <=>  queue q takes the
+        # strided slice starting at (q - place) % Q -- O(1) views, no scan
+        return [arr[(q - place) % self.Q::self.Q] for q in range(self.Q)]
+
+    def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
+        """Durably enqueue every item (ints >= 0), retrying segment-close
+        failures; raises ``QueueFull`` (pending items attached, per-queue
+        order) if the pool cannot take them within ``max_waves``.  Returns
+        the number of wave rounds used."""
+        pend = self._placed(items)
+        if self.driver == "host":
+            return self._enqueue_all_host([list(p) for p in pend],
+                                          shard, max_waves)
+        if not any(p.size for p in pend):
+            return 0
+        N = bucket_pow2(max(p.size for p in pend))
+        rows = np.full((self.Q, N), -1, np.int32)
+        for q in range(self.Q):
+            rows[q, :pend[q].size] = pend[q]
+        (self._vol, self._nvm, done, rounds, pwbs,
+         ops) = _drv.fabric_enqueue_all(
+            self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
+            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
+        rounds, pwbs, ops = jax.device_get((rounds, pwbs, ops))
+        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
+        self.ops[:, shard] += np.asarray(ops, np.int64)
+        self.psyncs[shard] += int(rounds)
+        if int(rounds) >= max_waves:
+            # only the wave budget can stop the driver loop short of done;
+            # the [Q, N] done flags are fetched on this cold path only
+            done = np.asarray(jax.device_get(done))
+            if not done.all():
+                raise QueueFull(
+                    [int(v) for q in range(self.Q)
+                     for v in rows[q][~done[q]] if v >= 0], int(rounds))
+        return int(rounds)
+
+    def _enqueue_all_host(self, pend: List[List[int]], shard: int,
+                          max_waves: int):
+        """Scan-batched host loop: K waves per device call, host retry fold."""
+        Q, K, W = self.Q, self.waves_per_call, self.W
+        waves = 0
+        while any(pend) and waves < max_waves:
+            k_used = quantize_waves(-(-max(len(p) for p in pend) // W), K)
+            rows = np.full((Q, k_used, W), -1, np.int32)
+            for q in range(Q):
+                chunk = pend[q][:k_used * W]
+                rows[q].reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
+            self._vol, self._nvm, oks, submitted = fabric_enqueue_scan(
+                self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
+                backend=self.backend)
+            oks = np.asarray(jax.device_get(oks))
+            sub = np.asarray(jax.device_get(submitted))
+            fused = 0
+            for q in range(Q):
+                chunk = pend[q][:k_used * W]
+                if not chunk:
+                    continue
+                retry, ok_flat, taken, active = fold_enqueue_results(
+                    chunk, rows[q], oks[q], sub[q], W)
+                pend[q] = retry + pend[q][taken:]
+                fused = max(fused, active)
+                # completed-enqueue cells + the segment-header line
+                # (closed/epoch/base) per active wave on this queue
+                self.pwbs[q, shard] += int(ok_flat.sum()) + active
+                self.ops[q, shard] += int(ok_flat.sum())
+            # the fused wave drains once per round across all Q shards
+            self.psyncs[shard] += max(fused, 1)
+            waves += max(fused, 1)
+        if any(pend):
+            raise QueueFull([v for p in pend for v in p], waves)
+        return waves
+
+    # -- consumer side --------------------------------------------------------
+
+    def _backlogs(self) -> np.ndarray:
+        """Per-queue live-item upper bound (sum of per-segment tail-head)."""
+        tails = np.asarray(jax.device_get(self._vol.tails))
+        heads = np.asarray(jax.device_get(self._vol.heads))
+        return np.maximum(tails - heads, 0).sum(axis=1)
+
+    def _plan_counts(self, remaining: int, bl: np.ndarray) -> np.ndarray:
+        """Assign up to ``remaining`` dequeue lanes to queues from the
+        backlog snapshot ``bl``.  Empty shards donate their lanes to loaded
+        shards (work stealing); with no known backlog, probe all queues
+        round-robin."""
+        Q, cap = self.Q, self.waves_per_call * self.W
+        counts = np.zeros((Q,), np.int64)
+        if bl.sum() > 0:
+            want = np.minimum(bl, cap)
+            if want.sum() <= remaining:
+                counts = want
+            else:
+                counts = (want * remaining) // max(int(want.sum()), 1)
+                left = remaining - int(counts.sum())
+                q = self._take
+                while left > 0:
+                    if counts[q] < want[q]:
+                        counts[q] += 1
+                        left -= 1
+                    q = (q + 1) % Q
+        else:
+            # probe: no known backlog -- confirm emptiness with a SMALL wave
+            # (one empty-transition per lane still flushes a cell, so big
+            # probe waves would wreck the pwb-per-op budget for nothing)
+            probe_total = min(remaining, max(Q, min(self.W, 2 * Q)))
+            base = probe_total // Q
+            counts[:] = base
+            for i in range(probe_total - base * Q):
+                counts[(self._take + i) % Q] += 1
+        return counts.astype(np.int64)
+
+    def dequeue_n(self, n: int, shard: int = 0, max_waves: int = 10_000):
+        """Dequeue up to n items, round-robin across queues with work
+        stealing; stops early when the queue is verifiably empty.  Returns
+        (items, fused_wave_count)."""
+        if self.driver == "host":
+            return self._dequeue_n_host(n, shard, max_waves)
+        if n <= 0:
+            return [], 0
+        cap = bucket_pow2(n)
+        (self._vol, self._nvm, out, got, rounds, take, pwbs,
+         ops) = _drv.fabric_dequeue_n(
+            self._vol, self._nvm, jnp.int32(n), jnp.int32(self._take),
+            jnp.int32(shard), jnp.int32(max_waves),
+            W=self.device_wave, cap=cap, backend=self.backend)
+        out, got, rounds, take, pwbs, ops = jax.device_get(
+            (out, got, rounds, take, pwbs, ops))
+        self._take = int(take)
+        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
+        self.ops[:, shard] += np.asarray(ops, np.int64)
+        self.psyncs[shard] += int(rounds)
+        # .tolist() (C-speed, yields Python ints) -- a per-element int()
+        # comprehension costs more than the facade's whole dispatch
+        return np.asarray(out[:int(got)]).tolist(), int(rounds)
+
+    def _dequeue_n_host(self, n: int, shard: int = 0,
+                        max_waves: int = 10_000):
+        """Scan-batched host loop: backlog sync + plan per round, K scan
+        waves per device call."""
+        Q, K, W = self.Q, self.waves_per_call, self.W
+        got: List[int] = []
+        waves = 0
+        while len(got) < n and waves < max_waves:
+            remaining = n - len(got)
+            bl = self._backlogs()          # one device sync per iteration
+            probe = bl.sum() == 0
+            counts_q = self._plan_counts(remaining, bl)
+            if counts_q.sum() == 0:
+                counts_q[self._take % Q] = 1
+            # only as many waves as the busiest queue needs (<= K, quantized)
+            k_used = quantize_waves(-(-int(counts_q.max()) // W), K)
+            counts = np.zeros((Q, k_used), np.int32)
+            for q in range(Q):
+                plan = plan_waves(int(counts_q[q]), k_used, W) \
+                    if counts_q[q] else np.zeros((0,), np.int32)
+                counts[q, :plan.shape[0]] = plan
+            self._vol, self._nvm, outs = fabric_dequeue_scan(
+                self._vol, self._nvm, jnp.asarray(counts), jnp.int32(shard),
+                W, backend=self.backend)
+            outl = np.asarray(jax.device_get(outs))      # [Q, k_used, W]
+            # round-robin service order: wave-major, then queue rotation
+            act_all = []
+            for k in range(k_used):
+                for dq in range(Q):
+                    q = (self._take + dq) % Q
+                    c = int(counts[q, k])
+                    if c == 0:
+                        continue
+                    lane_vals = outl[q, k, :c]
+                    act_all.append(lane_vals)
+                    items, touched, delivered = fold_dequeue_block(lane_vals)
+                    got.extend(items)
+                    # touched cells + Head-mirror line + segment-header line
+                    self.pwbs[q, shard] += touched + 2
+                    self.ops[q, shard] += delivered
+            self._take = (self._take + 1) % Q
+            # one psync per fused wave: the whole Q-wide wave drains once,
+            # not once per (queue, wave) block
+            fused = int((counts > 0).any(axis=0).sum())
+            self.psyncs[shard] += max(fused, 1)
+            waves += max(fused, 1)
+            act = (np.concatenate(act_all) if act_all
+                   else np.empty((0,), np.int32))
+            if probe and act.size and (act == EMPTY_V).all():
+                if self._all_empty():
+                    break
+        return got, waves
+
+    def _all_empty(self) -> bool:
+        """The driver emptiness rule (wave.state_empty), per internal queue."""
+        vol = jax.device_get(self._vol)
+        return all(
+            state_empty(int(vol.first[q]), int(vol.last[q]),
+                        vol.heads[q], vol.tails[q])
+            for q in range(self.Q))
+
+    def drain(self, shard: int = 0, max_waves: int = 10_000):
+        """Dequeue everything.  Demand (and the device output buffer) is
+        sized from the live backlog, not the Q*S*R pool capacity; the
+        empty-probe exit handles ticket holes that inflate the estimate."""
+        out, _ = self.dequeue_n(self.backlog(), shard, max_waves)
+        return out
+
+    def backlog(self) -> int:
+        """Live-item upper bound across every internal queue."""
+        return int(self._backlogs().sum())
+
+    # -- fault injection ------------------------------------------------------
+
+    def crash(self, plan: FaultPlan = FaultPlan()):
+        """THE crash surface (FaultPlan: clean | torn | sweep).
+
+        * clean -- full crash at a wave boundary; every volatile image is
+          lost, one vectorized recovery scan rebuilds all Q queues.
+          Mutates the handle; returns the recovered volatile state.
+        * torn  -- run one wave (``plan.enq_items`` placed round-robin,
+          ``plan.deq_lanes`` active dequeue lanes per queue) and crash
+          between the pwbs of its ordered flush (independent seeded prefix
+          + evictions per queue).  The wave's results are discarded
+          (in-flight ops).  Mutates the handle; returns the recovered
+          volatile state.
+        * sweep -- materialize ``plan.n_points`` torn images of that same
+          wave and recover every one in ONE vmapped device call, WITHOUT
+          mutating the live queue.  Returns a ``SweepResult`` (its
+          ``check()`` feeds every point through the shared
+          durable-linearizability checker)."""
+        if plan.kind == "clean":
+            self._vol, self._nvm = crash_recover_images(
+                crash(self._nvm),
+                lambda img: fabric_recover(img, backend=self.backend))
+            return self._vol
+        if plan.kind == "torn":
+            ev, dm, _pend = self.plan_torn_wave(plan.enq_items,
+                                                plan.deq_lanes)
+            _v, _n, _ok, _out, delta = fabric_step_delta(
+                self._vol, self._nvm, jnp.asarray(ev), jnp.asarray(dm),
+                jnp.int32(plan.shard), backend=self.backend)
+            n_rec = delta_records(delta)
+            keys = jax.random.split(jax.random.PRNGKey(plan.seed), self.Q)
+            masks = jnp.stack([
+                torn_mask(keys[q], n_rec, point=plan.crash_point,
+                          evict_rate=plan.evict_rate)
+                for q in range(self.Q)])
+            self._vol, self._nvm = crash_recover_images(
+                jax.vmap(apply_delta)(self._nvm, delta, masks),
+                lambda img: fabric_recover(img, backend=self.backend))
+            return self._vol
+        # sweep: forensics only -- the live handle is left untouched
+        pre = self.peek_items_per_queue()
+        nvm_pre = tree_copy(self._nvm)
+        place0 = self._place
+        ev, dm, pend = self.plan_torn_wave(plan.enq_items, plan.deq_lanes)
+        self._place = place0               # sweep must not advance placement
+        _v, _n, _ok, _out, delta = fabric_step_delta(
+            self._vol, self._nvm, jnp.asarray(ev), jnp.asarray(dm),
+            jnp.int32(plan.shard), backend=self.backend)
+        states, masks = fabric_crash_sweep(
+            nvm_pre, delta, jax.random.PRNGKey(plan.seed), plan.n_points,
+            backend=self.backend, evict_rate=plan.evict_rate)
+        return SweepResult(
+            states=states, points=masks,
+            pre_items=tuple(tuple(p) for p in pre),
+            wave_enqs=tuple(tuple(p) for p in pend),
+            deq_lanes=plan.deq_lanes, n_points=plan.n_points)
+
+    # Back-compat spellings (the pre-facade per-endpoint surface); both are
+    # thin sugar over crash(plan).
+    def crash_and_recover(self):
+        return self.crash(FaultPlan("clean"))
+
+    def torn_crash_and_recover(self, enq_items=(), deq_lanes: int = 0,
+                               shard: int = 0, seed: int = 0,
+                               crash_point=None, evict_rate: float = 0.25):
+        return self.crash(FaultPlan(
+            "torn", enq_items=tuple(int(x) for x in enq_items),
+            deq_lanes=deq_lanes, shard=shard, seed=seed,
+            crash_point=crash_point, evict_rate=evict_rate))
+
+    def plan_torn_wave(self, enq_items=(), deq_lanes: int = 0):
+        """Lay out ONE wave over the fabric: ``enq_items`` placed round-robin
+        EXACTLY like ``enqueue_all`` (the placement cursor advances),
+        ``deq_lanes`` active dequeue lanes per queue.  Returns
+        (enq_vals[Q, W], deq_mask[Q, W], per_queue_items) -- the per-queue
+        item lists are the FIFO oracle ``consistency.check_wave_crash``
+        validates torn recoveries of this wave against, so this is the ONE
+        place the placement convention lives for crash injection."""
+        Q, W = self.Q, self.W
+        pend = [[int(x) for x in p] for p in self._placed(enq_items)]
+        ev = np.full((Q, W), -1, np.int32)
+        for q in range(Q):
+            assert len(pend[q]) <= W
+            ev[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
+        assert deq_lanes <= W
+        dm = np.broadcast_to(np.arange(W) < deq_lanes, (Q, W)).copy()
+        return ev, dm, pend
+
+    # -- maintenance ----------------------------------------------------------
+
+    def maintenance(self):
+        """The maintenance namespace (first op: ``rebase()``, the quiescent
+        ticket rebase that resets the int32 ticket horizon)."""
+        from repro.api.maintenance import Maintenance
+        return Maintenance(self)
+
+    # -- introspection --------------------------------------------------------
+
+    def peek_items_per_queue(self) -> List[List[int]]:
+        """Per-internal-queue contents in FIFO order (forensics)."""
+        v = jax.device_get(self._vol)
+        return [peek_items(jax.tree.map(lambda a: a[q], v))
+                for q in range(self.Q)]
+
+    def peek_items(self) -> List[int]:
+        """All queue contents, queue-major (each internal list is FIFO)."""
+        return [it for sub in self.peek_items_per_queue() for it in sub]
+
+    def persist_stats(self) -> Dict[str, np.ndarray]:
+        """The ONE persist-accounting schema (every Q, every driver):
+        ``pwbs``/``ops`` per (internal queue, consumer shard) [Q, P];
+        ``psyncs`` per consumer shard [P], one per fused wave round (the
+        Q-wide wave drains once); per-op ratios on the same shapes
+        (``psyncs_per_op`` divides each shard's fused-round count by the
+        ops it drove across all queues, broadcast to [Q, P]); and scalar
+        ``*_total`` aggregates."""
+        ops = np.maximum(self.ops, 1)
+        ops_shard = np.maximum(self.ops.sum(axis=0), 1)          # [P]
+        return {
+            "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
+            "ops": self.ops.copy(),
+            "pwbs_per_op": self.pwbs / ops,
+            "psyncs_per_op": np.broadcast_to(
+                (self.psyncs / ops_shard)[None, :], self.ops.shape).copy(),
+            "ops_total": int(self.ops.sum()),
+            "pwbs_total": int(self.pwbs.sum()),
+            "psyncs_total": int(self.psyncs.sum()),
+        }

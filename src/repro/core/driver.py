@@ -36,8 +36,10 @@ round.  The torn-crash consistency engine (core/persistence.py +
 ``wave_step_delta``; DESIGN.md §7) materializes and validates exactly those
 intermediate images; results the host never synced count as in-flight ops.
 
-The single-queue variants (``WaveQueue``) reuse the same loop bodies by
-stacking the state to Q=1 inside the jit boundary (a free reshape).
+The single-queue entry points reuse the same loop bodies by stacking the
+state to Q=1 inside the jit boundary (a free reshape); the facade
+(``repro.api.PersistentQueue``, DESIGN.md §8) drives the fabric entry
+points directly, since its state is Q-stacked at every topology.
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-"""Sharded queue fabric: Q independent wave queues behind one interface.
+"""Sharded queue fabric: the Q-stacked FUNCTIONAL CORE (DESIGN.md §5).
 
 The BlockFIFO/MultiFIFO scaling move (Sanders & Williams) applied to the
 paper's persistent queue: throughput scales by running Q independent
@@ -6,47 +6,35 @@ paper's persistent queue: throughput scales by running Q independent
 the queue axis (and shard_map-able over a device mesh --
 repro.distributed.fabric_map).  Each internal queue keeps the paper's full
 persistence discipline -- per-shard Head mirrors, cell-only flushes, never
-the global Head/Tail -- so the fabric-level ``crash``/``recover`` is one
-vectorized recovery scan across all shards.
+the global Head/Tail -- so ``fabric_recover`` is one vectorized recovery
+scan across all shards, and ``fabric_crash_sweep`` vmaps hundreds of torn
+crash points through it in one device call.
+
+This module holds only the jitted fabric transforms (step / step_delta /
+scans / recover / crash sweep).  The ENDPOINT that drives them -- placement,
+work stealing, retry, persist accounting, crash plans, maintenance -- is
+``repro.api.PersistentQueue`` (DESIGN.md §8): Q=1 and Q>1 are one class
+there, and the former ``ShardedWaveQueue`` survives as a deprecation shim
+re-exported from ``repro.api.compat``.
 
 Ordering contract (MultiFIFO): items are placed round-robin across the Q
 internal queues and each internal queue is strictly FIFO, so the fabric is a
-Q-relaxed FIFO -- an item can overtake at most Q-1 later-placed items.
-Consumers that need per-stream FIFO pin a stream to a queue via the
-placement cursor.
-
-Work stealing: ``dequeue_n`` plans every wave round from the per-queue
-backlogs and reassigns the lanes of empty shards to loaded ones, so a
-drained shard never idles the wave while siblings hold items.  With the
-default ``driver="device"`` that planning happens ON DEVICE
-(``core/driver.py``): backlog snapshot, lane assignment, retry and item
-compaction all run inside one ``lax.while_loop``, so a whole
-``enqueue_all``/``dequeue_n`` batch costs one device call + one host sync
-(the PR-1 host loop paid a backlog sync per round; it survives behind
-``driver="host"`` as the tested reference).
-
-Persistence accounting follows the fused discipline: one psync per fused
-wave ROUND (the whole Q-wide wave drains once), not one per (queue, wave)
--- see ``persist_stats``.
+Q-relaxed FIFO -- an item can overtake at most Q-1 later-placed items
+(``QueueConfig.relax_rank`` is the negotiated bound).  Consumers that need
+per-stream FIFO pin a stream to a queue via the placement cursor.
 """
 from __future__ import annotations
 
 import functools
-from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import driver as _drv
 from repro.core.backend import BackendLike, get_backend
-from repro.core.persistence import (apply_delta, crash_recover_images,
-                                    delta_records, torn_mask, torn_masks)
-from repro.core.wave import (EMPTY_V, WaveState, _dequeue_scan_impl,
+from repro.core.persistence import apply_delta, delta_records, torn_masks
+from repro.core.wave import (WaveState, _dequeue_scan_impl,
                              _enqueue_scan_impl, _recover_impl, _wave_step,
-                             bucket_pow2, crash, fold_dequeue_block,
-                             fold_enqueue_results, init_state, peek_items,
-                             plan_waves, quantize_waves, state_empty)
+                             init_state)
 
 
 def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
@@ -147,329 +135,12 @@ def fabric_recover(nvm, backend: BackendLike = "jnp"):
     return jax.vmap(lambda n: _recover_impl(n, b))(nvm)
 
 
-class ShardedWaveQueue:
-    """Q wave queues as one endpoint: MultiFIFO placement, per-shard local
-    persistence, fabric-wide crash/recover, work-stealing dequeue.
-
-    Drop-in for ``WaveQueue`` (same enqueue_all / dequeue_n / drain /
-    crash_and_recover / persist_stats surface); ``Q=1`` degenerates to a
-    single queue with strict FIFO.  ``driver="device"`` (default) runs the
-    whole batch loop on device (core/driver.py); ``driver="host"`` keeps the
-    PR-1 scan-batched host loop as the tested reference."""
-
-    def __init__(self, Q: int = 4, S: int = 16, R: int = 256, P: int = 1,
-                 W: int = 64, backend: BackendLike = "jnp",
-                 waves_per_call: int = 8, driver: str = "device"):
-        assert driver in ("device", "host"), driver
-        self.Q, self.S, self.R, self.P, self.W = Q, S, R, P, W
-        self.backend = backend
-        self.driver = driver
-        # device drivers batch wider than the consumer-facing W (see
-        # wave.WaveQueue): per-queue FIFO is exact at any width <= R
-        self.device_wave = min(R, max(W, 512))
-        self.waves_per_call = max(1, waves_per_call)
-        self.vol = fabric_init(Q, S, R, P)
-        self.nvm = fabric_init(Q, S, R, P)
-        self._place = 0   # round-robin placement cursor (enqueue side)
-        self._take = 0    # round-robin service cursor (dequeue side)
-        self.pwbs = np.zeros((Q, P), np.int64)
-        # one psync per FUSED wave round (the Q-wide wave drains once),
-        # charged to the consumer shard that drove the round
-        self.psyncs = np.zeros((P,), np.int64)
-        self.ops = np.zeros((Q, P), np.int64)
-
-    # -- raw access -----------------------------------------------------------
-
-    def step(self, enq_vals, deq_mask, shard: int = 0):
-        """One raw fused wave: enq_vals [Q, W], deq_mask [Q, W]."""
-        self.vol, self.nvm, ok, out = fabric_step(
-            self.vol, self.nvm, jnp.asarray(enq_vals, jnp.int32),
-            jnp.asarray(deq_mask, bool), jnp.int32(shard),
-            backend=self.backend)
-        return ok, out
-
-    # -- producer side --------------------------------------------------------
-
-    def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
-        """Round-robin place items across the Q internal queues and enqueue
-        them (retrying segment-close failures).  Device driver: one call for
-        the whole batch, in-device retry."""
-        Q = self.Q
-        pend: List[List[int]] = [[] for _ in range(Q)]
-        for i, it in enumerate(items):
-            pend[(self._place + i) % Q].append(int(it))
-        self._place = (self._place + sum(len(p) for p in pend)) % Q
-        if self.driver == "host":
-            return self._enqueue_all_host(pend, shard, max_waves)
-        if not any(pend):
-            return 0
-        N = bucket_pow2(max(len(p) for p in pend))
-        rows = np.full((Q, N), -1, np.int32)
-        for q in range(Q):
-            rows[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
-        (self.vol, self.nvm, done, rounds, pwbs,
-         ops) = _drv.fabric_enqueue_all(
-            self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
-            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
-        done, rounds, pwbs, ops = jax.device_get((done, rounds, pwbs, ops))
-        assert bool(np.asarray(done).all()), \
-            "fabric full: could not enqueue everything"
-        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
-        self.ops[:, shard] += np.asarray(ops, np.int64)
-        self.psyncs[shard] += int(rounds)
-        return int(rounds)
-
-    def _enqueue_all_host(self, pend: List[List[int]], shard: int,
-                          max_waves: int):
-        """PR-1 host loop: K scan waves per device call, host retry fold."""
-        Q, K, W = self.Q, self.waves_per_call, self.W
-        waves = 0
-        while any(pend) and waves < max_waves:
-            k_used = quantize_waves(-(-max(len(p) for p in pend) // W), K)
-            rows = np.full((Q, k_used, W), -1, np.int32)
-            for q in range(Q):
-                chunk = pend[q][:k_used * W]
-                rows[q].reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
-            self.vol, self.nvm, oks, submitted = fabric_enqueue_scan(
-                self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
-                backend=self.backend)
-            oks = np.asarray(jax.device_get(oks))
-            sub = np.asarray(jax.device_get(submitted))
-            fused = 0
-            for q in range(Q):
-                chunk = pend[q][:k_used * W]
-                if not chunk:
-                    continue
-                retry, ok_flat, taken, active = fold_enqueue_results(
-                    chunk, rows[q], oks[q], sub[q], W)
-                pend[q] = retry + pend[q][taken:]
-                fused = max(fused, active)
-                # completed-enqueue cells + the segment-header line
-                # (closed/epoch/base) per active wave on this queue
-                self.pwbs[q, shard] += int(ok_flat.sum()) + active
-                self.ops[q, shard] += int(ok_flat.sum())
-            # the fused wave drains once per round across all Q shards
-            self.psyncs[shard] += max(fused, 1)
-            waves += max(fused, 1)
-        assert not any(pend), "fabric full: could not enqueue everything"
-        return waves
-
-    # -- consumer side --------------------------------------------------------
-
-    def _backlogs(self) -> np.ndarray:
-        """Per-queue live-item upper bound (sum of per-segment tail-head)."""
-        tails = np.asarray(jax.device_get(self.vol.tails))
-        heads = np.asarray(jax.device_get(self.vol.heads))
-        return np.maximum(tails - heads, 0).sum(axis=1)
-
-    def _plan_counts(self, remaining: int, bl: np.ndarray) -> np.ndarray:
-        """Assign up to ``remaining`` dequeue lanes to queues from the
-        backlog snapshot ``bl``.  Empty shards donate their lanes to loaded
-        shards (work stealing); with no known backlog, probe all queues
-        round-robin."""
-        Q, cap = self.Q, self.waves_per_call * self.W
-        counts = np.zeros((Q,), np.int64)
-        if bl.sum() > 0:
-            want = np.minimum(bl, cap)
-            if want.sum() <= remaining:
-                counts = want
-            else:
-                counts = (want * remaining) // max(int(want.sum()), 1)
-                left = remaining - int(counts.sum())
-                q = self._take
-                while left > 0:
-                    if counts[q] < want[q]:
-                        counts[q] += 1
-                        left -= 1
-                    q = (q + 1) % Q
-        else:
-            # probe: no known backlog -- confirm emptiness with a SMALL wave
-            # (one empty-transition per lane still flushes a cell, so big
-            # probe waves would wreck the pwb-per-op budget for nothing)
-            probe_total = min(remaining, max(Q, min(self.W, 2 * Q)))
-            base = probe_total // Q
-            counts[:] = base
-            for i in range(probe_total - base * Q):
-                counts[(self._take + i) % Q] += 1
-        return counts.astype(np.int64)
-
-    def dequeue_n(self, n: int, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue up to n items, round-robin across shards with work
-        stealing.  Device driver: backlog planning, lane reassignment and
-        item compaction all run in-device -- one call, one sync.  Returns
-        (items, fused_wave_count)."""
-        if self.driver == "host":
-            return self._dequeue_n_host(n, shard, max_waves)
-        if n <= 0:
-            return [], 0
-        cap = bucket_pow2(n)
-        (self.vol, self.nvm, out, got, rounds, take, pwbs,
-         ops) = _drv.fabric_dequeue_n(
-            self.vol, self.nvm, jnp.int32(n), jnp.int32(self._take),
-            jnp.int32(shard), jnp.int32(max_waves),
-            W=self.device_wave, cap=cap, backend=self.backend)
-        out, got, rounds, take, pwbs, ops = jax.device_get(
-            (out, got, rounds, take, pwbs, ops))
-        self._take = int(take)
-        self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
-        self.ops[:, shard] += np.asarray(ops, np.int64)
-        self.psyncs[shard] += int(rounds)
-        return [int(v) for v in out[:int(got)]], int(rounds)
-
-    def _dequeue_n_host(self, n: int, shard: int = 0,
-                        max_waves: int = 10_000):
-        """PR-1 host loop: backlog sync + plan per round, K scan waves per
-        device call."""
-        Q, K, W = self.Q, self.waves_per_call, self.W
-        got: List[int] = []
-        waves = 0
-        while len(got) < n and waves < max_waves:
-            remaining = n - len(got)
-            bl = self._backlogs()          # one device sync per iteration
-            probe = bl.sum() == 0
-            counts_q = self._plan_counts(remaining, bl)
-            if counts_q.sum() == 0:
-                counts_q[self._take % Q] = 1
-            # only as many waves as the busiest queue needs (<= K, quantized)
-            k_used = quantize_waves(-(-int(counts_q.max()) // W), K)
-            counts = np.zeros((Q, k_used), np.int32)
-            for q in range(Q):
-                plan = plan_waves(int(counts_q[q]), k_used, W) \
-                    if counts_q[q] else np.zeros((0,), np.int32)
-                counts[q, :plan.shape[0]] = plan
-            self.vol, self.nvm, outs = fabric_dequeue_scan(
-                self.vol, self.nvm, jnp.asarray(counts), jnp.int32(shard),
-                W, backend=self.backend)
-            outl = np.asarray(jax.device_get(outs))      # [Q, k_used, W]
-            # round-robin service order: wave-major, then queue rotation
-            act_all = []
-            for k in range(k_used):
-                for dq in range(Q):
-                    q = (self._take + dq) % Q
-                    c = int(counts[q, k])
-                    if c == 0:
-                        continue
-                    lane_vals = outl[q, k, :c]
-                    act_all.append(lane_vals)
-                    items, touched, delivered = fold_dequeue_block(lane_vals)
-                    got.extend(items)
-                    # touched cells + Head-mirror line + segment-header line
-                    self.pwbs[q, shard] += touched + 2
-                    self.ops[q, shard] += delivered
-            self._take = (self._take + 1) % Q
-            # one psync per fused wave: the whole Q-wide wave drains once,
-            # not once per (queue, wave) block
-            fused = int((counts > 0).any(axis=0).sum())
-            self.psyncs[shard] += max(fused, 1)
-            waves += max(fused, 1)
-            act = (np.concatenate(act_all) if act_all
-                   else np.empty((0,), np.int32))
-            if probe and act.size and (act == EMPTY_V).all():
-                if self._fabric_empty():
-                    break
-        return got, waves
-
-    def _fabric_empty(self) -> bool:
-        """The driver emptiness rule (wave.state_empty), per shard."""
-        vol = jax.device_get(self.vol)
-        return all(
-            state_empty(int(vol.first[q]), int(vol.last[q]),
-                        vol.heads[q], vol.tails[q])
-            for q in range(self.Q))
-
-    def drain(self, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue everything.  Demand (and the device output buffer) is
-        sized from the live backlog, not the Q*S*R pool capacity; the
-        in-device empty-probe exit handles ticket holes that inflate the
-        backlog estimate."""
-        out, _ = self.dequeue_n(self.backlog(), shard, max_waves)
-        return out
-
-    # -- fault tolerance ------------------------------------------------------
-
-    def crash_and_recover(self):
-        """Clean full-fabric crash at a wave boundary: all volatile images
-        lost; every shard's recovery scan runs in one vectorized call (the
-        donation-aliasing rule lives in ``persistence.crash_recover_images``)."""
-        self.vol, self.nvm = crash_recover_images(
-            crash(self.nvm),
-            lambda img: fabric_recover(img, backend=self.backend))
-        return self.vol
-
-    def plan_torn_wave(self, enq_items=(), deq_lanes: int = 0):
-        """Lay out ONE wave over the fabric: ``enq_items`` placed round-robin
-        EXACTLY like ``enqueue_all`` (the placement cursor advances),
-        ``deq_lanes`` active dequeue lanes per queue.  Returns
-        (enq_vals[Q, W], deq_mask[Q, W], per_queue_items) -- the per-queue
-        item lists are the FIFO oracle ``consistency.check_wave_crash``
-        validates torn recoveries of this wave against, so this is the ONE
-        place the placement convention lives for crash injection (the
-        demo/test sweeps call it too)."""
-        Q, W = self.Q, self.W
-        pend: List[List[int]] = [[] for _ in range(Q)]
-        items = [int(x) for x in enq_items]
-        for i, it in enumerate(items):
-            pend[(self._place + i) % Q].append(it)
-        self._place = (self._place + len(items)) % Q
-        ev = np.full((Q, W), -1, np.int32)
-        for q in range(Q):
-            assert len(pend[q]) <= W
-            ev[q, :len(pend[q])] = np.asarray(pend[q], np.int32)
-        assert deq_lanes <= W
-        dm = np.broadcast_to(np.arange(W) < deq_lanes, (Q, W)).copy()
-        return ev, dm, pend
-
-    def torn_crash_and_recover(self, enq_items=(), deq_lanes: int = 0,
-                               shard: int = 0, seed: int = 0,
-                               crash_point=None, evict_rate: float = 0.25):
-        """Crash MID-WAVE across the whole fabric: one wave (``enq_items``
-        placed round-robin like ``enqueue_all``; ``deq_lanes`` active dequeue
-        lanes PER QUEUE) runs over the live state, but each queue's ordered
-        flush is cut at an independent seeded prefix + eviction set before
-        recovery.  The wave's results are discarded (in-flight at the
-        crash).  Returns the recovered volatile state."""
-        Q = self.Q
-        ev, dm, _pend = self.plan_torn_wave(enq_items, deq_lanes)
-        _vol, _nvm, _ok, _out, delta = fabric_step_delta(
-            self.vol, self.nvm, jnp.asarray(ev), jnp.asarray(dm),
-            jnp.int32(shard), backend=self.backend)
-        n_rec = delta_records(delta)
-        keys = jax.random.split(jax.random.PRNGKey(seed), Q)
-        masks = jnp.stack([torn_mask(keys[q], n_rec, point=crash_point,
-                                     evict_rate=evict_rate)
-                           for q in range(Q)])
-        self.vol, self.nvm = crash_recover_images(
-            jax.vmap(apply_delta)(self.nvm, delta, masks),
-            lambda img: fabric_recover(img, backend=self.backend))
-        return self.vol
-
-    def peek_items_per_queue(self) -> List[List[int]]:
-        """Per-internal-queue contents in FIFO order (forensics)."""
-        v = jax.device_get(self.vol)
-        return [peek_items(jax.tree.map(lambda a: a[q], v))
-                for q in range(self.Q)]
-
-    def peek_items(self) -> List[int]:
-        """All queue contents, queue-major (each internal list is FIFO)."""
-        return [it for sub in self.peek_items_per_queue() for it in sub]
-
-    # -- introspection --------------------------------------------------------
-
-    def backlog(self) -> int:
-        return int(self._backlogs().sum())
-
-    def persist_stats(self) -> dict:
-        """pwb/op counts per (queue, shard); psyncs per consumer shard,
-        counted per FUSED wave round (the Q-wide wave drains once -- the
-        discipline DESIGN.md §3/§3b documents).  ``psyncs_per_op`` divides
-        each shard's fused-round count by the ops it drove across all
-        queues, broadcast to [Q, P] for per-(queue, shard) inspection."""
-        ops = np.maximum(self.ops, 1)
-        ops_shard = np.maximum(self.ops.sum(axis=0), 1)          # [P]
-        return {
-            "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
-            "ops": self.ops.copy(),
-            "pwbs_per_op": self.pwbs / ops,
-            "psyncs_per_op": np.broadcast_to(
-                (self.psyncs / ops_shard)[None, :], self.ops.shape).copy(),
-        }
+def __getattr__(name):
+    # PEP 562 lazy re-export: the endpoint class moved behind the facade
+    # (repro.api.PersistentQueue); the historical import path keeps working
+    # through the deprecation shim.  Lazy to avoid a circular import (the
+    # api package imports this module's functional core).
+    if name == "ShardedWaveQueue":
+        from repro.api.compat import ShardedWaveQueue
+        return ShardedWaveQueue
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -228,6 +228,124 @@ def torn_mask(key: jax.Array, n_records: int, point: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# Quiescent ticket rebase: the maintenance flush (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+class RebaseDelta(NamedTuple):
+    """The quiescent ticket rebase as ordered, maskable pwb records.
+
+    A rebase re-initializes a DRAINED queue's NVM image so every per-row
+    ticket/base/epoch restarts from zero (the int32 ticket-horizon fix of
+    DESIGN.md §3c/§8).  Unlike a wave's flush, the rebase spans TWO psync
+    epochs (the header write is only issued after the cell/mirror drain
+    returned, so the eviction adversary can never land it early):
+
+      * records ``0 .. S*R-1``      -- cell re-init lines, row-major,
+      * records ``S*R .. S*R+P-1``  -- the per-shard Head-mirror lines,
+      * -- psync barrier --
+      * record  ``S*R+P``           -- the segment-header line (closed bits
+        + allocation epochs + ticket bases), the COMMIT POINT: it can only
+        land after every earlier record did.
+
+    Torn-safety does not depend on which phase-1 records landed: a drained
+    row recovers empty under the OLD header whatever mix of old markers and
+    re-init cells it holds, and once the header lands the full re-init is
+    guaranteed durable (see ``rebase_masks`` and the api sweep tests).
+    """
+
+    vals: jnp.ndarray         # [S, R] int32 re-init cell values (all ⊥)
+    idxs: jnp.ndarray         # [S, R] int32 re-init cell indices
+    safes: jnp.ndarray        # [S, R] bool  re-init safe bits
+    mirrors: jnp.ndarray      # [P] int32 re-init Head mirrors
+    mirror_seg: jnp.ndarray   # [P] int32 re-init mirror segments
+    closed: jnp.ndarray       # [S] bool  re-init closed bits
+    epoch: jnp.ndarray        # [S] int32 re-init allocation epochs
+    base: jnp.ndarray         # [S] int32 re-init ticket bases
+
+
+def rebase_records(S: int, R: int, P: int) -> int:
+    """Maskable pwb records per queue in a rebase delta (S*R cells + P
+    mirrors + the header commit record)."""
+    return S * R + P + 1
+
+
+def make_rebase_delta(fresh) -> RebaseDelta:
+    """The rebase flush for ONE queue: re-init everything to ``fresh`` (an
+    ``init_state``-shaped WaveState; only the persisted fields are used --
+    heads/tails/first/last are never flushed, recovery rebuilds them)."""
+    return RebaseDelta(
+        vals=fresh.vals, idxs=fresh.idxs, safes=fresh.safes,
+        mirrors=fresh.mirrors, mirror_seg=fresh.mirror_seg,
+        closed=fresh.closed, epoch=fresh.epoch, base=fresh.base)
+
+
+def apply_rebase(nvm, delta: RebaseDelta,
+                 applied: Optional[jnp.ndarray] = None):
+    """Materialize the durable image after a (possibly torn) rebase flush.
+
+    ``applied``: bool[S*R + P + 1] mask over the ordered records (None =
+    everything landed = the completed rebase).  Use ``rebase_masks`` to
+    build crash masks -- the header bit is only admissible when every
+    phase-1 record is, which that helper enforces (the psync barrier)."""
+    S, R = nvm.vals.shape
+    P = nvm.mirrors.shape[0]
+    n1 = S * R + P
+    if applied is None:
+        applied = jnp.ones((n1 + 1,), bool)
+    cm = applied[:S * R].reshape(S, R)
+    mm = applied[S * R:n1]
+    hl = applied[n1]
+    return nvm._replace(
+        vals=jnp.where(cm, delta.vals, nvm.vals),
+        idxs=jnp.where(cm, delta.idxs, nvm.idxs),
+        safes=jnp.where(cm, delta.safes, nvm.safes),
+        mirrors=jnp.where(mm, delta.mirrors, nvm.mirrors),
+        mirror_seg=jnp.where(mm, delta.mirror_seg, nvm.mirror_seg),
+        closed=jnp.where(hl, delta.closed, nvm.closed),
+        epoch=jnp.where(hl, delta.epoch, nvm.epoch),
+        base=jnp.where(hl, delta.base, nvm.base),
+    )
+
+
+def rebase_masks(key: jax.Array, n_points: int, n_records: int,
+                 evict_rate: float = 0.25
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Crash-point masks for a rebase sweep.  Like ``torn_masks`` but with
+    the two-psync-epoch structure of the rebase flush: the eviction
+    adversary ranges over the phase-1 records only, and the header record
+    lands iff the crash point is past the psync barrier -- in which case
+    every phase-1 record is forced in (a pwb issued after a psync returned
+    cannot beat the lines that psync drained).
+
+    Returns (masks[n_points, n_records] bool, points[n_points] int32)."""
+    n1 = n_records - 1
+    points = ((jnp.arange(n_points, dtype=jnp.int32) * (n_records + 1))
+              // max(n_points, 1))
+    evict = jax.random.bernoulli(key, evict_rate, (n_points, n1))
+    order = jnp.arange(n1, dtype=jnp.int32)
+    hdr = points >= n_records                      # past the psync barrier
+    m1 = (order[None, :] < points[:, None]) | evict | hdr[:, None]
+    return jnp.concatenate([m1, hdr[:, None]], axis=1), points
+
+
+def rebase_mask(key: jax.Array, n_records: int, point: Optional[int] = None,
+                evict_rate: float = 0.25) -> jnp.ndarray:
+    """ONE rebase crash mask at a random (or pinned) point -- the single-
+    point spelling of ``rebase_masks`` with identical barrier semantics:
+    points in [0, n_records); ``point >= n_records`` means the header
+    commit landed, which forces every phase-1 record in."""
+    kp, ke = jax.random.split(key)
+    pt = (jax.random.randint(kp, (), 0, n_records + 1)
+          if point is None else jnp.int32(point))
+    n1 = n_records - 1
+    evict = jax.random.bernoulli(ke, evict_rate, (n1,))
+    hdr = pt >= n_records
+    m1 = (jnp.arange(n1, dtype=jnp.int32) < pt) | evict | hdr
+    return jnp.concatenate([m1, hdr[None]])
+
+
+# ---------------------------------------------------------------------------
 # Crash/recover image discipline (shared by every endpoint)
 # ---------------------------------------------------------------------------
 

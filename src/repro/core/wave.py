@@ -51,12 +51,16 @@ so a wave costs two row round-trips instead of a chain of full [S, R]
 scatters (DESIGN.md §3b).  All jit entry points donate the state buffers,
 so steady-state waves update in place and allocate nothing.
 
-Driving is DEVICE-RESIDENT by default: ``WaveQueue`` dispatches whole
-batches to the ``lax.while_loop`` drivers in ``core/driver.py`` (one device
-call + one host sync per ``enqueue_all``/``dequeue_n``, with in-device
-retry and persist counters).  The legacy scan-batched host loop
-(``enqueue_scan`` / ``dequeue_scan``, K waves per jit call) is kept behind
-``driver="host"`` as the reference the device drivers are tested against.
+Driving lives behind the facade: ``repro.api.PersistentQueue`` (DESIGN.md
+§8) dispatches whole batches to the ``lax.while_loop`` drivers in
+``core/driver.py`` by default (one device call + one host sync per
+``enqueue_all``/``dequeue_n``, with in-device retry and persist counters);
+the scan-batched host loop (``enqueue_scan`` / ``dequeue_scan``, K waves
+per jit call) is kept behind ``driver="host"`` as the reference the device
+drivers are tested against.  This module is the FUNCTIONAL CORE only --
+steps, scans, recovery, crash sweeps and the driving helpers; the former
+``WaveQueue`` endpoint survives as a deprecation shim re-exported from
+``repro.api.compat``.
 
 Payloads are int32 handles >= 0 (pointing into a payload slab owned by the
 caller); BOT = -1.  Per-lane dequeue results: >= 0 item, EMPTY_V (queue
@@ -66,7 +70,7 @@ empty at this ticket), RETRY_V (transition failed, retry next wave), IDLE_V
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,9 +79,8 @@ import numpy as np
 from repro.core.backend import (BOT, EMPTY_V, IDLE_V, RETRY_V,  # noqa: F401
                                 BackendLike, QueueBackend, available_backends,
                                 get_backend, register_backend)
-from repro.core.persistence import (WaveDelta, apply_delta,
-                                    crash_recover_images, delta_records,
-                                    torn_mask, torn_masks)
+from repro.core.persistence import (WaveDelta, apply_delta, delta_records,
+                                    torn_masks)
 
 
 class WaveState(NamedTuple):
@@ -570,7 +573,7 @@ def recover(nvm: WaveState, backend: BackendLike = "jnp") -> WaveState:
 
 
 # ---------------------------------------------------------------------------
-# Convenience driver: scan-batched host loop
+# Driving helpers shared by the facade's host/device loops (repro/api)
 # ---------------------------------------------------------------------------
 
 
@@ -635,217 +638,12 @@ def bucket_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
-class WaveQueue:
-    """Single-queue engine endpoint.  ``driver`` selects how batches drive
-    the device:
-
-      * ``"device"`` (default) -- the whole retry/drain loop runs on device
-        (``core/driver.py`` while_loop drivers): ONE device call + ONE host
-        sync per ``enqueue_all``/``dequeue_n``, persist counters returned
-        device-side.
-      * ``"host"``   -- the PR-1 scan-batched host loop (K waves per jit
-        call, host-side retry folding); kept as the reference the device
-        drivers are benchmarked and tested against.
-
-    ``repro.core.fabric.ShardedWaveQueue`` stacks Q of these behind one
-    interface.  ``backend`` names a registered ``QueueBackend`` ("jnp" or
-    "pallas").
-
-    Persistence accounting (``persist_stats``): per consumer shard, pwbs =
-    flushed cache lines (one ring cell per completed op + one Head-mirror
-    line per dequeue wave + one segment-header line per active wave -- any
-    wave can close/recycle a row, DESIGN.md §3c), ops = completed
-    operations (counted separately; headers are not ops), psyncs = one
-    drain per wave -- the wave-batched version of the paper's pwb+psync
-    pair per operation."""
-
-    def __init__(self, S: int = 16, R: int = 256, P: int = 1, W: int = 64,
-                 backend: BackendLike = "jnp", waves_per_call: int = 8,
-                 driver: str = "device"):
-        assert driver in ("device", "host"), driver
-        self.S, self.R, self.P, self.W = S, R, P, W
-        self.backend = backend
-        self.driver = driver
-        # the device drivers batch wider than the consumer-facing wave width
-        # W: device residency makes wide waves free (no host marshalling),
-        # and within-wave tickets are lane-ordered, so per-queue FIFO is
-        # exact at ANY width <= R (ring-full failures are suffix-shaped)
-        self.device_wave = min(R, max(W, 512))
-        self.waves_per_call = max(1, waves_per_call)
-        self.vol = init_state(S, R, P)
-        self.nvm = init_state(S, R, P)
-        self.pwbs = np.zeros((P,), np.int64)
-        self.psyncs = np.zeros((P,), np.int64)
-        self.ops = np.zeros((P,), np.int64)
-
-    def step(self, enq_vals, deq_mask, shard: int = 0):
-        """One raw wave (no batching, no persist accounting)."""
-        ev = jnp.asarray(enq_vals, jnp.int32)
-        dm = jnp.asarray(deq_mask, bool)
-        self.vol, self.nvm, ok, out = wave_step(
-            self.vol, self.nvm, ev, dm, jnp.int32(shard),
-            backend=self.backend,
-        )
-        return ok, out
-
-    def enqueue_all(self, items, shard: int = 0, max_waves: int = 10_000):
-        """Enqueue a list of item handles (ints >= 0); retries until done."""
-        if self.driver == "host":
-            return self._enqueue_all_host(items, shard, max_waves)
-        from repro.core import driver as _drv
-        items = np.asarray(list(items), np.int32).reshape(-1)
-        if items.size == 0:
-            return 0
-        buf = np.full((bucket_pow2(items.size),), -1, np.int32)
-        buf[:items.size] = items
-        (self.vol, self.nvm, done, rounds, pwbs,
-         ops) = _drv.device_enqueue_all(
-            self.vol, self.nvm, jnp.asarray(buf), jnp.int32(shard),
-            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
-        done, rounds, pwbs, ops = jax.device_get((done, rounds, pwbs, ops))
-        assert bool(np.asarray(done).all()), \
-            "queue full: could not enqueue everything"
-        self.pwbs[shard] += int(pwbs)
-        self.ops[shard] += int(ops)
-        self.psyncs[shard] += int(rounds)
-        return int(rounds)
-
-    def _enqueue_all_host(self, items, shard: int = 0,
-                          max_waves: int = 10_000):
-        """PR-1 host loop: up to ``waves_per_call`` waves per device call,
-        retry folding on the host."""
-        pending = [int(x) for x in items]
-        waves = 0
-        K, W = self.waves_per_call, self.W
-        while pending and waves < max_waves:
-            k_used = quantize_waves(-(-len(pending) // W), K)
-            chunk = pending[:k_used * W]
-            rows = np.full((k_used, W), -1, np.int32)
-            rows.reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
-            self.vol, self.nvm, oks, submitted = enqueue_scan(
-                self.vol, self.nvm, jnp.asarray(rows), jnp.int32(shard),
-                backend=self.backend)
-            retry, ok_flat, taken, active_waves = fold_enqueue_results(
-                chunk, rows, jax.device_get(oks), jax.device_get(submitted),
-                W)
-            pending = retry + pending[taken:]
-            waves += max(active_waves, 1)
-            # one flushed cell per completed enqueue + the segment-header
-            # line (closed/epoch/base) per active wave
-            self.pwbs[shard] += int(ok_flat.sum()) + active_waves
-            self.ops[shard] += int(ok_flat.sum())
-            self.psyncs[shard] += active_waves
-        assert not pending, "queue full: could not enqueue everything"
-        return waves
-
-    def dequeue_n(self, n, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue until n items obtained or the queue is EMPTY (total
-        active lanes <= remaining per wave, so never over-dequeues)."""
-        if self.driver == "host":
-            return self._dequeue_n_host(n, shard, max_waves)
-        if n <= 0:
-            return [], 0
-        from repro.core import driver as _drv
-        cap = bucket_pow2(n)
-        (self.vol, self.nvm, out, got, rounds, _take, pwbs,
-         ops) = _drv.device_dequeue_n(
-            self.vol, self.nvm, jnp.int32(n), jnp.int32(0),
-            jnp.int32(shard), jnp.int32(max_waves),
-            W=self.device_wave, cap=cap, backend=self.backend)
-        out, got, rounds, pwbs, ops = jax.device_get(
-            (out, got, rounds, pwbs, ops))
-        got = int(got)
-        self.pwbs[shard] += int(pwbs)
-        self.psyncs[shard] += int(rounds)
-        self.ops[shard] += int(ops)
-        return [int(v) for v in out[:got]], int(rounds)
-
-    def _dequeue_n_host(self, n, shard: int = 0, max_waves: int = 10_000):
-        """PR-1 host loop: partitions the remaining demand over up to
-        ``waves_per_call`` waves per device call."""
-        got: List[int] = []
-        waves = 0
-        K, W = self.waves_per_call, self.W
-        while len(got) < n and waves < max_waves:
-            counts = plan_waves(n - len(got), K, W)
-            self.vol, self.nvm, outs = dequeue_scan(
-                self.vol, self.nvm, jnp.asarray(counts), jnp.int32(shard),
-                W, backend=self.backend)
-            outl = np.asarray(jax.device_get(outs))
-            act = np.concatenate([outl[k, :c] for k, c in enumerate(counts)
-                                  if c > 0])
-            items, touched, delivered = fold_dequeue_block(act)
-            got.extend(items)
-            active_waves = int((counts > 0).sum())
-            waves += active_waves
-            # touched cells + the Head-mirror line + the segment-header line
-            # per active wave (a dequeue wave can retire + recycle a row)
-            self.pwbs[shard] += touched + 2 * active_waves
-            self.psyncs[shard] += active_waves
-            self.ops[shard] += delivered
-            if (act == EMPTY_V).all():
-                vol = jax.device_get(self.vol)
-                if state_empty(int(vol.first), int(vol.last),
-                               vol.heads, vol.tails):
-                    break
-        return got, waves
-
-    def backlog(self) -> int:
-        """Live-item upper bound (sum of per-segment Tail - Head; holes from
-        failed enqueue tickets may inflate it, never deflate it)."""
-        heads, tails = jax.device_get((self.vol.heads, self.vol.tails))
-        return int(np.maximum(np.asarray(tails) - np.asarray(heads), 0).sum())
-
-    def drain(self, shard: int = 0, max_waves: int = 10_000):
-        """Dequeue everything.  The demand (and hence the device output
-        buffer, ``bucket_pow2``-quantized) is sized from the live backlog,
-        not the S*R pool capacity; the driver's empty-probe exit handles
-        ticket holes that inflate the backlog estimate."""
-        out, _ = self.dequeue_n(self.backlog(), shard, max_waves)
-        return out
-
-    def crash_and_recover(self):
-        """Clean crash at a wave boundary + recovery (the donation-aliasing
-        rule lives in ``persistence.crash_recover_images``)."""
-        self.vol, self.nvm = crash_recover_images(
-            crash(self.nvm), lambda img: recover(img, backend=self.backend))
-        return self.vol
-
-    def torn_crash_and_recover(self, enq_items=(), deq_lanes: int = 0,
-                               shard: int = 0, seed: int = 0,
-                               crash_point: Optional[int] = None,
-                               evict_rate: float = 0.25):
-        """Crash MID-WAVE: run one wave (``enq_items`` on the enqueue lanes,
-        ``deq_lanes`` active dequeue lanes) over the live state, but let only
-        a prefix of its ordered flush records -- plus a seeded random
-        eviction set -- land before the crash, then recover from the torn
-        image.  The wave's results are DISCARDED (the host never synced
-        them), so its operations are in-flight at the crash: each may or may
-        not have linearized.  Returns the recovered volatile state."""
-        items = np.asarray(list(enq_items), np.int32).reshape(-1)
-        assert items.size <= self.W and deq_lanes <= self.W
-        ev = np.full((self.W,), -1, np.int32)
-        ev[:items.size] = items
-        dm = np.arange(self.W) < deq_lanes
-        _vol, _nvm, _ok, _out, delta = wave_step_delta(
-            self.vol, self.nvm, jnp.asarray(ev), jnp.asarray(dm),
-            jnp.int32(shard), backend=self.backend)
-        mask = torn_mask(jax.random.PRNGKey(seed), delta_records(delta),
-                         point=crash_point, evict_rate=evict_rate)
-        self.vol, self.nvm = crash_recover_images(
-            apply_delta(self.nvm, delta, mask),
-            lambda img: recover(img, backend=self.backend))
-        return self.vol
-
-    def peek_items(self) -> List[int]:
-        """Durably-presentable queue contents in FIFO order (forensics)."""
-        return peek_items(self.vol)
-
-    def persist_stats(self) -> dict:
-        ops = np.maximum(self.ops, 1)
-        return {
-            "pwbs": self.pwbs.copy(), "psyncs": self.psyncs.copy(),
-            "ops": self.ops.copy(),
-            "pwbs_per_op": (self.pwbs / ops),
-            "psyncs_per_op": (self.psyncs / ops),
-        }
+def __getattr__(name):
+    # PEP 562 lazy re-export: the endpoint class moved behind the facade
+    # (repro.api.PersistentQueue); the historical import path keeps working
+    # through the deprecation shim.  Lazy to avoid a circular import (the
+    # api package imports this module's functional core).
+    if name == "WaveQueue":
+        from repro.api.compat import WaveQueue
+        return WaveQueue
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -8,6 +8,11 @@ queues with the vmapped engine.  On a single host this degenerates to the
 plain vmap; on a pod each queue shard lives (and persists) device-local,
 which is exactly the paper's low-contention discipline lifted to the mesh:
 no device ever touches another device's Head/Tail or mirrors.
+
+Folded behind the facade (DESIGN.md §8): ``QueueConfig(placement="mesh")``
+routes ``PersistentQueue.step`` through ``make_sharded_fabric_step`` with
+the negotiated mesh size (``Capabilities.mesh_devices``); callers never
+build the mesh by hand.
 """
 from __future__ import annotations
 

@@ -18,7 +18,7 @@ from typing import Dict, Iterator, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fabric import ShardedWaveQueue
+from repro.api import QueueConfig, as_fault_plan, open_queue
 from repro.core.persistence import crash_recover_images
 
 
@@ -39,8 +39,9 @@ class PersistentDataPipeline:
         self.seq_len = seq_len
         # device-resident driving: produce()/next_batch() cost one device
         # call each, however many wave rounds the batch takes
-        self.queue = ShardedWaveQueue(Q=n_queues, S=S, R=R, P=n_shards, W=W,
-                                      backend=backend, driver=driver)
+        self.queue = open_queue(QueueConfig(
+            Q=n_queues, S=S, R=R, P=n_shards, W=W,
+            backend=backend, driver=driver))
         self.slab = np.zeros((slab_capacity, seq_len + 1), np.int32)
         self.slab_nvm = np.zeros_like(self.slab)
         self.slab_capacity = slab_capacity
@@ -123,10 +124,7 @@ class PersistentDataPipeline:
         mid-wave dequeues) are re-enqueued; samples still durably queued or
         already delivered are not.  The slab's volatile copy rebinds through
         ``crash_recover_images`` (the shared non-aliasing rule)."""
-        if torn is None:
-            self.queue.crash_and_recover()
-        else:
-            self.queue.torn_crash_and_recover(seed=seed, **torn)
+        self.queue.crash(as_fault_plan(torn, seed=seed))
         survivors = set(self.queue.peek_items())
         delivered = set(self.delivered_ids)
         lost = [h for h in self.acked

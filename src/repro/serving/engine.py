@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fabric import ShardedWaveQueue
+from repro.api import QueueConfig, as_fault_plan, open_queue
 from repro.distributed.steps import make_serve_step
 from repro.models.transformer import Model
 
@@ -43,11 +43,12 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # admission queue: the sharded fabric (requests are independent, so
-        # the MultiFIFO relaxation across shards is invisible to clients)
-        self.queue = ShardedWaveQueue(Q=queue_shards, S=8, R=queue_depth,
-                                      W=16, backend=queue_backend,
-                                      driver=queue_driver)
+        # admission queue: the facade handle (requests are independent, so
+        # the MultiFIFO relaxation across internal queues is invisible to
+        # clients -- relax_rank is left unbounded)
+        self.queue = open_queue(QueueConfig(
+            Q=queue_shards, S=8, R=queue_depth, W=16,
+            backend=queue_backend, driver=queue_driver))
         self.requests: Dict[int, Request] = {}
         self._rid = 0
         # decode slots
@@ -168,10 +169,7 @@ class ServingEngine:
         testing) silently loses.  Durable linearizability of the queue plus
         the completion record make admission exactly-once: a completed
         request is never replayed, a surviving one never double-queued."""
-        if torn is None:
-            self.queue.crash_and_recover()
-        else:
-            self.queue.torn_crash_and_recover(seed=seed, **torn)
+        self.queue.crash(as_fault_plan(torn, seed=seed))
         survivors = set(self.queue.peek_items())
         # volatile state reset
         self.caches = None

@@ -1,0 +1,68 @@
+"""Public-API surface guard (CI lint job; DESIGN.md §8).
+
+``repro.api`` is the ONE supported constructor surface.  This test pins its
+``__all__`` to an explicit snapshot and verifies the module exposes nothing
+public beyond it, so the surface cannot grow (or silently shrink) without a
+deliberate snapshot update in the same change -- the review hook for every
+future API decision.
+"""
+import inspect
+
+import repro.api as api
+
+# THE snapshot.  Changing the public surface means changing this list --
+# that is the point: the diff makes the API change explicit and reviewable.
+API_SURFACE = [
+    "Capabilities",
+    "CapabilityError",
+    "FaultPlan",
+    "Maintenance",
+    "PersistentQueue",
+    "QueueConfig",
+    "QueueFull",
+    "QueueState",
+    "RebaseNotQuiescent",
+    "RebaseReport",
+    "SweepResult",
+    "TICKET_HORIZON",
+    "as_fault_plan",
+    "negotiate",
+    "open_queue",
+]
+
+# the module files that implement the package (importing them is fine;
+# they are not part of the guarded name surface)
+_SUBMODULES = {"config", "faults", "maintenance", "queue", "compat"}
+
+
+def test_api_all_matches_snapshot():
+    assert sorted(api.__all__) == sorted(API_SURFACE), (
+        "repro.api.__all__ drifted from the snapshot; if the change is "
+        "deliberate, update tests/test_api_surface.py in the same commit")
+
+
+def test_api_exports_exist_and_are_importable():
+    for name in API_SURFACE:
+        assert hasattr(api, name), f"__all__ names missing symbol: {name}"
+
+
+def test_api_has_no_unlisted_public_names():
+    public = {n for n in dir(api) if not n.startswith("_")}
+    extra = public - set(API_SURFACE) - _SUBMODULES
+    assert not extra, (
+        f"repro.api grew unlisted public names {sorted(extra)}; either "
+        f"underscore them or add them to __all__ AND the snapshot")
+
+
+def test_facade_methods_are_the_documented_surface():
+    """The PersistentQueue method surface is part of the contract too: a
+    new public method must be a deliberate addition."""
+    methods = {n for n, _ in inspect.getmembers(api.PersistentQueue)
+               if not n.startswith("_")}
+    assert methods == {
+        "backlog", "bind", "crash", "crash_and_recover", "dequeue_n",
+        "drain", "enqueue_all", "maintenance", "nvm", "peek_items",
+        "peek_items_per_queue", "persist_stats", "plan_torn_wave", "state",
+        "step", "torn_crash_and_recover", "vol",
+    }, "PersistentQueue public surface drifted; update the snapshot " \
+       "deliberately if so"
