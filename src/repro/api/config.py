@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from repro.core.backend import available_backends
+from repro.core.backend import available_backends, has_fused_fabric_round
 
 #: int32 tickets/bases (the TPU-native width): one row's ticket space holds
 #: this many enqueues before ``maintenance().rebase()`` must run.
@@ -55,6 +55,7 @@ class QueueConfig:
     placement: str = "local"  # "local" (vmap) | "mesh" (shard_map)
     relax_rank: Optional[int] = None  # max overtakes allowed (None = Q-1)
     waves_per_call: int = 8  # host-driver scan depth (K waves per jit call)
+    megakernel: str = "auto"  # fused-fabric round dispatch: on | off | auto
 
     def replace(self, **kw) -> "QueueConfig":
         return dataclasses.replace(self, **kw)
@@ -72,6 +73,7 @@ class Capabilities:
     placement: str
     mesh_devices: int        # devices the step is shard_mapped over (1=local)
     fused_wave: bool         # backend runs the fused live-row wave path
+    fused_fabric_round: bool  # driver rounds run as ONE gridded megakernel
     durable_linearizability: bool  # torn-crash recovery contract (§7)
     detectable_recovery: bool      # crash()/FaultPlan + peek_items surface
     ticket_width: int        # bits per ticket/base
@@ -109,6 +111,15 @@ def negotiate(config: QueueConfig) -> Tuple[QueueConfig, Capabilities]:
             f"placement must be 'local' or 'mesh', got {c.placement!r}")
     if c.relax_rank is not None and c.relax_rank < 0:
         raise CapabilityError(f"relax_rank must be >= 0, got {c.relax_rank}")
+    if c.megakernel not in ("on", "off", "auto"):
+        raise CapabilityError(
+            f"megakernel must be 'on', 'off' or 'auto', got {c.megakernel!r}")
+    fused_round = c.megakernel != "off" and has_fused_fabric_round(c.backend)
+    if c.megakernel == "on" and not fused_round:
+        raise CapabilityError(
+            f"megakernel='on' requires the fused_fabric_round capability,"
+            f" which backend {c.backend!r} does not grant (request 'auto'"
+            " to fall back to the vmapped per-wave dispatch)")
 
     Q = c.Q
     if c.relax_rank is not None and Q - 1 > c.relax_rank:
@@ -128,6 +139,7 @@ def negotiate(config: QueueConfig) -> Tuple[QueueConfig, Capabilities]:
         placement=c.placement,
         mesh_devices=mesh_devices,
         fused_wave=True,   # every registered backend provides fused_wave
+        fused_fabric_round=fused_round,
         durable_linearizability=True,
         detectable_recovery=True,
         ticket_width=32,

@@ -109,6 +109,11 @@ class PersistentQueue:
         # within-wave tickets are lane-ordered, so per-queue FIFO is exact
         # at ANY width <= R (ring-full failures are suffix-shaped)
         self.device_wave = min(self.R, max(self.W, 512))
+        # the negotiated megakernel decision, frozen to a STATIC 'on'/'off'
+        # so every driver/step dispatch below shares one jit cache entry
+        # (capabilities.fused_fabric_round already folded config.megakernel
+        # against the backend's fused_fabric_round grant)
+        self.fused_round = "on" if caps.fused_fabric_round else "off"
         self._vol = fabric_init(self.Q, self.S, self.R, self.P)
         self._nvm = fabric_init(self.Q, self.S, self.R, self.P)
         self._place = 0   # round-robin placement cursor (enqueue side)
@@ -169,7 +174,7 @@ class PersistentQueue:
         else:
             self._vol, self._nvm, ok, out = fabric_step(
                 self._vol, self._nvm, ev, dm, self._shard_arr(shard),
-                backend=self.backend)
+                backend=self.backend, fused_round=self.fused_round)
         return ok, out
 
     @staticmethod
@@ -210,7 +215,8 @@ class PersistentQueue:
         (self._vol, self._nvm, done, rounds, pwbs,
          ops) = _drv.fabric_enqueue_all(
             self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
-            jnp.int32(max_waves), W=self.device_wave, backend=self.backend)
+            jnp.int32(max_waves), W=self.device_wave, backend=self.backend,
+            fused_round=self.fused_round)
         rounds, pwbs, ops = jax.device_get((rounds, pwbs, ops))
         self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
         self.ops[:, shard] += np.asarray(ops, np.int64)
@@ -313,7 +319,8 @@ class PersistentQueue:
          ops) = _drv.fabric_dequeue_n(
             self._vol, self._nvm, jnp.int32(n), jnp.int32(self._take),
             jnp.int32(shard), jnp.int32(max_waves),
-            W=self.device_wave, cap=cap, backend=self.backend)
+            W=self.device_wave, cap=cap, backend=self.backend,
+            fused_round=self.fused_round)
         out, got, rounds, take, pwbs, ops = jax.device_get(
             (out, got, rounds, take, pwbs, ops))
         self._take = int(take)

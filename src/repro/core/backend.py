@@ -27,18 +27,33 @@ Two backends ship:
 Both are registered here; ``get_backend`` resolves a name (or passes an
 already-constructed backend through), so `wave_step(..., backend="pallas")`
 is the whole switch -- no duplicated phase implementations anywhere.
+
+Backends may additionally grant the OPTIONAL ``fused_fabric_round``
+capability (DESIGN.md §3d): one whole driver round over ALL Q shards as a
+single gridded kernel -- lane selection, the half-wave transitions on the
+two live rows, segment advance/recycle, and the fused NVM flush, with the
+shard axis as the kernel grid.  The device drivers and ``fabric_step``
+probe for it via ``resolve_fused_round``; a backend that lacks it (the jnp
+reference) falls back to vmapping ``_wave_step`` over the queue axis --
+bit-identical by construction, since the megakernel body runs the same
+functional round on its per-shard block.
 """
 from __future__ import annotations
 
 from typing import Dict, Protocol, Tuple, Union, runtime_checkable
 
 import jax.numpy as jnp
+import numpy as np
 
-# Sentinels shared by every layer (re-exported by core.wave).
-BOT = jnp.int32(-1)      # empty cell
-EMPTY_V = jnp.int32(-2)  # dequeue found the queue empty at its ticket
-RETRY_V = jnp.int32(-3)  # transition failed; retry next wave
-IDLE_V = jnp.int32(-4)   # inactive lane
+# Sentinels shared by every layer (re-exported by core.wave).  numpy (not
+# jnp) scalars: device-array constants captured inside a Pallas kernel body
+# fail closure conversion (the megakernel runs _wave_step in-kernel), while
+# np scalars fold to jaxpr literals; arithmetic/comparison semantics are
+# identical.
+BOT = np.int32(-1)      # empty cell
+EMPTY_V = np.int32(-2)  # dequeue found the queue empty at its ticket
+RETRY_V = np.int32(-3)  # transition failed; retry next wave
+IDLE_V = np.int32(-4)   # inactive lane
 
 
 @runtime_checkable
@@ -139,6 +154,15 @@ def _deq_predicates(cv, ci, tickets, active):
     return deq_tr | empty_tr, unsafe_tr, deq_out
 
 
+def _set_prefix(a, w: int, v):
+    """``a.at[:w].set(v)`` with a static full-length fast path.  When w ==
+    len(a) the at-set lowers to a scatter carrying a CONSTANT empty index
+    array, which Pallas closure conversion rejects when the expression runs
+    inside the megakernel body (and the drivers do run W == R waves:
+    device_wave = min(R, ...)); a whole-array set is just the new value."""
+    return v if w == a.shape[0] else a.at[:w].set(v)
+
+
 def _enq_transition(vals, idxs, safes, head, enq_tickets, enq_vals,
                     enq_active):
     """Enqueue transitions against one ring row; shared by ``transition``
@@ -215,18 +239,18 @@ class JnpBackend:
             rs = jnp.roll(safes_L, -be)
             enq_ok = _enq_predicate(rv[:W], ri[:W], rs[:W], t, enq_active,
                                     head_L)
-            rv = rv.at[:W].set(jnp.where(enq_ok, enq_vals, rv[:W]))
-            ri = ri.at[:W].set(jnp.where(enq_ok, t, ri[:W]))
-            rs = rs.at[:W].set(jnp.where(enq_ok, True, rs[:W]))
+            rv = _set_prefix(rv, W, jnp.where(enq_ok, enq_vals, rv[:W]))
+            ri = _set_prefix(ri, W, jnp.where(enq_ok, t, ri[:W]))
+            rs = _set_prefix(rs, W, jnp.where(enq_ok, True, rs[:W]))
             if not do_deq:
                 # half-wave hot path (the enqueue driver): flush straight
                 # from the live rolled rows -- one roll round-trip per array
                 nrv = jnp.roll(nvals_L, -be)
                 nri = jnp.roll(nidxs_L, -be)
                 nrs = jnp.roll(nsafes_L, -be)
-                nrv = nrv.at[:W].set(jnp.where(enq_ok, rv[:W], nrv[:W]))
-                nri = nri.at[:W].set(jnp.where(enq_ok, ri[:W], nri[:W]))
-                nrs = nrs.at[:W].set(jnp.where(enq_ok, rs[:W], nrs[:W]))
+                nrv = _set_prefix(nrv, W, jnp.where(enq_ok, rv[:W], nrv[:W]))
+                nri = _set_prefix(nri, W, jnp.where(enq_ok, ri[:W], nri[:W]))
+                nrs = _set_prefix(nrs, W, jnp.where(enq_ok, rs[:W], nrs[:W]))
                 return (jnp.roll(rv, be), jnp.roll(ri, be), jnp.roll(rs, be),
                         vals_F, idxs_F, safes_F,
                         jnp.roll(nrv, be), jnp.roll(nri, be),
@@ -246,9 +270,9 @@ class JnpBackend:
             rs = jnp.roll(safes_F, -bd)
             adv, unsafe_tr, deq_out = _deq_predicates(rv[:W], ri[:W], t,
                                                       deq_active)
-            rv = rv.at[:W].set(jnp.where(adv, BOT, rv[:W]))
-            ri = ri.at[:W].set(jnp.where(adv, t + R, ri[:W]))
-            rs = rs.at[:W].set(jnp.where(unsafe_tr, False, rs[:W]))
+            rv = _set_prefix(rv, W, jnp.where(adv, BOT, rv[:W]))
+            ri = _set_prefix(ri, W, jnp.where(adv, t + R, ri[:W]))
+            rs = _set_prefix(rs, W, jnp.where(unsafe_tr, False, rs[:W]))
             touched = deq_out != IDLE_V
             if not do_enq:
                 # half-wave hot path (the dequeue driver): flush straight
@@ -256,9 +280,9 @@ class JnpBackend:
                 nrv = jnp.roll(nvals_F, -bd)
                 nri = jnp.roll(nidxs_F, -bd)
                 nrs = jnp.roll(nsafes_F, -bd)
-                nrv = nrv.at[:W].set(jnp.where(touched, rv[:W], nrv[:W]))
-                nri = nri.at[:W].set(jnp.where(touched, ri[:W], nri[:W]))
-                nrs = nrs.at[:W].set(jnp.where(touched, rs[:W], nrs[:W]))
+                nrv = _set_prefix(nrv, W, jnp.where(touched, rv[:W], nrv[:W]))
+                nri = _set_prefix(nri, W, jnp.where(touched, ri[:W], nri[:W]))
+                nrs = _set_prefix(nrs, W, jnp.where(touched, rs[:W], nrs[:W]))
                 vals_F = jnp.roll(rv, bd)
                 idxs_F = jnp.roll(ri, bd)
                 safes_F = jnp.roll(rs, bd)
@@ -289,9 +313,9 @@ class JnpBackend:
             nrv = jnp.roll(nvals_L, -be)
             nri = jnp.roll(nidxs_L, -be)
             nrs = jnp.roll(nsafes_L, -be)
-            nrv = nrv.at[:W].set(jnp.where(enq_ok, fv, nrv[:W]))
-            nri = nri.at[:W].set(jnp.where(enq_ok, fi, nri[:W]))
-            nrs = nrs.at[:W].set(jnp.where(enq_ok, fs, nrs[:W]))
+            nrv = _set_prefix(nrv, W, jnp.where(enq_ok, fv, nrv[:W]))
+            nri = _set_prefix(nri, W, jnp.where(enq_ok, fi, nri[:W]))
+            nrs = _set_prefix(nrs, W, jnp.where(enq_ok, fs, nrs[:W]))
             nvals_L = jnp.roll(nrv, be)
             nidxs_L = jnp.roll(nri, be)
             nsafes_L = jnp.roll(nrs, be)
@@ -305,9 +329,9 @@ class JnpBackend:
             nrv = jnp.roll(nvals_F, -bd)
             nri = jnp.roll(nidxs_F, -bd)
             nrs = jnp.roll(nsafes_F, -bd)
-            nrv = nrv.at[:W].set(jnp.where(touched, fv, nrv[:W]))
-            nri = nri.at[:W].set(jnp.where(touched, fi, nri[:W]))
-            nrs = nrs.at[:W].set(jnp.where(touched, fs, nrs[:W]))
+            nrv = _set_prefix(nrv, W, jnp.where(touched, fv, nrv[:W]))
+            nri = _set_prefix(nri, W, jnp.where(touched, fi, nri[:W]))
+            nrs = _set_prefix(nrs, W, jnp.where(touched, fs, nrs[:W]))
             nvals_F = jnp.roll(nrv, bd)
             nidxs_F = jnp.roll(nri, bd)
             nsafes_F = jnp.roll(nrs, bd)
@@ -449,6 +473,28 @@ class PallasBackend:
         from repro.kernels import ops as kops
         return kops.percrq_recovery_scan(vals, idxs, head0)
 
+    def fused_fabric_round(self, vol, nvm, shard, *, phase: str, W: int,
+                           items=None, done=None, remaining=None, take=None,
+                           enq_vals=None, deq_mask=None):
+        """One whole driver round over all Q shards as ONE gridded kernel
+        (kernels/fabric_fused.py; DESIGN.md §3d).  ``phase`` is STATIC:
+
+          * ``"enq"``  -- in-kernel lane selection over (items, done) + the
+                          enqueue-only half-wave.  Returns
+                          (vol', nvm', ev[Q, W], idx[Q, W], ok[Q, W] bool).
+          * ``"deq"``  -- in-kernel work-stealing plan from the backlog
+                          snapshot + the dequeue-only half-wave.  Returns
+                          (vol', nvm', outw[Q, W], counts[Q], probe bool).
+          * ``"wave"`` -- one general fused wave (the ``fabric_step`` body).
+                          Returns (vol', nvm', enq_ok[Q, W] bool,
+                          deq_out[Q, W]).
+        """
+        from repro.kernels import ops as kops
+        return kops.fabric_fused_round(
+            vol, nvm, shard, phase=phase, W=W, items=items, done=done,
+            remaining=remaining, take=take, enq_vals=enq_vals,
+            deq_mask=deq_mask)
+
 
 _REGISTRY: Dict[str, QueueBackend] = {}
 
@@ -475,6 +521,32 @@ def get_backend(backend: BackendLike = "jnp") -> QueueBackend:
         raise KeyError(
             f"unknown queue backend {backend!r}; "
             f"registered: {available_backends()}") from None
+
+
+def has_fused_fabric_round(backend: BackendLike) -> bool:
+    """True iff the backend grants the optional ``fused_fabric_round``
+    (megakernel) capability."""
+    return callable(getattr(get_backend(backend), "fused_fabric_round", None))
+
+
+def resolve_fused_round(mode: str, backend: BackendLike) -> bool:
+    """Resolve a ``--megakernel``-style mode against a backend's capability
+    set: ``"auto"`` grants the megakernel iff the backend implements it,
+    ``"off"`` always takes the vmapped per-wave path, ``"on"`` demands the
+    capability (raising if the backend lacks it, rather than silently
+    degrading an explicit request)."""
+    if mode not in ("on", "off", "auto"):
+        raise ValueError(
+            f"megakernel mode must be 'on', 'off' or 'auto'; got {mode!r}")
+    if mode == "off":
+        return False
+    has = has_fused_fabric_round(backend)
+    if mode == "on" and not has:
+        raise ValueError(
+            f"megakernel mode 'on' requires the fused_fabric_round "
+            f"capability, which backend "
+            f"{get_backend(backend).name!r} does not grant")
+    return has
 
 
 register_backend("jnp", JnpBackend())

@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backend import (EMPTY_V, IDLE_V, BackendLike, QueueBackend,
-                                get_backend)
+                                get_backend, resolve_fused_round)
 from repro.core.wave import WaveState, _wave_step
 
 
@@ -83,9 +83,15 @@ def _select_rows(items: jnp.ndarray, done: jnp.ndarray, W: int):
 
 
 def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
-                      b: QueueBackend):
+                      b: QueueBackend, fused: bool = False):
     """items: [Q, N] int32 (-1 = padding).  Returns
     (vol, nvm, done[Q, N], rounds, pwbs[Q], ops[Q]).
+
+    ``fused`` (STATIC) routes the round body through the backend's
+    ``fused_fabric_round`` megakernel -- selection + half-wave as ONE
+    gridded kernel launch over the shard axis (DESIGN.md §3d) -- instead of
+    vmapping a per-shard selection + ``_wave_step``; done-marking and
+    accounting below are shared, and the two paths are bit-identical.
 
     Accounting follows the ordered-record flush (``persistence.WaveDelta``):
     ops = completed enqueues; pwbs = one flushed cell per completed enqueue
@@ -105,18 +111,36 @@ def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
 
     def body(c):
         vol, nvm, done, rounds, pwbs, ops = c
-        ev, idx = jax.vmap(_select_rows, in_axes=(0, 0, None))(items, done, W)
-        # enqueue-only half-wave; lanes are prefix-active (the selection
-        # fills lanes 0..k-1), so the windowed fast path applies
-        vol, nvm, ok, _ = jax.vmap(
-            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
-                                          do_enq=True, do_deq=False,
-                                          prefix_lanes=True)
-        )(vol, nvm, ev, dm)
-        # mark the items whose lanes succeeded (W updates, not N gathers)
-        hit = jnp.where(ok & (ev >= 0), idx, N)
-        done = jax.vmap(
-            lambda d, h: d.at[h].set(True, mode="drop"))(done, hit)
+        if fused:
+            # one gridded kernel launch runs every shard's selection +
+            # enqueue-only half-wave (megakernel, DESIGN.md §3d)
+            vol, nvm, ev, idx, ok = b.fused_fabric_round(
+                vol, nvm, shard, phase="enq", W=W, items=items, done=done)
+            # mark succeeded items by rank-gather: item at position p holds
+            # selection rank r = #undone before it, and _select_rows pins
+            # lane r to exactly that item, so done[p] |= ok[rank[p]].  The
+            # batched [Q, N] gather stays vectorized where the equivalent
+            # per-queue scatter scalarizes ~3x at Q=4 (bit-identical).
+            und = (~done).astype(jnp.int32)
+            rank = jnp.cumsum(und, axis=1) - und
+            sel = (~done) & (rank < W)
+            okm = ok & (ev >= 0)
+            done = done | (sel & jnp.take_along_axis(
+                okm, jnp.minimum(rank, W - 1), axis=1))
+        else:
+            ev, idx = jax.vmap(_select_rows,
+                               in_axes=(0, 0, None))(items, done, W)
+            # enqueue-only half-wave; lanes are prefix-active (the selection
+            # fills lanes 0..k-1), so the windowed fast path applies
+            vol, nvm, ok, _ = jax.vmap(
+                lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                              do_enq=True, do_deq=False,
+                                              prefix_lanes=True)
+            )(vol, nvm, ev, dm)
+            # mark the items whose lanes succeeded (W updates, not N gathers)
+            hit = jnp.where(ok & (ev >= 0), idx, N)
+            done = jax.vmap(
+                lambda d, h: d.at[h].set(True, mode="drop"))(done, hit)
         ok_cnt = jnp.sum(ok & (ev >= 0), axis=1, dtype=jnp.int32)
         pwbs = pwbs + ok_cnt + jnp.any(ev >= 0, axis=1)
         ops = ops + ok_cnt
@@ -127,25 +151,31 @@ def _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W: int,
     return jax.lax.while_loop(cond, body, init)
 
 
-@functools.partial(jax.jit, static_argnames=("W", "backend"),
+@functools.partial(jax.jit, static_argnames=("W", "backend", "fused_round"),
                    donate_argnums=(0, 1))
 def fabric_enqueue_all(vol, nvm, items, shard, max_rounds,
-                       W: int, backend: BackendLike = "jnp"):
+                       W: int, backend: BackendLike = "jnp",
+                       fused_round: str = "auto"):
     """Fabric entry point: items [Q, N] already placed across queues.
-    Returns (vol, nvm, done[Q, N], rounds, pwbs[Q], ops[Q])."""
-    return _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W,
-                             get_backend(backend))
+    ``fused_round`` ('on'/'off'/'auto', STATIC) selects the megakernel
+    round body when the backend grants ``fused_fabric_round``.  Returns
+    (vol, nvm, done[Q, N], rounds, pwbs[Q], ops[Q])."""
+    b = get_backend(backend)
+    return _enqueue_all_impl(vol, nvm, items, shard, max_rounds, W, b,
+                             fused=resolve_fused_round(fused_round, b))
 
 
-@functools.partial(jax.jit, static_argnames=("W", "backend"),
+@functools.partial(jax.jit, static_argnames=("W", "backend", "fused_round"),
                    donate_argnums=(0, 1))
 def device_enqueue_all(vol, nvm, items, shard, max_rounds,
-                       W: int, backend: BackendLike = "jnp"):
+                       W: int, backend: BackendLike = "jnp",
+                       fused_round: str = "auto"):
     """Single-queue entry point: items [N].  Returns
     (vol, nvm, done[N], rounds, pwbs, ops)."""
+    b = get_backend(backend)
     vol, nvm, done, rounds, pwbs, ops = _enqueue_all_impl(
         _stack1(vol), _stack1(nvm), items[None], shard, max_rounds, W,
-        get_backend(backend))
+        b, fused=resolve_fused_round(fused_round, b))
     return _unstack1(vol), _unstack1(nvm), done[0], rounds, pwbs[0], ops[0]
 
 
@@ -154,13 +184,15 @@ def device_enqueue_all(vol, nvm, items, shard, max_rounds,
 # ---------------------------------------------------------------------------
 
 
-def _plan_round(vol, remaining, take, W: int):
-    """One round's per-queue lane counts from the live backlog snapshot:
-    proportional share of ``remaining`` over min(backlog, W), greedy
-    rotation top-up, 1-lane probes when every backlog reads zero.
-    Returns (counts[Q] int32, probe bool)."""
-    Q = vol.tails.shape[0]
-    bl = jnp.sum(jnp.maximum(vol.tails - vol.heads, 0), axis=1)  # [Q]
+def _plan_round(tails, heads, remaining, take, W: int):
+    """One round's per-queue lane counts from the live backlog snapshot
+    (tails/heads: [Q, S]): proportional share of ``remaining`` over
+    min(backlog, W), greedy rotation top-up, 1-lane probes when every
+    backlog reads zero.  Takes the raw snapshot arrays (not the WaveState)
+    so the megakernel grid programs can replicate the exact plan from the
+    [Q, S] block they are handed.  Returns (counts[Q] int32, probe bool)."""
+    Q = tails.shape[0]
+    bl = jnp.sum(jnp.maximum(tails - heads, 0), axis=1)  # [Q]
     probe = jnp.sum(bl) == 0
     want = jnp.where(probe, jnp.int32(1),
                      jnp.minimum(bl, W).astype(jnp.int32))
@@ -178,8 +210,13 @@ def _plan_round(vol, remaining, take, W: int):
 
 
 def _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W: int, cap: int,
-                    b: QueueBackend):
-    """Returns (vol, nvm, out[cap], got, rounds, take, pwbs[Q], ops[Q])."""
+                    b: QueueBackend, fused: bool = False):
+    """Returns (vol, nvm, out[cap], got, rounds, take, pwbs[Q], ops[Q]).
+
+    ``fused`` (STATIC) routes the round body through the backend's
+    ``fused_fabric_round`` megakernel (plan + half-wave as one gridded
+    launch); compaction and accounting below are shared between the paths
+    and bit-identical."""
     Q = vol.tails.shape[0]
     lane = jnp.arange(W, dtype=jnp.int32)
     ev = jnp.full((Q, W), -1, jnp.int32)
@@ -190,21 +227,45 @@ def _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W: int, cap: int,
 
     def body(c):
         vol, nvm, out, got, rounds, take, pwbs, ops, _ = c
-        counts, probe = _plan_round(vol, n - got, take, W)
-        dmv = lane[None, :] < counts[:, None]
-        # dequeue-only half-wave; lanes are prefix-active (lane < count)
-        vol, nvm, _, outw = jax.vmap(
-            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
-                                          do_enq=False, do_deq=True,
-                                          prefix_lanes=True)
-        )(vol, nvm, ev, dmv)
+        if fused:
+            vol, nvm, outw, counts, probe = b.fused_fabric_round(
+                vol, nvm, shard, phase="deq", W=W,
+                remaining=n - got, take=take)
+            dmv = lane[None, :] < counts[:, None]
+        else:
+            counts, probe = _plan_round(vol.tails, vol.heads, n - got, take,
+                                        W)
+            dmv = lane[None, :] < counts[:, None]
+            # dequeue-only half-wave; lanes are prefix-active (lane < count)
+            vol, nvm, _, outw = jax.vmap(
+                lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                              do_enq=False, do_deq=True,
+                                              prefix_lanes=True)
+            )(vol, nvm, ev, dmv)
         # round-robin service order: rotate queues, lanes stay in order
         order = (take + jnp.arange(Q, dtype=jnp.int32)) % Q
         flat = jnp.take(outw, order, axis=0).reshape(-1)
         fmask = (flat >= 0) & jnp.take(dmv, order, axis=0).reshape(-1)
-        pos = jnp.cumsum(fmask.astype(jnp.int32)) - fmask
-        out = out.at[jnp.where(fmask, got + pos, cap)].set(flat, mode="drop")
-        got = got + jnp.sum(fmask, dtype=jnp.int32)
+        if fused:
+            # compaction as a monotonic gather + ONE contiguous write: slot
+            # k of this round's block takes the k-th delivered lane (binary
+            # search over the inclusive delivered-count prefix sum), then
+            # the whole [Q*W] block lands at ``got`` in a dynamic slice into
+            # the Q*W-padded buffer.  Invalid tail slots write -1, matching
+            # the untouched-buffer sentinel, so the result is bit-identical
+            # to the scatter below at ~half its Q=4 cost.
+            csum = jnp.cumsum(fmask.astype(jnp.int32))
+            g = csum[-1]
+            k = jnp.arange(Q * W, dtype=jnp.int32)
+            src = jnp.searchsorted(csum, k + 1, side="left").astype(jnp.int32)
+            block = jnp.where(k < g, flat[jnp.minimum(src, Q * W - 1)], -1)
+            out = jax.lax.dynamic_update_slice(out, block, (got,))
+            got = got + g
+        else:
+            pos = jnp.cumsum(fmask.astype(jnp.int32)) - fmask
+            out = out.at[jnp.where(fmask, got + pos, cap)].set(
+                flat, mode="drop")
+            got = got + jnp.sum(fmask, dtype=jnp.int32)
         # persist accounting: touched cells + the Head-mirror line + the
         # segment-header line per active queue (a dequeue wave can retire a
         # drained segment and recycle it -- closed/epoch/base flush); the
@@ -221,32 +282,43 @@ def _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W: int, cap: int,
         return (vol, nvm, out, got, rounds + 1, (take + 1) % Q, pwbs, ops,
                 gave_up)
 
-    init = (vol, nvm, jnp.full((cap,), -1, jnp.int32), jnp.int32(0),
+    # the fused compaction writes whole [Q*W] blocks at ``got`` (got <= n <=
+    # cap while the loop runs), so its buffer carries a Q*W scratch tail
+    pad = Q * W if fused else 0
+    init = (vol, nvm, jnp.full((cap + pad,), -1, jnp.int32), jnp.int32(0),
             jnp.int32(0), take0, jnp.zeros((Q,), jnp.int32),
             jnp.zeros((Q,), jnp.int32), jnp.bool_(False))
     (vol, nvm, out, got, rounds, take, pwbs, ops,
      _) = jax.lax.while_loop(cond, body, init)
-    return vol, nvm, out, got, rounds, take, pwbs, ops
+    return vol, nvm, out[:cap], got, rounds, take, pwbs, ops
 
 
-@functools.partial(jax.jit, static_argnames=("W", "cap", "backend"),
+@functools.partial(jax.jit,
+                   static_argnames=("W", "cap", "backend", "fused_round"),
                    donate_argnums=(0, 1))
 def fabric_dequeue_n(vol, nvm, n, take0, shard, max_rounds,
-                     W: int, cap: int, backend: BackendLike = "jnp"):
+                     W: int, cap: int, backend: BackendLike = "jnp",
+                     fused_round: str = "auto"):
     """Fabric entry point.  ``cap`` (static) bounds the output buffer; the
-    caller quantizes it so the jit cache sees O(log n) shapes."""
+    caller quantizes it so the jit cache sees O(log n) shapes.
+    ``fused_round`` ('on'/'off'/'auto', STATIC) selects the megakernel
+    round body when the backend grants ``fused_fabric_round``."""
+    b = get_backend(backend)
     return _dequeue_n_impl(vol, nvm, n, take0, shard, max_rounds, W, cap,
-                           get_backend(backend))
+                           b, fused=resolve_fused_round(fused_round, b))
 
 
-@functools.partial(jax.jit, static_argnames=("W", "cap", "backend"),
+@functools.partial(jax.jit,
+                   static_argnames=("W", "cap", "backend", "fused_round"),
                    donate_argnums=(0, 1))
 def device_dequeue_n(vol, nvm, n, take0, shard, max_rounds,
-                     W: int, cap: int, backend: BackendLike = "jnp"):
+                     W: int, cap: int, backend: BackendLike = "jnp",
+                     fused_round: str = "auto"):
     """Single-queue entry point.  Returns
     (vol, nvm, out[cap], got, rounds, take, pwbs, ops)."""
+    b = get_backend(backend)
     vol, nvm, out, got, rounds, take, pwbs, ops = _dequeue_n_impl(
         _stack1(vol), _stack1(nvm), n, take0, shard, max_rounds, W, cap,
-        get_backend(backend))
+        b, fused=resolve_fused_round(fused_round, b))
     return (_unstack1(vol), _unstack1(nvm), out, got, rounds, take,
             pwbs[0], ops[0])

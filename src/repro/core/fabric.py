@@ -2,9 +2,13 @@
 
 The BlockFIFO/MultiFIFO scaling move (Sanders & Williams) applied to the
 paper's persistent queue: throughput scales by running Q independent
-``WaveState`` pairs as ONE stacked pytree, with ``wave_step`` vmapped over
-the queue axis (and shard_map-able over a device mesh --
-repro.distributed.fabric_map).  Each internal queue keeps the paper's full
+``WaveState`` pairs as ONE stacked pytree.  On backends that grant the
+``fused_fabric_round`` capability the whole Q-wide wave runs as ONE gridded
+megakernel (kernels/fabric_fused.py, DESIGN.md §3d -- one launch per round,
+shards as grid programs); otherwise ``wave_step`` is vmapped over the queue
+axis (and shard_map-able over a device mesh -- repro.distributed.fabric_map)
+-- the two dispatches are bit-identical.  Each internal queue keeps the
+paper's full
 persistence discipline -- per-shard Head mirrors, cell-only flushes, never
 the global Head/Tail -- so ``fabric_recover`` is one vectorized recovery
 scan across all shards, and ``fabric_crash_sweep`` vmaps hundreds of torn
@@ -30,7 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import BackendLike, get_backend
+from repro.core.backend import BackendLike, get_backend, resolve_fused_round
 from repro.core.persistence import apply_delta, delta_records, torn_masks
 from repro.core.wave import (WaveState, _dequeue_scan_impl,
                              _enqueue_scan_impl, _recover_impl, _wave_step,
@@ -45,15 +49,22 @@ def fabric_init(Q: int, S: int, R: int, P: int = 1) -> WaveState:
         one)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",),
+@functools.partial(jax.jit, static_argnames=("backend", "fused_round"),
                    donate_argnums=(0, 1))
 def fabric_step(vol, nvm, enq_vals, deq_mask, shard,
-                backend: BackendLike = "jnp"):
+                backend: BackendLike = "jnp", fused_round: str = "auto"):
     """One fused wave across all Q queues: enq_vals [Q, W], deq_mask [Q, W],
     shard scalar (the consumer shard driving this wave).  ``vol``/``nvm``
-    are DONATED (rebind them to the returned states).  Returns
+    are DONATED (rebind them to the returned states).  ``fused_round``
+    ('on'/'off'/'auto', STATIC) dispatches the Q-wide wave through the
+    backend's ``fused_fabric_round`` megakernel when granted -- one gridded
+    launch instead of Q vmapped per-wave kernels, bit-identical.  Returns
     (vol', nvm', enq_ok[Q, W], deq_out[Q, W])."""
     b = get_backend(backend)
+    if resolve_fused_round(fused_round, b):
+        return b.fused_fabric_round(vol, nvm, shard, phase="wave",
+                                    W=enq_vals.shape[1],
+                                    enq_vals=enq_vals, deq_mask=deq_mask)
     return jax.vmap(
         lambda v, n, e, d: _wave_step(v, n, e, d, shard, b)
     )(vol, nvm, enq_vals, deq_mask)

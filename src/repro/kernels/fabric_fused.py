@@ -1,0 +1,349 @@
+"""``fabric_fused_round`` -- the fused-fabric MEGAKERNEL (DESIGN.md §3d).
+
+One whole driver round over ALL Q shards as a single Pallas program.  The
+per-wave kernel (``wave_fused.py``) fused the cell pipeline of ONE queue's
+wave; the driver loops still dispatched it Q times per round under a
+``vmap`` -- per-wave kernel dispatch overhead grew with Q instead of
+amortizing, which is exactly the serial bottleneck BlockFIFO-style sharding
+is supposed to remove.  This kernel grids the round over the shard axis
+instead: grid program g owns a block of ``q_block`` consecutive shards and
+executes their ENTIRE round -- lane selection (``_select_rows`` /
+``_plan_round``), the W enqueue + W dequeue transitions on the two live
+rows, segment advance/recycle progress, and the fused NVM cell flush --
+against per-shard blocks dynamically sliced out of the Q-stacked [Q, S, R]
+pool, so a driver round costs ONE kernel launch however many shards run.
+
+``q_block`` picks the grid decomposition: 1 on a real TPU (one shard per
+grid program, programs run on parallel cores / pipeline over the grid), Q
+in interpret mode (grid programs serialize on CPU, so the block axis is
+vmapped inside the body and the host vector units do the shard
+parallelism).  Both decompositions run the SAME body and are parity-tested
+against each other and against the vmapped per-wave path.
+
+The body reconstructs the block's WaveState VALUES from the refs and runs
+the exact functional round code of ``core/wave._wave_step`` (with the jnp
+value-level backend) + ``core/driver``'s selection/planning helpers --
+bit-identical to the vmapped fallback by construction, so ``WaveDelta``
+emission, persist accounting, recycling epochs/bases and
+``check_wave_crash`` semantics are untouched.  Three STATIC phases mirror
+the three dispatch sites:
+
+  * ``"enq"``  -- the ``_enqueue_all_impl`` round body: in-kernel selection
+                  of the first W remaining items per shard, enqueue-only
+                  half-wave (prefix lanes).  Extra outputs (ev, idx, ok) let
+                  the driver keep its done-marking + accounting verbatim.
+  * ``"deq"``  -- the ``_dequeue_n_impl`` round body: every program
+                  replicates the Q-wide work-stealing plan from the full
+                  backlog snapshot (tiny [Q, S] reduction; cross-shard by
+                  nature) and takes its own shards' lane counts, then runs
+                  the dequeue-only half-wave.  Extra outputs (outw, counts,
+                  probe) feed the driver's compaction + accounting.
+  * ``"wave"`` -- the general ``fabric_step`` body: one full fused wave
+                  (enq + deq, arbitrary lane masks) per shard.
+
+SMEM holds the cross-program scalars (consumer shard, remaining demand,
+rotation cursor); everything per-shard rides in VMEM blocks.  VMEM budget
+per grid program: q_block * (6 int32 [S, R] pool blocks + the [S]/[P]
+metadata + 7 wave arrays of W) -- at q_block=1, S=8, R=8192, W=512 that is
+6*8*8192*4B ~= 1.5MB + ~15KB, comfortably inside a TPU core's ~16MB VMEM
+(the per-wave kernel's 12-rows-of-R budget bounded the same pool from
+below; the megakernel trades S/2 extra resident rows for zero per-wave
+dispatch).  Interpret mode keeps the same program runnable on CPU CI.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.backend import (BOT, IDLE_V, JnpBackend, _deq_predicates,
+                                _enq_predicate)
+from repro.core.driver import _plan_round, _select_rows
+from repro.core.wave import WaveState, _wave_step
+
+
+class _SlotWindowBackend(JnpBackend):
+    """JnpBackend whose prefix HALF-waves run in SLOT space.
+
+    The roll+window formulation (``JnpBackend._fused_wave_prefix``) moves
+    every live row through two R-length rolls per array -- 12 full-row
+    gathers per half-wave.  Under the megakernel's in-body vmap over the
+    shard block those rolls become batched gathers with per-shard traced
+    shifts, which the CPU scalarizes: per-round cost grew ~3x from Q=1 to
+    Q=4 and ate the round-count win.  This formulation flips the mapping:
+    instead of rolling the rows into lane space, evaluate the transition
+    predicates at every ring SLOT -- for a prefix-active wave the inverse
+    map is affine (``lane_of_slot = (slot - base) % R``, ticket ``base +
+    lane_of_slot``), so the cell updates and the NVM flush become pure
+    elementwise selects on the un-rolled rows, plus ONE W-from-R gather for
+    the input values and ONE R-from-W gather back to lane order for the
+    outputs.  Same predicates (``_enq_predicate`` / ``_deq_predicates``),
+    same cells touched, bit-identical results -- the megakernel parity
+    tests hold it to the vmapped roll path on both backends.
+
+    Only the enqueue-only / dequeue-only prefix waves (the driver rounds,
+    i.e. everything the megakernel dispatches) take this path; full waves
+    and arbitrary lane masks fall back to the general formulation."""
+
+    name = "jnp-slotwin"
+
+    def fused_wave(self, vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                   nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                   head_L, same_seg,
+                   enq_tickets, enq_vals, enq_active,
+                   deq_tickets, deq_active,
+                   do_enq: bool = True, do_deq: bool = True,
+                   prefix_lanes: bool = False):
+        if not prefix_lanes or (do_enq and do_deq):
+            return super().fused_wave(
+                vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
+                nvals_L, nidxs_L, nsafes_L, nvals_F, nidxs_F, nsafes_F,
+                head_L, same_seg, enq_tickets, enq_vals, enq_active,
+                deq_tickets, deq_active, do_enq=do_enq, do_deq=do_deq,
+                prefix_lanes=prefix_lanes)
+        R = vals_L.shape[0]
+        W = enq_tickets.shape[0]
+        u = jnp.arange(R, dtype=jnp.int32)
+        w = jnp.arange(W, dtype=jnp.int32)
+        if do_enq:
+            be = enq_tickets[0]          # lane 0's ticket == the Tail base
+            lane_of_slot = (u - be) % R  # affine inverse of slot = t % R
+            in_win = lane_of_slot < W
+            t_slot = be + lane_of_slot
+            k = jnp.sum(enq_active.astype(jnp.int32))  # active lanes 0..k-1
+            act = in_win & (lane_of_slot < k)
+            ok_s = _enq_predicate(vals_L, idxs_L, safes_L, t_slot, act,
+                                  head_L)
+            ev_s = enq_vals[jnp.where(in_win, lane_of_slot, 0)]
+            vals2 = jnp.where(ok_s, ev_s, vals_L)
+            idxs2 = jnp.where(ok_s, t_slot, idxs_L)
+            safes2 = jnp.where(ok_s, True, safes_L)
+            enq_ok = ok_s[(be + w) % R]
+            # flush exactly the touched cells (the pwb analog)
+            return (vals2, idxs2, safes2, vals_F, idxs_F, safes_F,
+                    jnp.where(ok_s, vals2, nvals_L),
+                    jnp.where(ok_s, idxs2, nidxs_L),
+                    jnp.where(ok_s, safes2, nsafes_L),
+                    nvals_F, nidxs_F, nsafes_F,
+                    enq_ok, jnp.full((W,), IDLE_V, jnp.int32))
+        # dequeue-only half-wave (same_seg needs no seeding: when L == F the
+        # caller passed the SAME row as both inputs, and do_enq is False so
+        # the L image is untouched; fold the F results back into L exactly
+        # like the roll path's early return)
+        bd = deq_tickets[0]              # lane 0's ticket == the Head base
+        lane_of_slot = (u - bd) % R
+        in_win = lane_of_slot < W
+        t_slot = bd + lane_of_slot
+        k = jnp.sum(deq_active.astype(jnp.int32))
+        act = in_win & (lane_of_slot < k)
+        adv_s, unsafe_s, dout_s = _deq_predicates(vals_F, idxs_F, t_slot,
+                                                  act)
+        vals2 = jnp.where(adv_s, BOT, vals_F)
+        idxs2 = jnp.where(adv_s, t_slot + R, idxs_F)
+        safes2 = jnp.where(unsafe_s, False, safes_F)
+        touched = dout_s != IDLE_V
+        nvals2 = jnp.where(touched, vals2, nvals_F)
+        nidxs2 = jnp.where(touched, idxs2, nidxs_F)
+        nsafes2 = jnp.where(touched, safes2, nsafes_F)
+        deq_out = dout_s[(bd + w) % R]
+        return (jnp.where(same_seg, vals2, vals_L),
+                jnp.where(same_seg, idxs2, idxs_L),
+                jnp.where(same_seg, safes2, safes_L),
+                vals2, idxs2, safes2,
+                jnp.where(same_seg, nvals2, nvals_L),
+                jnp.where(same_seg, nidxs2, nidxs_L),
+                jnp.where(same_seg, nsafes2, nsafes_L),
+                nvals2, nidxs2, nsafes2,
+                jnp.zeros((W,), bool), deq_out)
+
+
+# The value-level backend the kernel body runs on the block's state values;
+# identical transitions to the vmapped fallback path (the slot-space prefix
+# formulation above is held bit-identical by the parity tests).
+_VALUE_BACKEND = _SlotWindowBackend()
+
+
+def _read_states(refs):
+    """Rebuild the block's (vol, nvm) WaveState VALUES from the 18 input
+    refs.  The nvm image only ships the leaves ``_wave_step`` reads or
+    writes (cells + mirrors); the pass-through metadata is seeded from vol
+    and discarded by the wrapper, which reassembles the true nvm output."""
+    (vv, vi, vs, vh, vt, vc, vep, vb, vf, vl, vm, vms,
+     nv, ni, ns, nm, nms) = refs
+    vol = WaveState(
+        vals=vv[...], idxs=vi[...], safes=vs[...] != 0,
+        heads=vh[...], tails=vt[...], closed=vc[...] != 0,
+        epoch=vep[...], base=vb[...], first=vf[...], last=vl[...],
+        mirrors=vm[...], mirror_seg=vms[...])
+    nvm = WaveState(
+        vals=nv[...], idxs=ni[...], safes=ns[...] != 0,
+        heads=vol.heads, tails=vol.tails, closed=vol.closed,
+        epoch=vol.epoch, base=vol.base, first=vol.first, last=vol.last,
+        mirrors=nm[...], mirror_seg=nms[...])
+    return vol, nvm
+
+
+def _write_states(refs, vol, nvm):
+    (ovv, ovi, ovs, ovh, ovt, ovc, ovep, ovb, ovf, ovl, ovm, ovms,
+     onv, oni, ons, onm, onms) = refs
+    i32 = jnp.int32
+    ovv[...], ovi[...], ovs[...] = vol.vals, vol.idxs, vol.safes.astype(i32)
+    ovh[...], ovt[...], ovc[...] = (vol.heads, vol.tails,
+                                    vol.closed.astype(i32))
+    ovep[...], ovb[...] = vol.epoch, vol.base
+    ovf[...], ovl[...] = vol.first, vol.last
+    ovm[...], ovms[...] = vol.mirrors, vol.mirror_seg
+    onv[...], oni[...], ons[...] = nvm.vals, nvm.idxs, nvm.safes.astype(i32)
+    onm[...], onms[...] = nvm.mirrors, nvm.mirror_seg
+
+
+def _fabric_round_kernel(*refs, phase: str, W: int, q_block: int):
+    b = _VALUE_BACKEND
+    shard = refs[0][0]
+    state_in, rest = refs[1:18], refs[18:]
+    vol, nvm = _read_states(state_in)
+    if phase == "enq":
+        items_ref, done_ref = rest[0], rest[1]
+        state_out, (oev, oidx, ook) = rest[2:19], rest[19:]
+        items, done = items_ref[...], done_ref[...] != 0
+        ev, idx = jax.vmap(_select_rows, in_axes=(0, 0, None))(items, done, W)
+        dm = jnp.zeros((q_block, W), bool)
+        vol, nvm, ok, _ = jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                          do_enq=True, do_deq=False,
+                                          prefix_lanes=True)
+        )(vol, nvm, ev, dm)
+        oev[...], oidx[...] = ev, idx
+        ook[...] = ok.astype(jnp.int32)
+    elif phase == "deq":
+        rem_ref, take_ref, at_ref, ah_ref = rest[:4]
+        state_out, (oout, ocnt, oprb) = rest[4:21], rest[21:]
+        # the work-stealing plan is cross-shard by nature: every program
+        # reduces the full [Q, S] backlog snapshot (tiny) and slices out
+        # its own shards' lane counts
+        counts_all, probe = _plan_round(at_ref[...], ah_ref[...],
+                                        rem_ref[0], take_ref[0], W)
+        q0 = pl.program_id(0) * q_block
+        counts = jax.lax.dynamic_slice(counts_all, (q0,), (q_block,))
+        dmv = jnp.arange(W, dtype=jnp.int32)[None, :] < counts[:, None]
+        ev = jnp.full((q_block, W), -1, jnp.int32)
+        vol, nvm, _, outw = jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b,
+                                          do_enq=False, do_deq=True,
+                                          prefix_lanes=True)
+        )(vol, nvm, ev, dmv)
+        oout[...], ocnt[...] = outw, counts
+        oprb[...] = jnp.broadcast_to(probe.astype(jnp.int32), (q_block,))
+    else:  # "wave"
+        ev_ref, dm_ref = rest[0], rest[1]
+        state_out, (oeok, odout) = rest[2:19], rest[19:]
+        vol, nvm, eok, dout = jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, shard, b)
+        )(vol, nvm, ev_ref[...], dm_ref[...] != 0)
+        oeok[...] = eok.astype(jnp.int32)
+        odout[...] = dout
+    _write_states(state_out, vol, nvm)
+
+
+@functools.partial(jax.jit, static_argnames=("phase", "W", "interpret",
+                                             "q_block"))
+def fabric_fused_round(vol, nvm, shard, items=None, done=None,
+                       remaining=None, take=None,
+                       enq_vals=None, deq_mask=None,
+                       *, phase: str, W: int, interpret: bool = True,
+                       q_block: int | None = None):
+    """One gridded driver round over the Q-stacked state.  Returns
+    (vol', nvm') plus the per-phase extras documented on
+    ``backend.PallasBackend.fused_fabric_round``."""
+    Q, S, R = vol.vals.shape
+    P = vol.mirrors.shape[1]
+    if q_block is None:
+        # one shard per grid program on parallel TPU cores; in interpret
+        # mode the grid serializes on the host, so block the whole shard
+        # axis into one program and let the in-body vmap vectorize it
+        q_block = Q if interpret else 1
+    if Q % q_block:
+        raise ValueError(f"q_block {q_block} must divide Q {Q}")
+    i32 = jnp.int32
+    pool = pl.BlockSpec((q_block, S, R), lambda g: (g, 0, 0))
+    row = pl.BlockSpec((q_block, S), lambda g: (g, 0))
+    mir = pl.BlockSpec((q_block, P), lambda g: (g, 0))
+    scal = pl.BlockSpec((q_block,), lambda g: (g,))
+    wav = pl.BlockSpec((q_block, W), lambda g: (g, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+    state_in = [
+        vol.vals, vol.idxs, vol.safes.astype(i32),
+        vol.heads, vol.tails, vol.closed.astype(i32), vol.epoch, vol.base,
+        vol.first, vol.last, vol.mirrors, vol.mirror_seg,
+        nvm.vals, nvm.idxs, nvm.safes.astype(i32),
+        nvm.mirrors, nvm.mirror_seg,
+    ]
+    state_specs = ([pool] * 3 + [row] * 5 + [scal] * 2 + [mir] * 2
+                   + [pool] * 3 + [mir] * 2)
+    state_shapes = (
+        [jax.ShapeDtypeStruct((Q, S, R), i32)] * 3
+        + [jax.ShapeDtypeStruct((Q, S), i32)] * 5
+        + [jax.ShapeDtypeStruct((Q,), i32)] * 2
+        + [jax.ShapeDtypeStruct((Q, P), i32)] * 2
+        + [jax.ShapeDtypeStruct((Q, S, R), i32)] * 3
+        + [jax.ShapeDtypeStruct((Q, P), i32)] * 2)
+
+    w_shape = jax.ShapeDtypeStruct((Q, W), i32)
+    q_shape = jax.ShapeDtypeStruct((Q,), i32)
+    if phase == "enq":
+        N = items.shape[1]
+        seln = pl.BlockSpec((q_block, N), lambda g: (g, 0))
+        extra_in = [jnp.asarray(items, i32), done.astype(i32)]
+        extra_specs = [seln, seln]
+        extra_out_specs = [wav, wav, wav]
+        extra_out_shapes = [w_shape, w_shape, w_shape]
+    elif phase == "deq":
+        snap = pl.BlockSpec((Q, S), lambda g: (0, 0))
+        extra_in = [jnp.asarray(remaining, i32).reshape(1),
+                    jnp.asarray(take, i32).reshape(1),
+                    vol.tails, vol.heads]
+        extra_specs = [smem, smem, snap, snap]
+        extra_out_specs = [wav, scal, scal]
+        extra_out_shapes = [w_shape, q_shape, q_shape]
+    elif phase == "wave":
+        extra_in = [jnp.asarray(enq_vals, i32), deq_mask.astype(i32)]
+        extra_specs = [wav, wav]
+        extra_out_specs = [wav, wav]
+        extra_out_shapes = [w_shape, w_shape]
+    else:
+        raise ValueError(f"unknown megakernel phase {phase!r}")
+
+    outs = pl.pallas_call(
+        functools.partial(_fabric_round_kernel, phase=phase, W=W,
+                          q_block=q_block),
+        grid=(Q // q_block,),
+        in_specs=[smem] + state_specs + extra_specs,
+        out_specs=state_specs + extra_out_specs,
+        out_shape=state_shapes + extra_out_shapes,
+        interpret=interpret,
+    )(jnp.asarray(shard, i32).reshape(1), *state_in, *extra_in)
+
+    s = outs[:17]
+    vol2 = WaveState(
+        vals=s[0], idxs=s[1], safes=s[2] != 0, heads=s[3], tails=s[4],
+        closed=s[5] != 0, epoch=s[6], base=s[7], first=s[8], last=s[9],
+        mirrors=s[10], mirror_seg=s[11])
+    # nvm pass-through metadata (heads/tails/first/last) survives verbatim;
+    # the segment-header line (closed/epoch/base) lands from the post-wave
+    # vol image, exactly as _wave_step's fused write-back does
+    nvm2 = nvm._replace(
+        vals=s[12], idxs=s[13], safes=s[14] != 0,
+        mirrors=s[15], mirror_seg=s[16],
+        closed=vol2.closed, epoch=vol2.epoch, base=vol2.base)
+    if phase == "enq":
+        ev, idx, ok = outs[17:]
+        return vol2, nvm2, ev, idx, ok != 0
+    if phase == "deq":
+        outw, counts, probe = outs[17:]
+        return vol2, nvm2, outw, counts, probe[0] != 0
+    eok, dout = outs[17:]
+    return vol2, nvm2, eok != 0, dout

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 
 from . import crq_wave as _crq_wave
+from . import fabric_fused as _fabric_fused
 from . import fai_ticket as _fai_ticket
 from . import recovery_scan as _recovery_scan
 from . import ref as ref  # noqa: F401  (re-export: the jnp oracle)
@@ -50,6 +51,18 @@ def wave_fused(vals_L, idxs_L, safes_L, vals_F, idxs_F, safes_F,
         head_L, same_seg, enq_tickets, enq_vals, enq_active,
         deq_tickets, deq_active, interpret=_interpret(),
         do_enq=do_enq, do_deq=do_deq)
+
+
+def fabric_fused_round(vol, nvm, shard, *, phase: str, W: int,
+                       items=None, done=None, remaining=None, take=None,
+                       enq_vals=None, deq_mask=None, q_block=None):
+    """One whole driver round over all Q shards as ONE gridded Pallas
+    program (the fused-fabric megakernel, DESIGN.md §3d).  Returns
+    (vol', nvm') + the per-phase extras; see kernels/fabric_fused.py."""
+    return _fabric_fused.fabric_fused_round(
+        vol, nvm, shard, items=items, done=done, remaining=remaining,
+        take=take, enq_vals=enq_vals, deq_mask=deq_mask,
+        phase=phase, W=W, interpret=_interpret(), q_block=q_block)
 
 
 def percrq_recovery_scan(vals, idxs, head0, block: int = 2048):

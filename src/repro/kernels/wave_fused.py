@@ -40,6 +40,13 @@ fori_loop over lanes is conflict-free; W is the small axis, R the large one.
 VMEM budget: 12 int32 rows of R + 7 wave arrays of W -- R=8192, W=512 =>
 ~400KB, comfortably inside a TPU core's ~16MB VMEM.  Interpret mode keeps
 the same program runnable on CPU CI.
+
+Scope: this kernel is ONE queue's wave.  The fabric used to scale over
+shards by vmapping it Q times per driver round; backends that grant the
+``fused_fabric_round`` capability now run the whole Q-shard round as a
+single gridded program instead (kernels/fabric_fused.py, DESIGN.md §3d),
+and this per-wave kernel remains the single-queue / vmapped-fallback path
+the megakernel is held bit-identical to.
 """
 from __future__ import annotations
 

@@ -1,0 +1,247 @@
+"""Fused-fabric megakernel (kernels/fabric_fused.py; DESIGN.md §3d):
+capability negotiation of ``megakernel``/``fused_fabric_round``, bit-exact
+parity of the gridded driver rounds against the vmapped per-wave path
+(both grid decompositions, segment-recycling waves, L==F aliasing),
+persist-stat parity with the WaveDelta live records, and >= 128-point
+torn-crash sweeps with megakernel-driven pre-crash traffic through the
+unchanged durable-linearizability checker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CapabilityError, FaultPlan, QueueConfig, negotiate,
+                       open_queue)
+from repro.core import driver as drv
+from repro.core.backend import (get_backend, has_fused_fabric_round,
+                                resolve_fused_round)
+from repro.core.fabric import fabric_init, fabric_step
+from repro.core.persistence import tree_copy
+from repro.core.wave import _wave_step
+from repro.kernels import ops as kops
+
+
+def _np(tree):
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def _assert_state_equal(a, b, ctx):
+    for name, av, bv in zip(a._fields, a, b):
+        assert (np.asarray(av) == np.asarray(bv)).all(), (ctx, name)
+
+
+# ---------------------------------------------------------------------------
+# capability negotiation
+# ---------------------------------------------------------------------------
+
+
+def test_capability_grants():
+    assert has_fused_fabric_round("pallas")
+    assert not has_fused_fabric_round("jnp")
+    assert resolve_fused_round("auto", get_backend("pallas"))
+    assert not resolve_fused_round("auto", get_backend("jnp"))
+    assert not resolve_fused_round("off", get_backend("pallas"))
+    with pytest.raises(ValueError):
+        resolve_fused_round("on", get_backend("jnp"))
+    with pytest.raises(ValueError):
+        resolve_fused_round("sometimes", get_backend("pallas"))
+
+
+def test_negotiate_megakernel():
+    _, caps = negotiate(QueueConfig(backend="pallas", megakernel="auto"))
+    assert caps.fused_fabric_round
+    _, caps = negotiate(QueueConfig(backend="pallas", megakernel="off"))
+    assert not caps.fused_fabric_round
+    _, caps = negotiate(QueueConfig(backend="jnp", megakernel="auto"))
+    assert not caps.fused_fabric_round
+    with pytest.raises(CapabilityError):
+        negotiate(QueueConfig(backend="jnp", megakernel="on"))
+    with pytest.raises(CapabilityError):
+        negotiate(QueueConfig(megakernel="never"))
+
+
+def test_facade_freezes_megakernel_decision():
+    q = open_queue(QueueConfig(backend="pallas", S=4, R=16, W=8,
+                               megakernel="on"))
+    assert q.fused_round == "on"
+    q = open_queue(QueueConfig(backend="pallas", S=4, R=16, W=8,
+                               megakernel="off"))
+    assert q.fused_round == "off"
+    q = open_queue(QueueConfig(backend="jnp", S=4, R=16, W=8))
+    assert q.fused_round == "off"
+
+
+# ---------------------------------------------------------------------------
+# driver-round parity: megakernel vs vmapped per-wave, bit-exact
+# ---------------------------------------------------------------------------
+
+
+def _drive(Q, S, R, W, mode, batches):
+    """Run enqueue_all/dequeue_n batches through the raw fabric drivers
+    with ``fused_round=mode``; returns every observable output."""
+    vol, nvm = fabric_init(Q, S, R, 1), fabric_init(Q, S, R, 1)
+    obs = []
+    for total in batches:
+        per = total // Q
+        im = np.arange(total, dtype=np.int32).reshape(per, Q).T.copy()
+        vol, nvm, done, r1, pw1, op1 = drv.fabric_enqueue_all(
+            vol, nvm, jnp.asarray(im), 0, 9999, W, backend="pallas",
+            fused_round=mode)
+        vol, nvm, out, got, r2, take, pw2, op2 = drv.fabric_dequeue_n(
+            vol, nvm, total, 0, 0, 9999, W, per * Q, backend="pallas",
+            fused_round=mode)
+        obs.append(_np((done, r1, pw1, op1, out, got, r2, take, pw2, op2)))
+    return obs, _np(vol), _np(nvm)
+
+
+@pytest.mark.parametrize("Q", [1, 4])
+def test_driver_parity_bit_exact(Q):
+    """Megakernel driver rounds == vmapped rounds, bit for bit, on every
+    observable (done flags, outputs, round/pwb/op counters) AND the final
+    vol/nvm images -- across batches that fill, drain, and REFILL a small
+    pool (the second fill recycles retired rows mid-driver-loop)."""
+    S, R, W = 4, 16, 8
+    cap = Q * S * R
+    batches = (cap, cap, cap // 2)      # fill -> recycle-fill -> partial
+    on, von, non = _drive(Q, S, R, W, "on", batches)
+    off, voff, noff = _drive(Q, S, R, W, "off", batches)
+    names = ("done", "enq_rounds", "enq_pwbs", "enq_ops", "out", "got",
+             "deq_rounds", "take", "deq_pwbs", "deq_ops")
+    for i, (a, b) in enumerate(zip(on, off)):
+        for nm, av, bv in zip(names, a, b):
+            assert (av == bv).all(), (Q, i, nm)
+    _assert_state_equal(von, voff, (Q, "vol"))
+    _assert_state_equal(non, noff, (Q, "nvm"))
+
+
+# ---------------------------------------------------------------------------
+# wave-phase parity: fabric_step with arbitrary masks + L==F aliasing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Q", [1, 4])
+def test_wave_phase_parity(Q):
+    """``fabric_step`` through the megakernel == the vmapped per-wave path
+    across a churn of mixed waves: the FRESH state exercises the L==F
+    same-segment alias, later waves spill to a second live row, close
+    segments and dequeue across the seam -- with arbitrary (non-prefix)
+    lane masks."""
+    S, R, W = 4, 8, 8
+    states = {m: (fabric_init(Q, S, R, 1), fabric_init(Q, S, R, 1))
+              for m in ("on", "off")}
+    rng = np.random.default_rng(7)
+    nxt = 0
+    for step in range(12):
+        ev = np.full((Q, W), -1, np.int32)
+        k = int(rng.integers(0, W + 1))
+        ev[:, :k] = nxt + np.arange(Q * k, dtype=np.int32).reshape(Q, k)
+        nxt += Q * k
+        dm = rng.random((Q, W)) < 0.4            # arbitrary, non-prefix
+        outs = {}
+        for mode in ("on", "off"):
+            vol, nvm = states[mode]
+            vol, nvm, ok, out = fabric_step(
+                vol, nvm, jnp.asarray(ev), jnp.asarray(dm),
+                jnp.int32(0), backend="pallas", fused_round=mode)
+            states[mode] = (vol, nvm)
+            outs[mode] = _np((ok, out))
+        assert (outs["on"][0] == outs["off"][0]).all(), (Q, step, "enq_ok")
+        assert (outs["on"][1] == outs["off"][1]).all(), (Q, step, "deq_out")
+    for field in ("vol", "nvm"):
+        a = _np(states["on"][0 if field == "vol" else 1])
+        b = _np(states["off"][0 if field == "vol" else 1])
+        _assert_state_equal(a, b, (Q, field))
+
+
+def test_grid_decomposition_parity():
+    """q_block=1 (one shard per grid program, the TPU layout) and
+    q_block=Q (single program, the interpret layout) produce identical
+    results for every phase."""
+    Q, S, R, W = 4, 4, 16, 8
+    ev = np.arange(Q * W, dtype=np.int32).reshape(Q, W)
+    dm = np.zeros((Q, W), bool)
+    res = {}
+    for qb in (1, Q):
+        vol, nvm = fabric_init(Q, S, R, 1), fabric_init(Q, S, R, 1)
+        vol, nvm, ok, out = kops.fabric_fused_round(
+            vol, nvm, jnp.int32(0), phase="wave", W=W,
+            enq_vals=jnp.asarray(ev), deq_mask=jnp.asarray(dm), q_block=qb)
+        vol, nvm, outw, counts, probe = kops.fabric_fused_round(
+            vol, nvm, jnp.int32(0), phase="deq", W=W,
+            remaining=jnp.int32(Q * W), take=jnp.int32(0), q_block=qb)
+        res[qb] = (_np((ok, out, outw, counts, probe)), _np(vol), _np(nvm))
+    (a, va, na), (b, vb, nb) = res[1], res[Q]
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert (x == y).all(), i
+    _assert_state_equal(va, vb, "vol")
+    _assert_state_equal(na, nb, "nvm")
+
+
+# ---------------------------------------------------------------------------
+# persist accounting: megakernel rounds vs WaveDelta live records
+# ---------------------------------------------------------------------------
+
+
+def test_persist_stats_parity_with_delta_live_records():
+    """The facade's pwb counters under megakernel dispatch equal the LIVE
+    record counts of the delta-emitting reference core for the same
+    half-waves -- the PR-4 invariant, held through the gridded rounds."""
+    Q, S, R, W = 2, 4, 64, 8
+    b = get_backend("pallas")
+    q = open_queue(QueueConfig(Q=Q, S=S, R=R, W=W, backend="pallas",
+                               megakernel="on"))
+    assert q.fused_round == "on"
+    ref_vol, ref_nvm = tree_copy(q.state.vol), tree_copy(q.state.nvm)
+    items = list(range(6 * Q))
+    place = [items[i::Q] for i in range(Q)]
+
+    def ref_half_wave(vol, nvm, ev, dm, do_enq, do_deq):
+        return jax.vmap(
+            lambda v, m, e, d: _wave_step(v, m, e, d, jnp.int32(0), b,
+                                          do_enq=do_enq, do_deq=do_deq,
+                                          prefix_lanes=True, emit_delta=True)
+        )(vol, nvm, ev, dm)
+
+    q.enqueue_all(items)
+    ev = np.full((Q, W), -1, np.int32)
+    for i in range(Q):
+        ev[i, :len(place[i])] = place[i]
+    dm = np.zeros((Q, W), bool)
+    *_, d_enq = ref_half_wave(ref_vol, ref_nvm, jnp.asarray(ev),
+                              jnp.asarray(dm), True, False)
+    live = int(np.asarray(d_enq.live).sum())
+    assert int(q.pwbs.sum()) == live + Q               # cells + header/queue
+    assert int(q.ops.sum()) == len(items)
+
+    pwb0 = int(q.pwbs.sum())
+    pre_vol, pre_nvm = tree_copy(q.state.vol), tree_copy(q.state.nvm)
+    out, _ = q.dequeue_n(len(items))
+    assert sorted(out) == items
+    evn = np.full((Q, W), -1, np.int32)
+    dmn = np.broadcast_to(np.arange(W) < 6, (Q, W)).copy()
+    *_, d_deq = ref_half_wave(pre_vol, pre_nvm, jnp.asarray(evn),
+                              jnp.asarray(dmn), False, True)
+    live = int(np.asarray(d_deq.live).sum())
+    # touched cells (delta live records) + mirror + header line per queue
+    assert int(q.pwbs.sum()) - pwb0 == live + 2 * Q
+
+
+# ---------------------------------------------------------------------------
+# torn-crash sweep with megakernel-driven pre-crash traffic
+# ---------------------------------------------------------------------------
+
+
+def test_crash_sweep_after_megakernel_traffic():
+    """>= 128 torn-crash points of a mixed wave whose PRE-crash queue state
+    was built entirely by megakernel driver rounds, validated point by
+    point through the unchanged durable-linearizability checker."""
+    q = open_queue(QueueConfig(Q=2, S=4, R=16, W=8, backend="pallas",
+                               megakernel="on"))
+    q.enqueue_all(list(range(20)))        # megakernel enqueue rounds
+    got, _ = q.dequeue_n(6)               # megakernel dequeue rounds
+    assert sorted(got) == list(range(6))
+    res = q.crash(FaultPlan("sweep", enq_items=(100, 101, 102, 103),
+                            deq_lanes=3, n_points=128, seed=11))
+    stats = res.check()                   # raises on any violation
+    assert res.n_points == 128
+    assert stats["survived_wave_enqs"] >= 0
