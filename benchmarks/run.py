@@ -56,6 +56,21 @@ ROW_SCHEMA = {
                 " = the same shapes hand-driven through the functional core"
                 " (driver.fabric_enqueue_all/fabric_dequeue_n) -- the"
                 " facade-dispatch-overhead comparison (--api rows)",
+    "combine_rows": "combine_percall = one facade dispatch per producer "
+                    "batch; combine_combined = the same batches announced "
+                    "on the repro.api.combine board and flushed as ONE "
+                    "coalesced round (psyncs_per_op includes the intent "
+                    "journal's); combine_model_pbq = the PBQueue flat-"
+                    "combining baseline on the machine-model DES "
+                    "(model_units: true -- per-op persist counts are "
+                    "comparable, throughput is not wall-clock)",
+    "producer_batch": "items per producer submission (combine rows; the "
+                      "amortization claim is at batch <= 8)",
+    "producers": "submitting producers per pass (combine rows)",
+    "wave_occupancy": "completed ops / (fused rounds * Q * drive width): "
+                      "the fraction of the fabric's lane capacity the "
+                      "rounds actually filled (combine rows, computed "
+                      "identically for both real paths)",
 }
 
 
@@ -106,6 +121,11 @@ def main() -> None:
                     help="additionally measure the repro.api facade against "
                          "the direct functional-core hot path at equal "
                          "total ops (dispatch-overhead rows + claim)")
+    ap.add_argument("--combine", action="store_true",
+                    help="additionally measure flat-combining amortization: "
+                         "per-call vs combined submission at producer batch "
+                         "<= 8 and equal total ops, plus the PBQueue "
+                         "machine-model baseline (combine_* rows + claim)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -183,6 +203,8 @@ def main() -> None:
         rowsw += wave_engine.run_churn(backends=backends, fast=args.fast)
     if args.api:
         rowsw += wave_engine.run_api(backends=backends, fast=args.fast)
+    if args.combine:
+        rowsw += wave_engine.run_combine(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]
@@ -251,6 +273,30 @@ def main() -> None:
             claims["api"][f"facade_vs_direct_{be}"] = ratio
             if be == "jnp":
                 claims["api"]["claim_api_zero_overhead"] = ratio >= 0.95
+    # PR-7 tentpole: flat combining must amortize the per-call dispatch +
+    # psync cost for small-batch producers -- combined submission >= 1.5x
+    # ops/s AND strictly fewer psyncs per op (journal included) than
+    # per-call submission, at equal total ops, on BOTH backends
+    pc = {r["backend"]: r for r in rowsw
+          if r["path"].startswith("combine_percall/")}
+    cb = {r["backend"]: r for r in rowsw
+          if r["path"].startswith("combine_combined/")}
+    if pc:
+        claims["combine"] = {}
+        amortized = True
+        for be in pc:
+            speed = cb[be]["ops_per_sec"] / max(pc[be]["ops_per_sec"], 1e-9)
+            claims["combine"][f"combined_vs_percall_{be}"] = speed
+            claims["combine"][f"psyncs_per_op_percall_{be}"] = (
+                pc[be]["psyncs_per_op"])
+            claims["combine"][f"psyncs_per_op_combined_{be}"] = (
+                cb[be]["psyncs_per_op"])
+            claims["combine"][f"wave_occupancy_gain_{be}"] = (
+                cb[be]["wave_occupancy"]
+                / max(pc[be]["wave_occupancy"], 1e-9))
+            amortized &= (speed >= 1.5 and cb[be]["psyncs_per_op"]
+                          < pc[be]["psyncs_per_op"])
+        claims["combine"]["claim_combining_amortization"] = amortized
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

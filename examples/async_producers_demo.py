@@ -1,0 +1,66 @@
+"""Flat-combining async front-end demo (DESIGN.md §9): N producers announce
+small enqueue/dequeue intents, one combiner flushes them as maximal device
+waves, then a torn crash lands MID-ROUND and every in-flight ticket gets a
+definitive completed/not-completed verdict (detectable recovery).
+
+Run:  PYTHONPATH=src python examples/async_producers_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__) or ".", "..",
+                                "src"))
+from repro.api import QueueConfig, open_combiner             # noqa: E402
+
+N_PRODUCERS = 6
+BATCH = 4                      # tiny per-producer batches: the combining case
+Q, W = 4, 8
+
+print(f"=== phase 1: {N_PRODUCERS} producers x batch {BATCH}, one combined "
+      "round ===")
+c = open_combiner(QueueConfig(Q=Q, S=4, R=64, W=W))
+print("capabilities.detectable_recovery =",
+      c.queue.capabilities.detectable_recovery)
+tickets = [c.submit_enqueue([p * 100 + j for j in range(BATCH)], producer=p)
+           for p in range(N_PRODUCERS)]
+consumer = c.submit_dequeue(BATCH, producer=99)
+print(f"board: {c.pending()} tickets pending "
+      f"({c.pending_enqueue_items()} items announced, queue still empty: "
+      f"backlog {c.queue.backlog()})")
+c.flush()
+for t in tickets:
+    assert t.done() and t.result() == list(t.items)
+print(f"flushed as one round: consumer got {consumer.result()}")
+st = c.persist_stats()
+print(f"persist economy: {st['ops_total']} ops, "
+      f"{st['psyncs_total_with_journal']} psyncs (journal included), "
+      f"wave occupancy {c.wave_occupancy():.3f}")
+
+print("\n=== phase 2: mid-run TORN crash, per-ticket verdicts ===")
+inflight = [c.submit_enqueue([1000 + p * 10 + j for j in range(BATCH)],
+                             producer=p) for p in range(N_PRODUCERS)]
+inflight.append(c.submit_enqueue(list(range(2000, 2000 + Q * W))))  # overflow
+refill = c.submit_dequeue(3, producer=99)
+verdicts = c.crash_torn(seed=7)
+print(f"{len(verdicts)} outstanding tickets resolved:")
+for t in inflight + [refill]:
+    v = t.verdict
+    print(f"  ticket {v.ticket:>2} producer {v.producer:>2} {v.kind}: "
+          f"completed={str(v.completed):<5} note={v.note}"
+          + (f" survived={len(v.survived)}/{len(t.items)}"
+             if v.kind == "enq" else ""))
+assert all(t.verdict is not None for t in inflight)
+assert not refill.verdict.completed    # a dead response is never 'completed'
+
+print("\n=== phase 3: verdicts are CORRECT -- sweep every crash point "
+      "through check_wave_crash ===")
+for p in range(N_PRODUCERS):
+    c.submit_enqueue([3000 + p * 10 + j for j in range(BATCH)], producer=p)
+c.submit_dequeue(2)
+sweep = c.crash_sweep(n_points=128, seed=11)
+agg = sweep.check()            # queue-level durable linearizability + verdicts
+print(f"128-point sweep: {agg['verdicts']} verdicts validated, "
+      f"{agg['completed_tickets']} completed across points; "
+      f"check_wave_crash aggregate {dict(list(agg.items())[:2])}")
+print("\nasync producers demo complete: intents coalesced into maximal "
+      "waves, every in-flight ticket crash-resolved with a correct verdict.")

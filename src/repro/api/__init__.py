@@ -16,6 +16,8 @@ the functional core: stable for power users, but only this module is the
 supported constructor surface -- ``tests/test_api_surface.py`` snapshots
 ``__all__`` so it cannot grow by accident.
 """
+from repro.api.combine import (CombinedSweep, Combiner, Ticket, Verdict,
+                               open_combiner)
 from repro.api.config import (TICKET_HORIZON, Capabilities, CapabilityError,
                               QueueConfig, negotiate)
 from repro.api.faults import FaultPlan, SweepResult, as_fault_plan
@@ -27,6 +29,8 @@ from repro.api.queue import (PersistentQueue, QueueFull, QueueState,
 __all__ = [
     "Capabilities",
     "CapabilityError",
+    "CombinedSweep",
+    "Combiner",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",
@@ -37,7 +41,10 @@ __all__ = [
     "RebaseReport",
     "SweepResult",
     "TICKET_HORIZON",
+    "Ticket",
+    "Verdict",
     "as_fault_plan",
     "negotiate",
+    "open_combiner",
     "open_queue",
 ]

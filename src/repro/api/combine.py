@@ -1,0 +1,445 @@
+"""Flat-combining async front-end: coalesce producer intents into maximal
+device waves (DESIGN.md §9).
+
+The paper's pwb/psync economy comes from batching -- one psync per fused
+wave -- but a facade call pays a full device-driver dispatch for whatever
+batch the CALLER happened to hand over, so small-batch producers (serving
+admissions, pipeline trickle) run the fabric at a fraction of wave
+occupancy.  This module is the production shape from Flat-Combining-Based
+Persistent Data Structures: producers *announce* intents and get lightweight
+tickets; a combiner drains the whole pending board, coalesces it into
+maximal waves (every lane of the Q-sharded fabric filled before a dispatch
+is paid), routes ONE ``enqueue_all`` + ONE ``dequeue_n`` through the
+existing megakernel/driver path, and delivers completions per ticket.
+
+Ordering: the board preserves global submission order, and round-robin
+placement of a concatenation equals round-robin placement of the parts
+(the cursor walks identically), so a combined round's placement -- and
+therefore per-producer FIFO and the MultiFIFO ``relax_rank`` rank-error
+bound -- is EXACTLY what per-call submission would have produced.  Within
+one round all tickets are mutually concurrent (none has completed when the
+round dispatches), so running the round's enqueues before its dequeues is
+a legal linearization.
+
+Detectability: every announcement is one ordered record on a durable
+intent journal (``core/intent.py``), drained with ONE psync immediately
+before the round dispatches.  After a torn crash each outstanding ticket
+resolves to a definitive completed/not-completed ``Verdict`` against the
+recovered queue image -- the ``Capabilities.detectable_recovery`` grant,
+negotiated via ``QueueConfig(detectable=True)`` (``open_combiner`` sets it
+for you).  ``crash_sweep`` verifies the whole story through the UNCHANGED
+``consistency.check_wave_crash``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.api.config import QueueConfig
+from repro.api.faults import FaultPlan, SweepResult
+from repro.core.intent import (DEQ, ENQ, IntentJournal, IntentRecord,
+                               Verdict, resolve_verdicts)
+
+
+class Ticket:
+    """A producer's handle on one announced operation.
+
+    States: pending (on the board) -> done | failed (resolved by a flush)
+    or crashed (resolved by a crash, ``verdict`` attached).  ``result()``
+    on a pending ticket makes the CALLER the combiner (it flushes the
+    board), so per-call-style code degenerates gracefully instead of
+    deadlocking."""
+
+    __slots__ = ("id", "producer", "kind", "items", "n", "status",
+                 "_value", "_error", "verdict", "_combiner")
+
+    def __init__(self, tid: int, producer: int, kind: str,
+                 items: Sequence[int], n: int, combiner: "Combiner"):
+        self.id = tid
+        self.producer = producer
+        self.kind = kind
+        self.items = tuple(int(x) for x in items)
+        self.n = int(n)
+        self.status = "pending"
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self.verdict: Optional[Verdict] = None
+        self._combiner = combiner
+
+    def done(self) -> bool:
+        return self.status != "pending"
+
+    def result(self) -> Any:
+        """The operation's outcome: for an enqueue ticket the list of items
+        durably enqueued; for a dequeue ticket the dequeued items.  Raises
+        the per-ticket ``QueueFull`` if THIS ticket's items are stuck, and
+        ``RuntimeError`` on a crashed ticket (read ``verdict`` instead)."""
+        if self.status == "pending":
+            self._combiner.flush()
+        if self.status == "failed":
+            raise self._error
+        if self.status == "crashed":
+            raise RuntimeError(
+                f"ticket {self.id} was in flight at a crash; its verdict is"
+                f" {self.verdict!r}")
+        return self._value
+
+    def __repr__(self):
+        return (f"Ticket(id={self.id}, producer={self.producer},"
+                f" kind={self.kind!r}, status={self.status!r})")
+
+
+@dataclasses.dataclass(frozen=True)
+class CombinedSweep:
+    """A torn-crash sweep of one combined round, with per-ticket verdicts.
+
+    Wraps the facade's non-mutating ``SweepResult`` (``sweep``), carrying
+    the outstanding intent records and the dispatched wave so every crash
+    point can be resolved to verdicts (``verdicts_at``).  ``check()`` runs
+    the queue-level sweep through the UNCHANGED ``check_wave_crash`` and
+    then validates the verdict invariants at every point."""
+
+    sweep: SweepResult
+    records: tuple                     # outstanding IntentRecords (snapshot)
+    dispatched: frozenset              # items of the crashed round's wave
+    queue: Any                         # the live PersistentQueue (peek only)
+
+    def survivors_at(self, point: int) -> List[int]:
+        """Recovered queue contents (all Q queues, queue-major) at one
+        crash point of the sweep."""
+        import jax
+        from repro.core.wave import peek_items
+        states = self.sweep.states
+        out: List[int] = []
+        for q in range(len(self.sweep.pre_items)):
+            st = jax.tree.map(lambda a: a[point][q], states)
+            out.extend(peek_items(jax.device_get(st)))
+        return out
+
+    def verdicts_at(self, point: int) -> Dict[int, Verdict]:
+        """Per-ticket verdicts for one crash point."""
+        return resolve_verdicts(self.records,
+                                frozenset(self.survivors_at(point)),
+                                dispatched=self.dispatched)
+
+    def check(self) -> Dict[str, int]:
+        """Queue-level durable linearizability (the unchanged
+        ``check_wave_crash``, every point/queue) PLUS the verdict
+        invariants at every point: an enqueue ticket is completed iff its
+        full effect is durable, a never-dispatched item never survives,
+        ``survived`` is always a subset of the ticket's items, and a
+        dequeue ticket is never completed (its response died with the
+        crash).  Raises on the first violation; returns aggregates."""
+        agg = self.sweep.check()
+        completed = 0
+        for point in range(self.sweep.n_points):
+            surv = set(self.survivors_at(point))
+            vs = self.verdicts_at(point)
+            assert len(vs) == len(self.records)
+            for rec in self.records:
+                v = vs[rec.ticket]
+                if rec.kind == DEQ:
+                    assert not v.completed, (point, rec)
+                    continue
+                durable = [it for it in rec.items if it in surv]
+                assert list(v.survived) == durable, (point, rec, v)
+                assert v.completed == (len(durable) == len(rec.items))
+                for it in rec.items:
+                    if it not in self.dispatched:
+                        assert it not in surv, (point, rec, it)
+                completed += int(v.completed)
+        agg["verdicts"] = self.sweep.n_points * len(self.records)
+        agg["completed_tickets"] = completed
+        return agg
+
+
+def open_combiner(config: QueueConfig = QueueConfig()) -> "Combiner":
+    """Open a queue with detectable recovery negotiated
+    (``detectable=True``) and wrap it in a ``Combiner``."""
+    return Combiner(config=config.replace(detectable=True))
+
+
+class Combiner:
+    """The flat-combining front-end over one ``PersistentQueue``.
+
+    ``submit_enqueue``/``submit_dequeue`` append tickets to the pending
+    board (and intent records to the durable journal -- one pwb each);
+    ``flush`` is the combiner pass: ONE journal psync, ONE coalesced
+    ``enqueue_all`` of every pending enqueue item in submission order, ONE
+    coalesced ``dequeue_n`` of the total pending demand, completions
+    delivered per ticket, and a lazily-persisted commit record.  Any
+    caller may flush (flat combining's "whoever holds the lock combines");
+    this model is single-threaded so ``flush`` is simply a method."""
+
+    def __init__(self, queue=None, config: Optional[QueueConfig] = None):
+        from repro.api.queue import open_queue
+        if queue is None:
+            queue = open_queue(config if config is not None
+                               else QueueConfig(detectable=True))
+        self.queue = queue
+        self.journal = IntentJournal()
+        self._board: List[Ticket] = []
+        self._next_id = 0
+        self._round = 0
+        self._lanes = 0        # lanes actually filled across all rounds
+        self._rounds = 0       # fused wave rounds dispatched by flushes
+
+    # -- producer side ------------------------------------------------------
+
+    def submit_enqueue(self, items: Sequence[int],
+                       producer: int = 0) -> Ticket:
+        """Announce an enqueue intent; returns its ticket immediately."""
+        t = Ticket(self._next_id, producer, ENQ, items, 0, self)
+        self._next_id += 1
+        self._board.append(t)
+        self.journal.announce(t.id, producer, ENQ, items=t.items)
+        return t
+
+    def submit_dequeue(self, n: int, producer: int = 0) -> Ticket:
+        """Announce a dequeue intent for up to ``n`` items."""
+        t = Ticket(self._next_id, producer, DEQ, (), n, self)
+        self._next_id += 1
+        self._board.append(t)
+        self.journal.announce(t.id, producer, DEQ, n=n)
+        return t
+
+    def pending(self) -> int:
+        """Tickets currently on the board."""
+        return len(self._board)
+
+    def pending_enqueue_items(self) -> int:
+        """Items announced but not yet flushed into the queue (a backlog
+        component: they are durable intents, not yet durable queue state)."""
+        return sum(len(t.items) for t in self._board if t.kind == ENQ)
+
+    def backlog(self) -> int:
+        """Queue backlog plus the board's unflushed enqueue items."""
+        return self.queue.backlog() + self.pending_enqueue_items()
+
+    # -- the combiner pass --------------------------------------------------
+
+    def flush(self, shard: int = 0, max_waves: int = 10_000) -> int:
+        """Drain the board as ONE coalesced round.  Returns the number of
+        tickets resolved.  ``QueueFull`` mid-round never escapes: it is
+        split per ticket (only tickets whose items are stuck fail; every
+        other ticket -- including every dequeue ticket -- completes)."""
+        board, self._board = self._board, []
+        if not board:
+            return 0
+        # announce-before-apply: every intent of this round durable in ONE
+        # psync (also drains the previous round's lazy commit record)
+        self.journal.sync()
+        enq_ts = [t for t in board if t.kind == ENQ]
+        deq_ts = [t for t in board if t.kind == DEQ]
+
+        # -- enqueue phase: one maximal coalesced call ----------------------
+        offsets: List[int] = []
+        all_items: List[int] = []
+        for t in enq_ts:
+            offsets.append(len(all_items))
+            all_items.extend(t.items)
+        if all_items:
+            try:
+                rounds = self.queue.enqueue_all(all_items, shard,
+                                                max_waves=max_waves)
+                self._charge(len(all_items), max(rounds, 1))
+                for t in enq_ts:
+                    t.status, t._value = "done", list(t.items)
+            except Exception as e:       # QueueFull: split per ticket
+                self._split_queue_full(e, enq_ts, offsets, all_items)
+        else:
+            for t in enq_ts:
+                t.status, t._value = "done", []
+
+        # -- dequeue phase: one coalesced call for the total demand ---------
+        total_n = sum(t.n for t in deq_ts)
+        if total_n > 0:
+            got, rounds = self.queue.dequeue_n(total_n, shard,
+                                               max_waves=max_waves)
+            self._charge(len(got), max(rounds, 1))
+            k = 0
+            for t in deq_ts:
+                t.status, t._value = "done", got[k:k + t.n]
+                k += len(t._value)
+        else:
+            for t in deq_ts:
+                t.status, t._value = "done", []
+
+        # commit rides the NEXT round's announcement drain (lazy: losing it
+        # is harmless, verdict resolution re-derives it from the image)
+        self.journal.commit(self._round, [t.id for t in board])
+        self._round += 1
+        return len(board)
+
+    def _charge(self, lanes: int, rounds: int) -> None:
+        self._lanes += int(lanes)
+        self._rounds += int(rounds)
+
+    def _split_queue_full(self, e: BaseException, enq_ts: List[Ticket],
+                          offsets: List[int], all_items: List[int]) -> None:
+        """Attribute a mid-round ``QueueFull`` to the exact tickets whose
+        items are stuck, via the exception's batch positions.  Everything
+        the facade reports durable stays durable: a ticket with NO stuck
+        positions completes even though its round failed."""
+        from repro.api.queue import QueueFull
+        if not isinstance(e, QueueFull):
+            raise e
+        if e.pending_pos is None:      # no positions: fail the whole round
+            for t in enq_ts:
+                t.status, t._error = "failed", e
+            return
+        stuck_by_ticket: Dict[int, List[int]] = {}
+        bounds = offsets + [len(all_items)]
+        for val, pos in zip(e.pending, e.pending_pos):
+            # offsets are sorted; find the ticket whose [off, off+len) span
+            # holds this batch position
+            lo, hi = 0, len(enq_ts) - 1
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if bounds[mid] <= pos:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            stuck_by_ticket.setdefault(lo, []).append(pos)
+        self._charge(len(all_items) - len(e.pending), max(e.waves, 1))
+        for i, t in enumerate(enq_ts):
+            stuck = stuck_by_ticket.get(i)
+            if not stuck:
+                t.status, t._value = "done", list(t.items)
+                continue
+            off = offsets[i]
+            t.status = "failed"
+            t._error = QueueFull(
+                [all_items[p] for p in stuck], e.waves,
+                pending_pos=[p - off for p in stuck])
+
+    # -- occupancy / accounting --------------------------------------------
+
+    def wave_occupancy(self) -> float:
+        """Filled lanes / (rounds * Q * drive width): the fraction of the
+        fabric's lane capacity the combined rounds actually used.  Computed
+        identically for any submission pattern, so combined-vs-per-call
+        rows are comparable."""
+        q = self.queue
+        w_drive = q.device_wave if q.driver == "device" else q.W
+        denom = self._rounds * q.Q * w_drive
+        return self._lanes / denom if denom else 0.0
+
+    def persist_stats(self) -> Dict[str, Any]:
+        """The queue's persist accounting plus the journal's: the combined
+        path's psync economy reported honestly (journal psyncs included)."""
+        st = dict(self.queue.persist_stats())
+        st["journal_pwbs"] = self.journal.pwb_count
+        st["journal_psyncs"] = self.journal.psync_count
+        st["psyncs_total_with_journal"] = (st["psyncs_total"]
+                                          + self.journal.psync_count)
+        return st
+
+    # -- crash surface ------------------------------------------------------
+
+    def _plan_wave(self):
+        """The crashed round's in-flight wave: under round-robin placement
+        the first Q*W enqueue items of the concatenated board land exactly
+        where per-call placement would put them, one wave deep; items
+        beyond the wave were never dispatched.  Dequeue demand maps to
+        lanes the same way ``dequeue_n`` would drive its first wave."""
+        q = self.queue
+        all_items = [it for t in self._board if t.kind == ENQ
+                     for it in t.items]
+        wave = all_items[:q.Q * q.W]
+        total_n = sum(t.n for t in self._board if t.kind == DEQ)
+        deq_lanes = min(q.W, -(-total_n // q.Q)) if total_n else 0
+        return wave, deq_lanes
+
+    def crash_torn(self, seed: int = 0, crash_point: Any = None,
+                   evict_rate: float = 0.25, shard: int = 0
+                   ) -> Dict[int, Verdict]:
+        """Crash MID-ROUND: the board's first wave is in flight when the
+        ordered flush tears.  The journal is durable (the round synced it
+        before dispatch), so recovery resolves EVERY outstanding ticket to
+        a definitive verdict against the recovered image.  Mutates the
+        queue (it recovers); the board is cleared with tickets marked
+        ``crashed`` and their ``verdict`` attached."""
+        self.journal.sync()
+        wave, deq_lanes = self._plan_wave()
+        self.queue.crash(FaultPlan(
+            "torn", enq_items=tuple(wave), deq_lanes=deq_lanes, shard=shard,
+            seed=seed, crash_point=crash_point, evict_rate=evict_rate))
+        verdicts = resolve_verdicts(
+            self.journal.outstanding(),
+            frozenset(self.queue.peek_items()),
+            dispatched=frozenset(wave))
+        self._resolve_crashed(verdicts)
+        return verdicts
+
+    def crash(self, plan: FaultPlan = FaultPlan()) -> Dict[int, Verdict]:
+        """Run an arbitrary clean/torn ``FaultPlan`` on the underlying
+        queue (the injected wave is the PLAN's, e.g. a consumer's torn
+        submission -- not the board's) and resolve the board: announced-
+        but-unflushed intents were never dispatched, so each gets a
+        definitive verdict against the recovered image.  For the board's
+        OWN wave use ``crash_torn``; for sweeps use ``crash_sweep``."""
+        if plan.kind == "sweep":
+            raise ValueError("use crash_sweep() for non-mutating sweeps")
+        self.journal.sync()
+        self.queue.crash(plan)
+        verdicts = resolve_verdicts(
+            self.journal.outstanding(),
+            frozenset(self.queue.peek_items()),
+            dispatched=frozenset(plan.enq_items))
+        self._resolve_crashed(verdicts)
+        return verdicts
+
+    def crash_announce(self, seed: int = 0) -> Dict[int, Verdict]:
+        """Crash BEFORE the round's announcement drain: the journal itself
+        tears (seeded prefix + evictions over the un-synced suffix) and the
+        round never dispatches.  Every surviving record resolves
+        not-completed ("never-dispatched"); LOST records' tickets resolve
+        not-completed with note "announcement-lost" -- either way the
+        producer gets a definitive verdict."""
+        lost = self.journal.crash(seed)
+        self.queue.crash(FaultPlan("clean"))
+        verdicts = resolve_verdicts(
+            self.journal.outstanding(),
+            frozenset(self.queue.peek_items()),
+            dispatched=frozenset())
+        for rec in lost:
+            verdicts[rec.ticket] = Verdict(
+                rec.ticket, rec.producer, rec.kind, completed=False,
+                note="announcement-lost")
+        self._resolve_crashed(verdicts)
+        return verdicts
+
+    def crash_sweep(self, n_points: int = 256, seed: int = 0,
+                    evict_rate: float = 0.25, shard: int = 0
+                    ) -> CombinedSweep:
+        """Forensics: sweep ``n_points`` torn crash points of the board's
+        in-flight wave WITHOUT mutating the live queue or the board, and
+        resolve per-ticket verdicts at every point.  The queue-level
+        evidence goes through the unchanged ``check_wave_crash``."""
+        self.journal.sync()
+        wave, deq_lanes = self._plan_wave()
+        sweep = self.queue.crash(FaultPlan(
+            "sweep", enq_items=tuple(wave), deq_lanes=deq_lanes,
+            shard=shard, seed=seed, evict_rate=evict_rate,
+            n_points=n_points))
+        records = tuple(r for r in self.journal.outstanding())
+        return CombinedSweep(sweep=sweep, records=records,
+                             dispatched=frozenset(wave), queue=self.queue)
+
+    def _resolve_crashed(self, verdicts: Dict[int, Verdict]) -> None:
+        board, self._board = self._board, []
+        for t in board:
+            t.status = "crashed"
+            t.verdict = verdicts.get(t.id)
+        if board:
+            # recovery durably records its resolution: the verdicts were
+            # delivered, so these tickets must not stay outstanding into
+            # the NEXT crash's resolution pass
+            self.journal.commit(self._round, [t.id for t in board])
+            self._round += 1
+            self.journal.sync()
+
+
+__all__ = ["Combiner", "CombinedSweep", "Ticket", "Verdict", "IntentRecord",
+           "open_combiner"]

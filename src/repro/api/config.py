@@ -56,6 +56,7 @@ class QueueConfig:
     relax_rank: Optional[int] = None  # max overtakes allowed (None = Q-1)
     waves_per_call: int = 8  # host-driver scan depth (K waves per jit call)
     megakernel: str = "auto"  # fused-fabric round dispatch: on | off | auto
+    detectable: bool = False  # request per-op verdicts (intent journal)
 
     def replace(self, **kw) -> "QueueConfig":
         return dataclasses.replace(self, **kw)
@@ -75,7 +76,12 @@ class Capabilities:
     fused_wave: bool         # backend runs the fused live-row wave path
     fused_fabric_round: bool  # driver rounds run as ONE gridded megakernel
     durable_linearizability: bool  # torn-crash recovery contract (§7)
-    detectable_recovery: bool      # crash()/FaultPlan + peek_items surface
+    detectable_recovery: bool      # per-op completed/not-completed verdicts
+    #   after ANY crash, granted by the flat-combining front-end's durable
+    #   intent journal (repro.api.combine; DESIGN.md §9).  Request it with
+    #   QueueConfig(detectable=True) and drive the queue through
+    #   open_combiner() -- bare facade calls leave in-flight batches
+    #   verdict-less, so plain open_queue() does not grant it.
     ticket_width: int        # bits per ticket/base
     ticket_horizon: int      # enqueues per row before rebase() is required
     capacity_hint: int       # live items the pool holds (Q * S * R)
@@ -141,7 +147,7 @@ def negotiate(config: QueueConfig) -> Tuple[QueueConfig, Capabilities]:
         fused_wave=True,   # every registered backend provides fused_wave
         fused_fabric_round=fused_round,
         durable_linearizability=True,
-        detectable_recovery=True,
+        detectable_recovery=c.detectable,
         ticket_width=32,
         ticket_horizon=TICKET_HORIZON,
         capacity_hint=Q * c.S * c.R,

@@ -29,7 +29,7 @@ different messages and no pending-item information).
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,11 +59,23 @@ class QueueState(NamedTuple):
 class QueueFull(RuntimeError):
     """``enqueue_all`` could not durably enqueue every item within
     ``max_waves``.  ``pending`` holds the items that did not make it, in
-    their per-queue FIFO submission order; everything else IS enqueued."""
+    their per-queue FIFO submission order; everything else IS enqueued.
 
-    def __init__(self, pending: Sequence[int], waves: int):
+    ``pending_pos`` (parallel to ``pending``) holds each pending item's
+    position in the batch as SUBMITTED to this call.  Item values may
+    repeat across producers; positions cannot, so they are what a batching
+    front-end (``repro.api.combine``) uses to attribute the failure to the
+    exact tickets whose items are stuck -- unrelated tickets in the same
+    coalesced round still complete."""
+
+    def __init__(self, pending: Sequence[int], waves: int,
+                 pending_pos: Optional[Sequence[int]] = None):
         self.pending = [int(x) for x in pending]
         self.waves = int(waves)
+        self.pending_pos = (None if pending_pos is None
+                            else [int(p) for p in pending_pos])
+        if self.pending_pos is not None:
+            assert len(self.pending_pos) == len(self.pending)
         super().__init__(
             f"queue full: {len(self.pending)} item(s) not enqueued after "
             f"{self.waves} wave(s)")
@@ -202,9 +214,17 @@ class PersistentQueue:
         failures; raises ``QueueFull`` (pending items attached, per-queue
         order) if the pool cannot take them within ``max_waves``.  Returns
         the number of wave rounds used."""
+        place0 = self._place          # pre-placement cursor: position oracle
         pend = self._placed(items)
+        # batch position of pend[q][j] (the inverse of the strided placement
+        # views): positions ride QueueFull so batching front-ends can map a
+        # failure back to exact submissions even when item VALUES repeat
+        pos = [list(range((q - place0) % self.Q,
+                          (q - place0) % self.Q + self.Q * pend[q].size,
+                          self.Q))
+               for q in range(self.Q)]
         if self.driver == "host":
-            return self._enqueue_all_host([list(p) for p in pend],
+            return self._enqueue_all_host([list(p) for p in pend], pos,
                                           shard, max_waves)
         if not any(p.size for p in pend):
             return 0
@@ -226,14 +246,21 @@ class PersistentQueue:
             # the [Q, N] done flags are fetched on this cold path only
             done = np.asarray(jax.device_get(done))
             if not done.all():
-                raise QueueFull(
-                    [int(v) for q in range(self.Q)
-                     for v in rows[q][~done[q]] if v >= 0], int(rounds))
+                stuck = [(int(rows[q][j]), pos[q][j])
+                         for q in range(self.Q)
+                         for j in np.nonzero(~done[q])[0]
+                         if j < pend[q].size]
+                raise QueueFull([v for v, _ in stuck], int(rounds),
+                                pending_pos=[p for _, p in stuck])
         return int(rounds)
 
-    def _enqueue_all_host(self, pend: List[List[int]], shard: int,
+    def _enqueue_all_host(self, pend: List[List[int]],
+                          pos: List[List[int]], shard: int,
                           max_waves: int):
-        """Scan-batched host loop: K waves per device call, host retry fold."""
+        """Scan-batched host loop: K waves per device call, host retry fold.
+        ``pos`` mirrors ``pend`` (batch position of each pending item) and
+        is folded through the same retry walk so a terminal ``QueueFull``
+        can attribute every stuck item to its submission position."""
         Q, K, W = self.Q, self.waves_per_call, self.W
         waves = 0
         while any(pend) and waves < max_waves:
@@ -255,6 +282,8 @@ class PersistentQueue:
                 retry, ok_flat, taken, active = fold_enqueue_results(
                     chunk, rows[q], oks[q], sub[q], W)
                 pend[q] = retry + pend[q][taken:]
+                pos[q] = ([p for p, o in zip(pos[q][:taken], ok_flat)
+                           if not o] + pos[q][taken:])
                 fused = max(fused, active)
                 # completed-enqueue cells + the segment-header line
                 # (closed/epoch/base) per active wave on this queue
@@ -264,7 +293,8 @@ class PersistentQueue:
             self.psyncs[shard] += max(fused, 1)
             waves += max(fused, 1)
         if any(pend):
-            raise QueueFull([v for p in pend for v in p], waves)
+            raise QueueFull([v for p in pend for v in p], waves,
+                            pending_pos=[x for p in pos for x in p])
         return waves
 
     # -- consumer side --------------------------------------------------------

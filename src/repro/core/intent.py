@@ -1,0 +1,224 @@
+"""Durable intent journal: the announcement board of the flat-combining
+front-end (DESIGN.md §9).
+
+Producers do not talk to the device; they *announce* operations as intents
+(``submit_enqueue`` / ``submit_dequeue`` on ``repro.api.combine.Combiner``)
+and a combiner executes the pending board as coalesced device waves.  The
+crash story of those in-flight intents is this module: every announcement
+is one ordered pwb record on the journal (a single-writer line -- the cheap
+per-op persistence of the combining baselines, ``core/combining.py``), and
+the combiner drains them with ONE psync immediately before dispatching a
+round.  That announce-before-apply barrier is the whole detectability
+argument:
+
+  * a crash BEFORE the round's announcement psync can tear the journal
+    (``IntentJournal.crash``: seeded prefix + evictions over the un-synced
+    suffix, the same adversary as ``persistence.torn_masks``) -- but then
+    the round never dispatched, so every affected ticket is definitively
+    NOT completed;
+  * a crash DURING the round (mid-wave, the ``FaultPlan("torn")`` injector)
+    finds the journal fully durable, so recovery knows exactly which items
+    each outstanding ticket covers and reads their fate off the recovered
+    queue image (``resolve_verdicts``).
+
+Either way each outstanding ticket gets a definitive completed /
+not-completed **verdict** -- the detectable-recovery contract of Durable
+Queues: The Second Amendment, surfaced as ``Capabilities.
+detectable_recovery`` (negotiated via ``QueueConfig.detectable``).
+
+Round *commit* records are appended after completions are delivered and
+ride the NEXT round's announcement drain (lazy commit): losing one is
+harmless, because verdict resolution never needs it -- it only re-derives
+what the recovered queue image already proves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
+
+ENQ = "enq"
+DEQ = "deq"
+COMMIT = "commit"
+
+
+@dataclasses.dataclass
+class IntentRecord:
+    """One ordered journal record (one pwb line).
+
+    ``kind`` is ``"enq"``/``"deq"`` for announcements (``items`` / ``n``
+    carry the payload) or ``"commit"`` (``items`` carries the resolved
+    ticket ids).  ``resolved`` flips when a commit record covers the
+    ticket; ``durable`` flips at the covering psync (or an eviction)."""
+
+    seq: int
+    ticket: int
+    producer: int
+    kind: str
+    items: Tuple[int, ...] = ()
+    n: int = 0
+    round_id: int = -1
+    resolved: bool = False
+    durable: bool = False
+
+
+class IntentJournal:
+    """The ordered, maskable announcement log (host-side model).
+
+    Persistence accounting mirrors ``LinePersistence``: one ``pwb`` per
+    appended record, ``sync()`` drains everything pending (one ``psync``).
+    The combiner charges these counters alongside the queue's own
+    ``persist_stats`` so the combined path's psync economy is reported
+    honestly (journal included)."""
+
+    def __init__(self) -> None:
+        self.records: List[IntentRecord] = []
+        self.pwb_count = 0
+        self.psync_count = 0
+        self._seq = 0
+
+    # -- announcements ------------------------------------------------------
+
+    def announce(self, ticket: int, producer: int, kind: str,
+                 items: Sequence[int] = (), n: int = 0) -> IntentRecord:
+        """Append one intent record (one pwb; durable at the next sync)."""
+        rec = IntentRecord(seq=self._seq, ticket=ticket, producer=producer,
+                           kind=kind, items=tuple(int(x) for x in items),
+                           n=int(n))
+        self._seq += 1
+        self.records.append(rec)
+        self.pwb_count += 1
+        return rec
+
+    def commit(self, round_id: int, ticket_ids: Sequence[int]) -> None:
+        """Append the round's commit record (one pwb, synced lazily) and
+        mark the covered intents resolved."""
+        covered = frozenset(int(t) for t in ticket_ids)
+        rec = IntentRecord(seq=self._seq, ticket=-1, producer=-1,
+                           kind=COMMIT,
+                           items=tuple(sorted(covered)), round_id=round_id)
+        self._seq += 1
+        self.records.append(rec)
+        self.pwb_count += 1
+        for r in self.records:
+            if r.kind in (ENQ, DEQ) and r.ticket in covered:
+                r.resolved = True
+
+    def sync(self) -> int:
+        """Drain every pending record (ONE psync); returns #records made
+        durable by this drain."""
+        n = 0
+        for r in self.records:
+            if not r.durable:
+                r.durable = True
+                n += 1
+        self.psync_count += 1
+        return n
+
+    # -- crash --------------------------------------------------------------
+
+    def crash(self, seed: int = 0, evict_rate: float = 0.25
+              ) -> List[IntentRecord]:
+        """Torn loss of the un-synced suffix: a seeded prefix of the pending
+        records landed (they were issued in order), plus independent
+        evictions -- the same prefix+eviction adversary as
+        ``persistence.torn_mask``.  Lost records are REMOVED (a real
+        restart reads only the durable journal); returns them so the
+        caller can resolve their tickets as not-completed."""
+        pending = [r for r in self.records if not r.durable]
+        rng = random.Random(seed)
+        point = rng.randint(0, len(pending))
+        lost: List[IntentRecord] = []
+        for i, r in enumerate(pending):
+            if i < point or rng.random() < evict_rate:
+                r.durable = True          # landed (prefix or eviction)
+            else:
+                lost.append(r)
+        lost_ids = {id(r) for r in lost}
+        self.records = [r for r in self.records if id(r) not in lost_ids]
+        return lost
+
+    # -- queries ------------------------------------------------------------
+
+    def outstanding(self) -> List[IntentRecord]:
+        """Durable announcements with no durable commit covering them --
+        exactly the tickets a recovery must issue verdicts for."""
+        committed: Set[int] = set()
+        for r in self.records:
+            if r.kind == COMMIT and r.durable:
+                committed.update(r.items)
+        return [r for r in self.records
+                if r.kind in (ENQ, DEQ) and r.durable
+                and r.ticket not in committed]
+
+
+# ---------------------------------------------------------------------------
+# Verdicts: the per-ticket detectable-recovery resolution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """The definitive post-crash resolution of ONE outstanding ticket.
+
+    ``completed`` -- the operation's full effect is durable: every item of
+    an enqueue intent is present in the recovered queue (or was already
+    delivered to a consumer before the crash).  A dequeue intent whose
+    response never reached its producer is never ``completed`` (its
+    consumed-but-undelivered effect is bounded by the in-flight-dequeue
+    budget ``check_wave_crash`` enforces).  ``survived`` lists the enqueue
+    items that ARE durable (an in-flight wave persists a ticket-order
+    subsequence, so a not-completed enqueue can still have a durable
+    prefix of its effect -- detectability reports it instead of guessing).
+    """
+
+    ticket: int
+    producer: int
+    kind: str
+    completed: bool
+    survived: Tuple[int, ...] = ()
+    note: str = "in-flight"
+
+
+def resolve_verdicts(records: Sequence[IntentRecord],
+                     survivors: FrozenSet[int],
+                     delivered: FrozenSet[int] = frozenset(),
+                     dispatched: FrozenSet[int] = frozenset(),
+                     ) -> Dict[int, Verdict]:
+    """Resolve every outstanding intent record against the recovered queue.
+
+    ``survivors``: the recovered queue contents (``peek_items``).
+    ``delivered``: items already handed to consumers before the crash (a
+    surviving OR delivered item counts as durably enqueued).
+    ``dispatched``: the items of the crashed round's in-flight wave; items
+    announced but NOT dispatched (queued behind the wave, or announced
+    after the crash point) are definitively dead, which lets the verdict
+    distinguish "never-dispatched" from "in-flight, did not survive".
+
+    Assumes round items are unique (the repo-wide checker convention --
+    ``check_fifo_history`` requires globally unique items).  Returns
+    {ticket id: Verdict}, one per outstanding record."""
+    out: Dict[int, Verdict] = {}
+    for rec in records:
+        if rec.kind == DEQ:
+            # the response was never delivered: not completed, definitively
+            # (any consumed-but-unacked effect is charged to the in-flight
+            # dequeue budget the consistency checker bounds)
+            out[rec.ticket] = Verdict(rec.ticket, rec.producer, DEQ,
+                                      completed=False)
+            continue
+        surv = tuple(it for it in rec.items
+                     if it in survivors or it in delivered)
+        completed = len(surv) == len(rec.items)
+        if completed:
+            note = "durable"
+        elif not any(it in dispatched for it in rec.items):
+            # nothing of this ticket reached the device (queued behind the
+            # wave, or the round never dispatched at all)
+            note = "never-dispatched"
+        else:
+            note = "in-flight"
+        out[rec.ticket] = Verdict(rec.ticket, rec.producer, ENQ,
+                                  completed=completed, survived=surv,
+                                  note=note)
+    return out

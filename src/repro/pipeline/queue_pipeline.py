@@ -18,7 +18,7 @@ from typing import Dict, Iterator, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import QueueConfig, as_fault_plan, open_queue
+from repro.api import Combiner, QueueConfig, Ticket, as_fault_plan
 from repro.core.persistence import crash_recover_images
 
 
@@ -37,11 +37,14 @@ class PersistentDataPipeline:
         self.source = source
         self.batch_size = batch_size
         self.seq_len = seq_len
-        # device-resident driving: produce()/next_batch() cost one device
-        # call each, however many wave rounds the batch takes
-        self.queue = open_queue(QueueConfig(
+        # device-resident driving through the flat-combining front-end:
+        # produce()/next_batch() cost one device call each, and
+        # produce_async() lets many workers coalesce their trickle into
+        # ONE maximal round at the next flush
+        self.combiner = Combiner(config=QueueConfig(
             Q=n_queues, S=S, R=R, P=n_shards, W=W,
-            backend=backend, driver=driver))
+            backend=backend, driver=driver, detectable=True))
+        self.queue = self.combiner.queue
         self.slab = np.zeros((slab_capacity, seq_len + 1), np.int32)
         self.slab_nvm = np.zeros_like(self.slab)
         self.slab_capacity = slab_capacity
@@ -58,12 +61,16 @@ class PersistentDataPipeline:
         self.acked: List[int] = []
         self._acked_set: set = set()
         self._stash: List[int] = []
+        self._pending: List[Ticket] = []
 
     # -- producer side ---------------------------------------------------------
 
-    def produce(self, n: int, shard: int = 0) -> int:
-        """Pull n samples from the source, persist payloads, enqueue handles.
-        Returns the number acknowledged (durably enqueued)."""
+    def produce_async(self, n: int, shard: int = 0) -> Ticket:
+        """Pull n samples from the source, persist payloads, ANNOUNCE the
+        handles on the combiner board.  Returns the enqueue ticket; the
+        handles become acknowledged (durably enqueued) at the next
+        ``flush()``/``produce()``/``next_batch()``, when every worker's
+        trickle coalesces into one maximal round."""
         handles = []
         for _ in range(n):
             sid, seq = next(self.source)
@@ -81,18 +88,49 @@ class PersistentDataPipeline:
             self.slab[h] = seq
             self.slab_nvm[h] = seq  # payload persisted BEFORE the handle
             handles.append(h)
-        self.queue.enqueue_all(handles, shard=shard)
-        self.acked.extend(handles)
-        self._acked_set.update(handles)
-        self.produced += len(handles)
-        return len(handles)
+        t = self.combiner.submit_enqueue(handles, producer=shard)
+        self._pending.append(t)
+        return t
+
+    def flush(self, shard: int = 0) -> None:
+        """Run the combiner pass and settle every resolved produce ticket:
+        completed handles become acknowledged; a per-ticket ``QueueFull``
+        re-raises (its handles stay un-acked, exactly the pre-combiner
+        failure surface)."""
+        self.combiner.flush(shard)
+        err = None
+        still: List[Ticket] = []
+        for t in self._pending:
+            if t.status == "pending":
+                still.append(t)
+            elif t.status == "done":
+                self.acked.extend(t.items)
+                self._acked_set.update(t.items)
+                self.produced += len(t.items)
+            elif t.status == "failed" and err is None:
+                err = t._error
+        self._pending = still
+        if err is not None:
+            raise err
+
+    def produce(self, n: int, shard: int = 0) -> int:
+        """Pull n samples from the source, persist payloads, enqueue handles
+        (one combined round, together with any announced intents).  Returns
+        the number acknowledged (durably enqueued)."""
+        t = self.produce_async(n, shard)
+        self.flush(shard)
+        return len(t.items)
 
     # -- consumer side ---------------------------------------------------------
 
     def next_batch(self, shard: int = 0) -> Optional[Dict[str, jnp.ndarray]]:
         """Dequeue batch_size handles; returns a training batch or None if
-        the queue ran dry (caller produces more / waits)."""
-        handles, _ = self.queue.dequeue_n(self.batch_size, shard=shard)
+        the queue ran dry (caller produces more / waits).  The demand rides
+        one combined round with any announced produce intents."""
+        ticket = self.combiner.submit_dequeue(self.batch_size,
+                                              producer=shard)
+        self.flush(shard)       # settles produce tickets too (acked)
+        handles = ticket.result()
         if len(handles) < self.batch_size:
             # partial batch: push back is not allowed (queue semantics);
             # deliver only full batches in this reference impl, so requeue
@@ -124,15 +162,20 @@ class PersistentDataPipeline:
         mid-wave dequeues) are re-enqueued; samples still durably queued or
         already delivered are not.  The slab's volatile copy rebinds through
         ``crash_recover_images`` (the shared non-aliasing rule)."""
-        self.queue.crash(as_fault_plan(torn, seed=seed))
+        self.combiner.crash(as_fault_plan(torn, seed=seed))
+        # announced-but-unflushed produce tickets died with verdicts; their
+        # handles were never acknowledged, so they are outside the
+        # exactly-once contract (the producer re-submits on its ticket)
+        self._pending = [t for t in self._pending if t.status == "pending"]
         survivors = set(self.queue.peek_items())
         delivered = set(self.delivered_ids)
         lost = [h for h in self.acked
                 if h not in delivered and h not in survivors]
         self._stash = []
         if lost:
-            self.queue.enqueue_all(lost)
+            self.combiner.submit_enqueue(lost).result()
         self.slab, self.slab_nvm = crash_recover_images(self.slab_nvm)
 
     def backlog(self) -> int:
-        return self.queue.backlog()
+        # durable queue items plus announced-but-unflushed produce intents
+        return self.combiner.backlog()

@@ -4,10 +4,12 @@ Requests flow through a PerLCRQ-style wave queue (exactly-once admission
 across crashes); admitted requests occupy decode slots (continuous
 batching: a finished request's slot is refilled from the queue the same
 step -- slot allocation is the same prefix-sum ticketing as the queue's
-FAI).  Admission and refill drive the fabric's DEVICE-RESIDENT drivers
-(core/driver.py): a refill is one device call regardless of how many wave
-rounds the drain takes, so queue service never stalls the decode step on
-host round-trips.  The engine persists, per step, only per-slot progress
+FAI).  Admission goes through the flat-combining front-end
+(repro.api.combine): submit() announces an intent on the durable board,
+and the next step's refill flushes every pending admission plus its own
+demand as ONE coalesced device round through the fabric's DEVICE-RESIDENT
+drivers (core/driver.py) -- so queue service never stalls the decode step
+on host round-trips, and per-request dispatches amortize away.  The engine persists, per step, only per-slot progress
 mirrors (the local-persistence technique) -- crash recovery rebuilds the
 batch state from the queue NVM image + slot mirrors without replaying
 completed requests.
@@ -21,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import QueueConfig, as_fault_plan, open_queue
+from repro.api import Combiner, QueueConfig, as_fault_plan
 from repro.distributed.steps import make_serve_step
 from repro.models.transformer import Model
 
@@ -43,12 +45,16 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # admission queue: the facade handle (requests are independent, so
-        # the MultiFIFO relaxation across internal queues is invisible to
-        # clients -- relax_rank is left unbounded)
-        self.queue = open_queue(QueueConfig(
+        # admission path: the flat-combining front-end over the facade
+        # (requests are independent, so the MultiFIFO relaxation across
+        # internal queues is invisible to clients -- relax_rank is left
+        # unbounded).  submit() only announces; the intents coalesce with
+        # the next step's refill into ONE device round, and detectable
+        # recovery gives every in-flight admission a crash verdict.
+        self.combiner = Combiner(config=QueueConfig(
             Q=queue_shards, S=8, R=queue_depth, W=16,
-            backend=queue_backend, driver=queue_driver))
+            backend=queue_backend, driver=queue_driver, detectable=True))
+        self.queue = self.combiner.queue
         self.requests: Dict[int, Request] = {}
         self._rid = 0
         # decode slots
@@ -78,7 +84,11 @@ class ServingEngine:
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
         rid = self.register(prompt, max_new)
-        self.queue.enqueue_all([rid])     # durable admission
+        # announce the admission (durable intent); the enqueue itself rides
+        # the next combined round -- admission becomes durable QUEUE state
+        # at the flush, and the ticket carries a verdict if a crash lands
+        # first, so exactly-once recovery still holds
+        self.combiner.submit_enqueue([rid])
         return rid
 
     def _admit_one(self, rid: int, slot: int) -> None:
@@ -115,7 +125,10 @@ class ServingEngine:
         decode one token for every live slot.  Returns #live slots."""
         free = [i for i in range(self.max_batch) if self.slot_done[i]]
         if free:
-            rids, _ = self.queue.dequeue_n(len(free))
+            # one combined round: every pending submit() intent plus this
+            # refill demand flushes as one coalesced wave set
+            ticket = self.combiner.submit_dequeue(len(free))
+            rids = ticket.result()
             for rid, slot in zip(rids, free):
                 self._admit_one(int(rid), slot)
         live = ~self.slot_done
@@ -150,7 +163,9 @@ class ServingEngine:
         return self.completed
 
     def queue_backlog(self) -> int:
-        return self.queue.backlog()
+        # durable queue items PLUS announced-but-unflushed admissions (the
+        # drain loop must not exit while intents are still on the board)
+        return self.combiner.backlog()
 
     # -- fault tolerance -------------------------------------------------------------
 
@@ -168,8 +183,11 @@ class ServingEngine:
         admission -- the torn case a slot-based re-admission (and clean-crash
         testing) silently loses.  Durable linearizability of the queue plus
         the completion record make admission exactly-once: a completed
-        request is never replayed, a surviving one never double-queued."""
-        self.queue.crash(as_fault_plan(torn, seed=seed))
+        request is never replayed, a surviving one never double-queued.
+        The combiner's crash surface resolves announced-but-unflushed
+        admission intents to verdicts on the way (they were never
+        dispatched, so they land in the re-admission set below)."""
+        self.combiner.crash(as_fault_plan(torn, seed=seed))
         survivors = set(self.queue.peek_items())
         # volatile state reset
         self.caches = None
@@ -182,4 +200,7 @@ class ServingEngine:
         for rid in lost:
             self.requests[rid].generated = []
         if lost:
-            self.queue.enqueue_all(lost)
+            # re-admission goes back through the front-end (one coalesced
+            # round); result() re-raises QueueFull if the pool cannot take
+            # the replays, preserving the facade-era failure surface
+            self.combiner.submit_enqueue(lost).result()

@@ -51,7 +51,13 @@ def test_negotiation_grants_and_clamps():
     # a satisfiable relax_rank leaves Q alone
     g, c = negotiate(QueueConfig(Q=2, relax_rank=7))
     assert g.Q == 2
-    assert c.durable_linearizability and c.detectable_recovery
+    assert c.durable_linearizability
+    # detectable recovery is the combiner's grant: per-op verdicts need the
+    # durable intent journal, so it must be REQUESTED (detectable=True,
+    # which open_combiner sets); bare facade opens do not get it
+    assert not c.detectable_recovery
+    g, c = negotiate(QueueConfig(Q=2, detectable=True))
+    assert c.detectable_recovery
     assert c.ticket_width == 32 and c.capacity_hint == 2 * 16 * 256
 
 

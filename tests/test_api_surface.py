@@ -15,6 +15,8 @@ import repro.api as api
 API_SURFACE = [
     "Capabilities",
     "CapabilityError",
+    "CombinedSweep",
+    "Combiner",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",
@@ -25,14 +27,18 @@ API_SURFACE = [
     "RebaseReport",
     "SweepResult",
     "TICKET_HORIZON",
+    "Ticket",
+    "Verdict",
     "as_fault_plan",
     "negotiate",
+    "open_combiner",
     "open_queue",
 ]
 
 # the module files that implement the package (importing them is fine;
 # they are not part of the guarded name surface)
-_SUBMODULES = {"config", "faults", "maintenance", "queue", "compat"}
+_SUBMODULES = {"combine", "config", "faults", "maintenance", "queue",
+               "compat"}
 
 
 def test_api_all_matches_snapshot():

