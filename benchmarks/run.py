@@ -67,6 +67,30 @@ ROW_SCHEMA = {
     "producer_batch": "items per producer submission (combine rows; the "
                       "amortization claim is at batch <= 8)",
     "producers": "submitting producers per pass (combine rows)",
+    "pipeline_rows": "pipeline_sync2 = the PR-7 synchronous two-dispatch "
+                     "combine path; pipeline_fused1 = the fused "
+                     "submit_round program (ONE dispatch per flush, "
+                     "synchronous retire); pipeline_fused2 = the same at "
+                     "pipeline depth 2 (flush returns with the round in "
+                     "flight; the deferred sync lands at the next flush's "
+                     "retirement) -- all at EQUAL TOTAL OPS (--pipeline "
+                     "rows)",
+    "pipeline_depth": "combiner flush pipeline depth (pipeline rows; "
+                      "depth-1 keeps PR-7 synchronous observables)",
+    "single_dispatch": "whether the row's flushes ran the fused "
+                       "submit_round program (pipeline rows)",
+    "flushes_per_pass": "consecutive combiner flushes per measured pass "
+                        "(pipeline rows; the depth-2 overlap window)",
+    "dispatches_per_flush": "device-program launches per combiner flush, "
+                            "from the facade's dispatch counters (pipeline "
+                            "rows; the single-dispatch claim is 2 -> 1)",
+    "host_syncs_per_flush": "blocking device_get syncs per combiner flush "
+                            "(pipeline rows; board-staging backlog syncs "
+                            "excluded)",
+    "dispatches_per_op": "device-program launches per completed queue op "
+                         "(pipeline rows)",
+    "host_syncs_per_op": "blocking host syncs per completed queue op "
+                         "(pipeline rows)",
     "wave_occupancy": "completed ops / (fused rounds * Q * drive width): "
                       "the fraction of the fabric's lane capacity the "
                       "rounds actually filled (combine rows, computed "
@@ -126,6 +150,12 @@ def main() -> None:
                          "per-call vs combined submission at producer batch "
                          "<= 8 and equal total ops, plus the PBQueue "
                          "machine-model baseline (combine_* rows + claim)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="additionally measure the single-dispatch fused "
+                         "round + overlapped flush pipeline: synchronous "
+                         "two-dispatch combine vs fused depth-1 vs fused "
+                         "depth-2 at equal total ops (pipeline_* rows + "
+                         "claims)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -205,6 +235,8 @@ def main() -> None:
         rowsw += wave_engine.run_api(backends=backends, fast=args.fast)
     if args.combine:
         rowsw += wave_engine.run_combine(backends=backends, fast=args.fast)
+    if args.pipeline:
+        rowsw += wave_engine.run_pipeline(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]
@@ -297,6 +329,44 @@ def main() -> None:
             amortized &= (speed >= 1.5 and cb[be]["psyncs_per_op"]
                           < pc[be]["psyncs_per_op"])
         claims["combine"]["claim_combining_amortization"] = amortized
+    # PR-8 tentpole: the fused submit_round program must collapse the
+    # per-flush dispatch count 2 -> 1 on BOTH backends (counted by the
+    # facade's dispatch-economy counters, not inferred), and the depth-2
+    # overlapped pipeline must beat the PR-7 synchronous combine path by
+    # >= 1.3x at equal total ops.  The speedup pass/fail is gated on the
+    # compiled (jnp) backend only -- under interpret-mode Pallas the
+    # Python-traced kernel dominates both sides and overlap is noise; its
+    # ratio is reported informationally.
+    pl = {}
+    for r in rowsw:
+        for tag in ("pipeline_sync2", "pipeline_fused1", "pipeline_fused2"):
+            if r["path"].startswith(tag + "/"):
+                pl.setdefault(r["backend"], {})[tag] = r
+    if pl:
+        claims["pipeline"] = {}
+        single = True
+        for be, d in pl.items():
+            s2 = d["pipeline_sync2"]
+            f1 = d["pipeline_fused1"]
+            f2 = d["pipeline_fused2"]
+            claims["pipeline"][f"dispatches_per_flush_sync2_{be}"] = (
+                s2["dispatches_per_flush"])
+            claims["pipeline"][f"dispatches_per_flush_fused_{be}"] = (
+                f2["dispatches_per_flush"])
+            claims["pipeline"][f"host_syncs_per_flush_sync2_{be}"] = (
+                s2["host_syncs_per_flush"])
+            claims["pipeline"][f"host_syncs_per_flush_fused_{be}"] = (
+                f2["host_syncs_per_flush"])
+            single &= (s2["dispatches_per_flush"] >= 1.999
+                       and f1["dispatches_per_flush"] <= 1.001
+                       and f2["dispatches_per_flush"] <= 1.001)
+            speed = f2["ops_per_sec"] / max(s2["ops_per_sec"], 1e-9)
+            claims["pipeline"][f"depth2_vs_sync2_{be}"] = speed
+            claims["pipeline"][f"fused1_vs_sync2_{be}"] = (
+                f1["ops_per_sec"] / max(s2["ops_per_sec"], 1e-9))
+            if be == "jnp":
+                claims["pipeline"]["claim_pipeline_speedup"] = speed >= 1.3
+        claims["pipeline"]["claim_single_dispatch_flush"] = single
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

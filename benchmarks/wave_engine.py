@@ -430,6 +430,104 @@ def run_combine(backends: Sequence[str] = ("jnp", "pallas"),
     return rows
 
 
+def run_pipeline(backends: Sequence[str] = ("jnp", "pallas"),
+                 fast: bool = False, Q: int = 4, S: int = 8):
+    """Dispatch-pipeline economy (DESIGN.md §10): consecutive combiner
+    flushes at EQUAL TOTAL OPS, three rows per backend:
+
+      * ``pipeline_sync2/...``  -- the PR-7 synchronous combine path
+        (``single_dispatch=False``): every flush pays TWO device dispatches
+        (enqueue_all + dequeue_n) and blocks on the host sync in between,
+      * ``pipeline_fused1/...`` -- the fused ``submit_round`` program at
+        depth 1: ONE dispatch per flush, still retired synchronously,
+      * ``pipeline_fused2/...`` -- depth 2: the flush returns with the
+        round in flight; the host builds the next board while the device
+        runs, and the single deferred sync lands at the NEXT flush's
+        retirement (``settle()`` drains the tail).
+
+    ``dispatches_per_flush`` / ``host_syncs_per_flush`` come from the
+    facade's dispatch-economy counters (deltas over the measured passes,
+    the board-staging ``backlog`` syncs excluded), so the 2 -> 1 collapse
+    behind ``claim_single_dispatch_flush`` is counted, not inferred.
+    ``psyncs_per_op`` reports WITH the intent journal (combine-row
+    discipline).  Iso-capacity pallas pools + interleaved medians per the
+    run_combine discipline."""
+    from repro.api.combine import Combiner
+
+    rows = []
+    batch = 8                            # producer batch size (<= 8)
+    for backend in backends:
+        r = 256 if backend == "jnp" else 64
+        w = 16 if backend == "jnp" else 8
+        S_q = S if backend == "jnp" else max(2, 2 * S // Q)
+        n_prod = 8 if backend == "jnp" else 4
+        flushes = 8 if backend == "jnp" else 3
+        reps = (6 if fast else 12) if backend == "jnp" else 3
+        total = flushes * n_prod * batch     # items per pass (enq == deq)
+
+        variants = (("pipeline_sync2", False, 1),
+                    ("pipeline_fused1", True, 1),
+                    ("pipeline_fused2", True, 2))
+        passes, combs, counts = {}, {}, {}
+        for tag, single, depth in variants:
+            comb = Combiner(config=QueueConfig(
+                Q=Q, S=S_q, R=r, W=w, backend=backend, detectable=True),
+                pipeline_depth=depth, single_dispatch=single)
+            cnt = {"dispatches": 0, "host_syncs": 0, "flushes": 0}
+
+            def one_pass(comb=comb, cnt=cnt):
+                d0 = comb.queue.dispatches
+                s0 = comb.queue.host_syncs
+                for f in range(flushes):     # consecutive flushes: the
+                    for p in range(n_prod):  # depth-2 overlap window
+                        comb.submit_enqueue(
+                            np.arange(batch, dtype=np.int32)
+                            + (f * n_prod + p) * batch, producer=p)
+                    for p in range(n_prod):
+                        comb.submit_dequeue(batch, producer=p)
+                    comb.flush()
+                comb.settle()                # drain the in-flight tail
+                cnt["dispatches"] += comb.queue.dispatches - d0
+                cnt["host_syncs"] += comb.queue.host_syncs - s0
+                cnt["flushes"] += flushes
+                assert comb.backlog() == 0   # outside the counted window
+
+            one_pass()                       # warm pass compiles every shape
+            passes[tag], combs[tag], counts[tag] = one_pass, comb, cnt
+
+        ts = {tag: [] for tag, _, _ in variants}
+        for _ in range(reps):                # interleaved medians (run_api)
+            for tag, _, _ in variants:
+                t0 = time.perf_counter()
+                passes[tag]()
+                ts[tag].append(time.perf_counter() - t0)
+
+        for tag, single, depth in variants:
+            dt = float(np.median(ts[tag]))
+            cnt = counts[tag]
+            st = combs[tag].persist_stats()
+            ops = max(1, int(st["ops_total"]))
+            psyncs = int(st["psyncs_total_with_journal"])
+            dpf = cnt["dispatches"] / max(1, cnt["flushes"])
+            spf = cnt["host_syncs"] / max(1, cnt["flushes"])
+            rows.append({
+                "path": f"{tag}/{backend}/q{Q}",
+                "backend": backend, "shards": Q,
+                "producer_batch": batch, "producers": n_prod,
+                "pipeline_depth": depth, "single_dispatch": single,
+                "flushes_per_pass": flushes,
+                "us_per_call": dt * 1e6 / flushes,
+                "ops_per_sec": 2 * total / dt,
+                "dispatches_per_flush": dpf,
+                "host_syncs_per_flush": spf,
+                "dispatches_per_op": dpf * flushes / (2 * total),
+                "host_syncs_per_op": spf * flushes / (2 * total),
+                "pwbs_per_op": float(st["pwbs_total"]) / ops,
+                "psyncs_per_op": psyncs / ops,
+            })
+    return rows
+
+
 def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
                  fast: bool = False, Q: int = 4, S: int = 8):
     """Torn-crash recovery latency (queue size x crash point x backend) --

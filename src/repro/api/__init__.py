@@ -20,17 +20,19 @@ from repro.api.combine import (CombinedSweep, Combiner, Ticket, Verdict,
                                open_combiner)
 from repro.api.config import (TICKET_HORIZON, Capabilities, CapabilityError,
                               QueueConfig, negotiate)
+from repro.api.delivery import Delivery
 from repro.api.faults import FaultPlan, SweepResult, as_fault_plan
 from repro.api.maintenance import (Maintenance, RebaseNotQuiescent,
                                    RebaseReport)
 from repro.api.queue import (PersistentQueue, QueueFull, QueueState,
-                             open_queue)
+                             RoundFlight, RoundResult, open_queue)
 
 __all__ = [
     "Capabilities",
     "CapabilityError",
     "CombinedSweep",
     "Combiner",
+    "Delivery",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",
@@ -39,6 +41,8 @@ __all__ = [
     "QueueState",
     "RebaseNotQuiescent",
     "RebaseReport",
+    "RoundFlight",
+    "RoundResult",
     "SweepResult",
     "TICKET_HORIZON",
     "Ticket",

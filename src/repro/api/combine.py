@@ -9,8 +9,15 @@ occupancy.  This module is the production shape from Flat-Combining-Based
 Persistent Data Structures: producers *announce* intents and get lightweight
 tickets; a combiner drains the whole pending board, coalesces it into
 maximal waves (every lane of the Q-sharded fabric filled before a dispatch
-is paid), routes ONE ``enqueue_all`` + ONE ``dequeue_n`` through the
-existing megakernel/driver path, and delivers completions per ticket.
+is paid), routes ONE fused ``submit_round`` device program -- the enqueue
+half and the dequeue half in a single dispatch
+(``driver.fabric_submit_round``, DESIGN.md §10) -- through the existing
+megakernel/driver path, and delivers completions per ticket.  Flushes are
+PIPELINED: a flush dispatches its round and returns with the results held
+as in-flight device futures (a ``_Flight``); the single blocking host sync
+is deferred to retirement (``Ticket.result()`` / ``settle()`` / the next
+flush exceeding ``pipeline_depth``), so at depth >= 2 the host builds the
+next board while the device executes the previous round.
 
 Ordering: the board preserves global submission order, and round-robin
 placement of a concatenation equals round-robin placement of the parts
@@ -44,14 +51,16 @@ from repro.core.intent import (DEQ, ENQ, IntentJournal, IntentRecord,
 class Ticket:
     """A producer's handle on one announced operation.
 
-    States: pending (on the board) -> done | failed (resolved by a flush)
-    or crashed (resolved by a crash, ``verdict`` attached).  ``result()``
-    on a pending ticket makes the CALLER the combiner (it flushes the
-    board), so per-call-style code degenerates gracefully instead of
-    deadlocking."""
+    States: pending (on the board, or dispatched in an in-flight round) ->
+    done | failed (resolved when its flush retires) or crashed (resolved by
+    a crash, ``verdict`` attached).  ``result()`` on a pending ticket makes
+    the CALLER the combiner: it retires the ticket's in-flight round (the
+    deferred host sync of the pipelined flush) or, if the ticket is still
+    on the board, flushes it -- so per-call-style code degenerates
+    gracefully instead of deadlocking."""
 
     __slots__ = ("id", "producer", "kind", "items", "n", "status",
-                 "_value", "_error", "verdict", "_combiner")
+                 "_value", "_error", "verdict", "_combiner", "_flight")
 
     def __init__(self, tid: int, producer: int, kind: str,
                  items: Sequence[int], n: int, combiner: "Combiner"):
@@ -65,17 +74,25 @@ class Ticket:
         self._error: Optional[BaseException] = None
         self.verdict: Optional[Verdict] = None
         self._combiner = combiner
+        self._flight: Optional["_Flight"] = None
 
     def done(self) -> bool:
         return self.status != "pending"
 
     def result(self) -> Any:
         """The operation's outcome: for an enqueue ticket the list of items
-        durably enqueued; for a dequeue ticket the dequeued items.  Raises
-        the per-ticket ``QueueFull`` if THIS ticket's items are stuck, and
-        ``RuntimeError`` on a crashed ticket (read ``verdict`` instead)."""
-        if self.status == "pending":
-            self._combiner.flush()
+        durably enqueued; for a dequeue ticket the dequeued items.  Blocks
+        (retires the in-flight round) if the ticket's flush is still
+        pipelined.  Raises the per-ticket ``QueueFull`` if THIS ticket's
+        items are stuck, and ``RuntimeError`` on a crashed ticket (read
+        ``verdict`` instead)."""
+        while self.status == "pending":
+            # a flush at depth >= 2 may leave this ticket dispatched-but-
+            # unretired (flight attached); the second pass retires it
+            if self._flight is not None:
+                self._combiner._retire(self._flight)
+            else:
+                self._combiner.flush()
         if self.status == "failed":
             raise self._error
         if self.status == "crashed":
@@ -153,10 +170,39 @@ class CombinedSweep:
         return agg
 
 
-def open_combiner(config: QueueConfig = QueueConfig()) -> "Combiner":
+class _Flight:
+    """One dispatched-but-unretired flush (the pipelined flush unit).
+
+    Carries the round's tickets and host-side split oracle (offsets into
+    the concatenated enqueue batch) plus the queue-level ``RoundFlight`` of
+    un-synced device futures.  Created by ``flush``; consumed exactly once
+    by ``Combiner._retire_one`` (delivery, accounting, commit record) --
+    or abandoned by a crash, in which case its tickets resolve to verdicts
+    through the journal like any other outstanding intents."""
+
+    __slots__ = ("tickets", "enq_ts", "deq_ts", "offsets", "all_items",
+                 "total_n", "handle", "round_id")
+
+    def __init__(self, tickets, enq_ts, deq_ts, offsets, all_items,
+                 total_n, handle, round_id):
+        self.tickets = tickets
+        self.enq_ts = enq_ts
+        self.deq_ts = deq_ts
+        self.offsets = offsets
+        self.all_items = all_items
+        self.total_n = total_n
+        self.handle = handle          # repro.api.queue.RoundFlight
+        self.round_id = round_id
+
+
+def open_combiner(config: QueueConfig = QueueConfig(),
+                  pipeline_depth: int = 1) -> "Combiner":
     """Open a queue with detectable recovery negotiated
-    (``detectable=True``) and wrap it in a ``Combiner``."""
-    return Combiner(config=config.replace(detectable=True))
+    (``detectable=True``) and wrap it in a ``Combiner``.
+    ``pipeline_depth >= 2`` overlaps flush dispatch with retirement
+    (DESIGN.md §10)."""
+    return Combiner(config=config.replace(detectable=True),
+                    pipeline_depth=pipeline_depth)
 
 
 class Combiner:
@@ -164,25 +210,41 @@ class Combiner:
 
     ``submit_enqueue``/``submit_dequeue`` append tickets to the pending
     board (and intent records to the durable journal -- one pwb each);
-    ``flush`` is the combiner pass: ONE journal psync, ONE coalesced
-    ``enqueue_all`` of every pending enqueue item in submission order, ONE
-    coalesced ``dequeue_n`` of the total pending demand, completions
-    delivered per ticket, and a lazily-persisted commit record.  Any
-    caller may flush (flat combining's "whoever holds the lock combines");
-    this model is single-threaded so ``flush`` is simply a method."""
+    ``flush`` is the combiner pass: ONE journal psync, then the whole board
+    -- every pending enqueue item in submission order plus the total
+    dequeue demand -- as ONE fused ``submit_round`` device program, with
+    completions delivered per ticket at retirement and a lazily-persisted
+    commit record.  Any caller may flush (flat combining's "whoever holds
+    the lock combines"); this model is single-threaded so ``flush`` is
+    simply a method.
 
-    def __init__(self, queue=None, config: Optional[QueueConfig] = None):
+    ``pipeline_depth`` bounds the dispatched-but-unretired flushes: depth 1
+    (default) retires each round before ``flush`` returns (synchronous
+    observables, the PR-7 contract); depth >= 2 leaves up to depth-1
+    rounds in flight so the host builds the next board while the device
+    executes -- the deferred sync lands in ``Ticket.result()`` /
+    ``settle()`` / the flush that overflows the depth.  ``single_dispatch
+    =False`` (or a host-driver queue) falls back to the two-dispatch
+    ``enqueue_all`` + ``dequeue_n`` flush, kept as the parity/bench
+    baseline."""
+
+    def __init__(self, queue=None, config: Optional[QueueConfig] = None,
+                 pipeline_depth: int = 1, single_dispatch: bool = True):
         from repro.api.queue import open_queue
         if queue is None:
             queue = open_queue(config if config is not None
                                else QueueConfig(detectable=True))
         self.queue = queue
         self.journal = IntentJournal()
+        self.pipeline_depth = max(1, int(pipeline_depth))
+        self.single_dispatch = bool(single_dispatch)
         self._board: List[Ticket] = []
+        self._flights: List[_Flight] = []
         self._next_id = 0
         self._round = 0
         self._lanes = 0        # lanes actually filled across all rounds
         self._rounds = 0       # fused wave rounds dispatched by flushes
+        self.flushes = 0       # combiner passes that dispatched work
 
     # -- producer side ------------------------------------------------------
 
@@ -220,24 +282,47 @@ class Combiner:
 
     def flush(self, shard: int = 0, max_waves: int = 10_000) -> int:
         """Drain the board as ONE coalesced round.  Returns the number of
-        tickets resolved.  ``QueueFull`` mid-round never escapes: it is
-        split per ticket (only tickets whose items are stuck fail; every
-        other ticket -- including every dequeue ticket -- completes)."""
+        tickets dispatched.  On the fused path (device driver, the
+        default) the round goes out as ONE device program and this method
+        retires only what ``pipeline_depth`` requires -- at depth 1 the
+        board is fully resolved on return; at depth >= 2 the tickets stay
+        ``pending`` with the round in flight.  ``QueueFull`` mid-round
+        never escapes: it is split per ticket at retirement (only tickets
+        whose items are stuck fail; every other ticket -- including every
+        dequeue ticket -- completes)."""
         board, self._board = self._board, []
         if not board:
             return 0
         # announce-before-apply: every intent of this round durable in ONE
-        # psync (also drains the previous round's lazy commit record)
+        # psync (also drains the previous rounds' lazy commit records)
         self.journal.sync()
+        self.flushes += 1
         enq_ts = [t for t in board if t.kind == ENQ]
         deq_ts = [t for t in board if t.kind == DEQ]
-
-        # -- enqueue phase: one maximal coalesced call ----------------------
         offsets: List[int] = []
         all_items: List[int] = []
         for t in enq_ts:
             offsets.append(len(all_items))
             all_items.extend(t.items)
+        total_n = sum(t.n for t in deq_ts)
+
+        if self.single_dispatch and self.queue.driver == "device":
+            # -- fused path: ONE dispatch, retirement deferred --------------
+            fl = _Flight(
+                tickets=board, enq_ts=enq_ts, deq_ts=deq_ts,
+                offsets=offsets, all_items=all_items, total_n=total_n,
+                handle=self.queue.submit_round(all_items, total_n, shard,
+                                               max_waves),
+                round_id=self._round)
+            self._round += 1
+            for t in board:
+                t._flight = fl
+            self._flights.append(fl)
+            while len(self._flights) > self.pipeline_depth - 1:
+                self._retire_one(self._flights[0])
+            return len(board)
+
+        # -- two-dispatch fallback (host driver / single_dispatch=False) ----
         if all_items:
             try:
                 rounds = self.queue.enqueue_all(all_items, shard,
@@ -252,7 +337,6 @@ class Combiner:
                 t.status, t._value = "done", []
 
         # -- dequeue phase: one coalesced call for the total demand ---------
-        total_n = sum(t.n for t in deq_ts)
         if total_n > 0:
             got, rounds = self.queue.dequeue_n(total_n, shard,
                                                max_waves=max_waves)
@@ -270,6 +354,72 @@ class Combiner:
         self.journal.commit(self._round, [t.id for t in board])
         self._round += 1
         return len(board)
+
+    # -- retirement: the deferred host sync of a pipelined flush ------------
+
+    def in_flight(self) -> int:
+        """Dispatched-but-unretired flushes."""
+        return len(self._flights)
+
+    def settle(self) -> int:
+        """Retire every in-flight flush (delivery + accounting + commit).
+        Returns the number of flushes retired."""
+        n = 0
+        while self._flights:
+            self._retire_one(self._flights[0])
+            n += 1
+        return n
+
+    def _retire(self, fl: _Flight) -> None:
+        """Retire ``fl`` -- and, first, every older flight: retirement is
+        FIFO so commit records and the service-cursor fold stay in
+        dispatch order."""
+        while self._flights and self._flights[0] is not fl:
+            self._retire_one(self._flights[0])
+        if self._flights and self._flights[0] is fl:
+            self._retire_one(fl)
+
+    def _retire_one(self, fl: _Flight) -> None:
+        """One flight's retirement: the round's single blocking host sync
+        (``retire_round``), per-ticket delivery/`QueueFull` split, lane
+        accounting, and the lazy commit record.  Delivery laziness cannot
+        reorder verdict resolution: the commit record is written HERE,
+        strictly after the sync proves the round's effects durable -- an
+        earlier crash finds the commit absent and the tickets still
+        outstanding in the journal (DESIGN.md §10)."""
+        self._flights.remove(fl)
+        res = self.queue.retire_round(fl.handle)
+        for t in fl.tickets:
+            t._flight = None
+        # enqueue resolution: mirror the two-dispatch flush exactly
+        if fl.all_items:
+            if res.pending is not None:
+                from repro.api.queue import QueueFull
+                self._split_queue_full(
+                    QueueFull(res.pending, res.enq_rounds,
+                              pending_pos=res.pending_pos),
+                    fl.enq_ts, fl.offsets, fl.all_items)
+            else:
+                self._charge(len(fl.all_items), max(res.enq_rounds, 1))
+                for t in fl.enq_ts:
+                    t.status, t._value = "done", list(t.items)
+        else:
+            for t in fl.enq_ts:
+                t.status, t._value = "done", []
+        # dequeue delivery: slice the zero-copy view per ticket
+        if fl.total_n > 0:
+            got = res.delivered
+            self._charge(len(got), max(res.deq_rounds, 1))
+            k = 0
+            for t in fl.deq_ts:
+                t.status, t._value = "done", got[k:k + t.n]
+                k += len(t._value)
+        else:
+            for t in fl.deq_ts:
+                t.status, t._value = "done", []
+        # commit rides the NEXT round's announcement drain (lazy: losing it
+        # is harmless, verdict resolution re-derives it from the image)
+        self.journal.commit(fl.round_id, [t.id for t in fl.tickets])
 
     def _charge(self, lanes: int, rounds: int) -> None:
         self._lanes += int(lanes)
@@ -327,15 +477,38 @@ class Combiner:
 
     def persist_stats(self) -> Dict[str, Any]:
         """The queue's persist accounting plus the journal's: the combined
-        path's psync economy reported honestly (journal psyncs included)."""
+        path's psync economy reported honestly (journal psyncs included).
+
+        The lazy commit tail is charged too: commit records "ride the next
+        sync", so at any measurement point the journal may hold records
+        that still OWE a drain -- ``psyncs_total_with_journal`` adds that
+        one deferred psync whenever ``journal_pending_records`` is
+        non-zero, closing the accounting gap where bench ``psyncs_per_op``
+        rows under-reported by exactly the last round's commit."""
         st = dict(self.queue.persist_stats())
+        pend = self.journal.pending_records()
         st["journal_pwbs"] = self.journal.pwb_count
         st["journal_psyncs"] = self.journal.psync_count
+        st["journal_pending_records"] = pend
         st["psyncs_total_with_journal"] = (st["psyncs_total"]
-                                          + self.journal.psync_count)
+                                          + self.journal.psync_count
+                                          + (1 if pend else 0))
         return st
 
     # -- crash surface ------------------------------------------------------
+
+    def _inflight_dispatched(self) -> List[int]:
+        """Enqueue items of every dispatched-but-unretired flush.  Their
+        device rounds COMPLETED (the flush ran; only the host never
+        synced), so at a crash they are durable queue state -- they join
+        the ``dispatched`` set for verdict resolution, and their commit
+        records were never written (commits land at retirement), so the
+        journal still lists their tickets as outstanding.  That ordering is
+        why delivery laziness cannot mis-resolve a verdict: an unretired
+        round is always journal-outstanding, and its items' fate reads off
+        the recovered image like any in-flight wave's."""
+        return [it for fl in self._flights for t in fl.enq_ts
+                for it in t.items]
 
     def _plan_wave(self):
         """The crashed round's in-flight wave: under round-robin placement
@@ -368,7 +541,8 @@ class Combiner:
         verdicts = resolve_verdicts(
             self.journal.outstanding(),
             frozenset(self.queue.peek_items()),
-            dispatched=frozenset(wave))
+            dispatched=(frozenset(wave)
+                        | frozenset(self._inflight_dispatched())))
         self._resolve_crashed(verdicts)
         return verdicts
 
@@ -386,7 +560,8 @@ class Combiner:
         verdicts = resolve_verdicts(
             self.journal.outstanding(),
             frozenset(self.queue.peek_items()),
-            dispatched=frozenset(plan.enq_items))
+            dispatched=(frozenset(plan.enq_items)
+                        | frozenset(self._inflight_dispatched())))
         self._resolve_crashed(verdicts)
         return verdicts
 
@@ -402,7 +577,7 @@ class Combiner:
         verdicts = resolve_verdicts(
             self.journal.outstanding(),
             frozenset(self.queue.peek_items()),
-            dispatched=frozenset())
+            dispatched=frozenset(self._inflight_dispatched()))
         for rec in lost:
             verdicts[rec.ticket] = Verdict(
                 rec.ticket, rec.producer, rec.kind, completed=False,
@@ -424,12 +599,22 @@ class Combiner:
             shard=shard, seed=seed, evict_rate=evict_rate,
             n_points=n_points))
         records = tuple(r for r in self.journal.outstanding())
-        return CombinedSweep(sweep=sweep, records=records,
-                             dispatched=frozenset(wave), queue=self.queue)
+        return CombinedSweep(
+            sweep=sweep, records=records,
+            dispatched=(frozenset(wave)
+                        | frozenset(self._inflight_dispatched())),
+            queue=self.queue)
 
     def _resolve_crashed(self, verdicts: Dict[int, Verdict]) -> None:
-        board, self._board = self._board, []
+        # in-flight flushes die with the host: their results were never
+        # synced, so the tickets resolve to verdicts (never "done") -- the
+        # commit record only ever lands AFTER retirement's sync, so the
+        # journal still lists every one of them as outstanding
+        flights, self._flights = self._flights, []
+        board = [t for fl in flights for t in fl.tickets] + self._board
+        self._board = []
         for t in board:
+            t._flight = None
             t.status = "crashed"
             t.verdict = verdicts.get(t.id)
         if board:

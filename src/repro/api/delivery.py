@@ -1,0 +1,98 @@
+"""Lazy zero-copy delivery container for dequeue results (DESIGN.md §10).
+
+The facade used to convert every dequeue result with an eager per-call
+``.tolist()`` -- a host-side O(n) conversion paid on the hot path whether
+or not the caller ever touches the Python list.  ``Delivery`` wraps the
+``np.asarray`` view over the device-get buffer (zero copy: the slice
+aliases the transfer buffer) and materializes the Python-int list exactly
+once, on first list-shaped access.  Callers that only measure ``len`` or
+feed the result straight back into numpy never pay the conversion at all.
+
+The container is deliberately list-shaped: ``==``/``+``/slicing/iteration
+and truthiness all behave like the ``List[int]`` the facade used to
+return, so serving/pipeline callers (and every existing test) see stable
+delivery semantics -- only the conversion COST moved off the hot path.
+A CI lint guard keeps ``.tolist()`` out of ``api/queue.py`` and
+``api/combine.py``; this module is the one place the conversion lives.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class Delivery(Sequence):
+    """A dequeue result: zero-copy numpy view + one-shot lazy list."""
+
+    __slots__ = ("_arr", "_list")
+
+    def __init__(self, arr) -> None:
+        self._arr = np.asarray(arr)
+        self._list: Optional[List[int]] = None
+
+    # -- the ONE materialization point --------------------------------------
+
+    def _items(self) -> List[int]:
+        if self._list is None:
+            # C-speed, yields Python ints; cached so repeated list-shaped
+            # access (slicing per ticket, equality in tests) converts once
+            self._list = self._arr.tolist()
+        return self._list
+
+    def tolist(self) -> List[int]:
+        """The materialized Python list (cached; copied so callers cannot
+        mutate the shared cache)."""
+        return list(self._items())
+
+    # -- numpy-shaped access: never materializes ----------------------------
+
+    def __array__(self, dtype=None, copy=None):
+        a = self._arr if dtype is None else self._arr.astype(dtype)
+        return np.array(a) if copy else a
+
+    @property
+    def view(self) -> np.ndarray:
+        """The underlying zero-copy numpy view."""
+        return self._arr
+
+    def __len__(self) -> int:
+        return int(self._arr.shape[0])
+
+    def __bool__(self) -> bool:
+        return self._arr.shape[0] > 0
+
+    # -- list-shaped access: materializes once ------------------------------
+
+    def __getitem__(self, i):
+        return self._items()[i]
+
+    def __iter__(self):
+        return iter(self._items())
+
+    def __eq__(self, other):
+        if isinstance(other, Delivery):
+            other = other._items()
+        if isinstance(other, (list, tuple)):
+            return self._items() == list(other)
+        return NotImplemented
+
+    def __ne__(self, other):
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    __hash__ = None
+
+    def __add__(self, other):
+        if isinstance(other, Delivery):
+            other = other._items()
+        return self._items() + list(other)
+
+    def __radd__(self, other):
+        return list(other) + self._items()
+
+    def __repr__(self) -> str:
+        return f"Delivery({self._items()!r})"
+
+
+__all__ = ["Delivery"]

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import Capabilities, QueueConfig, negotiate
+from repro.api.delivery import Delivery
 from repro.api.faults import FaultPlan, SweepResult
 from repro.core import driver as _drv
 from repro.core.fabric import (fabric_crash_sweep, fabric_dequeue_scan,
@@ -54,6 +55,47 @@ class QueueState(NamedTuple):
 
     vol: object   # WaveState stack: the volatile image
     nvm: object   # WaveState stack: the durable image
+
+
+class RoundFlight:
+    """One in-flight fused ``submit_round`` dispatch (DESIGN.md §10).
+
+    Holds the un-synced device futures of one round plus the host-side
+    placement oracle (rows / batch positions) needed to attribute a
+    terminal ``QueueFull`` at retirement.  ``retire_round`` performs the
+    round's ONE host sync and folds the accounting; until then the queue's
+    persist counters and ``_take`` cursor deliberately lag the device."""
+
+    __slots__ = ("dev", "take_dev", "rows", "pos", "pend_sizes", "shard",
+                 "n", "max_waves", "result")
+
+    def __init__(self, dev, take_dev, rows, pos, pend_sizes, shard, n,
+                 max_waves):
+        self.dev = dev              # (done, e_rounds, e_pwbs, e_ops,
+        #                              out, got, d_rounds, take,
+        #                              d_pwbs, d_ops) device futures
+        self.take_dev = take_dev    # the round's output service cursor
+        self.rows = rows            # [Q, N] placed items (host oracle)
+        self.pos = pos              # batch position of rows[q][j]
+        self.pend_sizes = pend_sizes
+        self.shard = shard
+        self.n = n
+        self.max_waves = max_waves
+        self.result: Optional["RoundResult"] = None
+
+    @property
+    def retired(self) -> bool:
+        return self.result is not None
+
+
+class RoundResult(NamedTuple):
+    """A retired round's host-side outcome (see ``retire_round``)."""
+
+    delivered: Delivery            # the dequeued items (zero-copy view)
+    enq_rounds: int
+    deq_rounds: int
+    pending: Optional[List[int]]       # stuck items (None = all enqueued)
+    pending_pos: Optional[List[int]]   # their batch positions
 
 
 class QueueFull(RuntimeError):
@@ -136,6 +178,13 @@ class PersistentQueue:
         # charged to the consumer shard that drove the round
         self.psyncs = np.zeros((self.P,), np.int64)
         self.ops = np.zeros((self.Q, self.P), np.int64)
+        # dispatch-economy counters (DESIGN.md §10): device program launches
+        # and blocking host syncs issued by the driver paths.  The fused
+        # submit_round spends exactly one of each per flush; the bench
+        # ``--pipeline`` rows divide these deltas into per-flush/per-op
+        # ratios (claim_single_dispatch_flush).
+        self.dispatches = 0
+        self.host_syncs = 0
 
     # -- pytree state handle --------------------------------------------------
 
@@ -237,7 +286,9 @@ class PersistentQueue:
             self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
             jnp.int32(max_waves), W=self.device_wave, backend=self.backend,
             fused_round=self.fused_round)
+        self.dispatches += 1
         rounds, pwbs, ops = jax.device_get((rounds, pwbs, ops))
+        self.host_syncs += 1
         self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
         self.ops[:, shard] += np.asarray(ops, np.int64)
         self.psyncs[shard] += int(rounds)
@@ -245,6 +296,7 @@ class PersistentQueue:
             # only the wave budget can stop the driver loop short of done;
             # the [Q, N] done flags are fetched on this cold path only
             done = np.asarray(jax.device_get(done))
+            self.host_syncs += 1
             if not done.all():
                 stuck = [(int(rows[q][j]), pos[q][j])
                          for q in range(self.Q)
@@ -272,8 +324,10 @@ class PersistentQueue:
             self._vol, self._nvm, oks, submitted = fabric_enqueue_scan(
                 self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
                 backend=self.backend)
+            self.dispatches += 1
             oks = np.asarray(jax.device_get(oks))
             sub = np.asarray(jax.device_get(submitted))
+            self.host_syncs += 2
             fused = 0
             for q in range(Q):
                 chunk = pend[q][:k_used * W]
@@ -303,6 +357,7 @@ class PersistentQueue:
         """Per-queue live-item upper bound (sum of per-segment tail-head)."""
         tails = np.asarray(jax.device_get(self._vol.tails))
         heads = np.asarray(jax.device_get(self._vol.heads))
+        self.host_syncs += 2
         return np.maximum(tails - heads, 0).sum(axis=1)
 
     def _plan_counts(self, remaining: int, bl: np.ndarray) -> np.ndarray:
@@ -339,27 +394,30 @@ class PersistentQueue:
     def dequeue_n(self, n: int, shard: int = 0, max_waves: int = 10_000):
         """Dequeue up to n items, round-robin across queues with work
         stealing; stops early when the queue is verifiably empty.  Returns
-        (items, fused_wave_count)."""
+        (items, fused_wave_count); ``items`` is a list-shaped ``Delivery``
+        over the zero-copy result view (lazy materialization -- the eager
+        per-call list conversion is off the hot path, DESIGN.md §10)."""
         if self.driver == "host":
             return self._dequeue_n_host(n, shard, max_waves)
         if n <= 0:
-            return [], 0
+            return Delivery(np.empty((0,), np.int32)), 0
         cap = bucket_pow2(n)
         (self._vol, self._nvm, out, got, rounds, take, pwbs,
          ops) = _drv.fabric_dequeue_n(
-            self._vol, self._nvm, jnp.int32(n), jnp.int32(self._take),
+            self._vol, self._nvm, jnp.int32(n),
+            jnp.asarray(self._take, jnp.int32),
             jnp.int32(shard), jnp.int32(max_waves),
             W=self.device_wave, cap=cap, backend=self.backend,
             fused_round=self.fused_round)
+        self.dispatches += 1
         out, got, rounds, take, pwbs, ops = jax.device_get(
             (out, got, rounds, take, pwbs, ops))
+        self.host_syncs += 1
         self._take = int(take)
         self.pwbs[:, shard] += np.asarray(pwbs, np.int64)
         self.ops[:, shard] += np.asarray(ops, np.int64)
         self.psyncs[shard] += int(rounds)
-        # .tolist() (C-speed, yields Python ints) -- a per-element int()
-        # comprehension costs more than the facade's whole dispatch
-        return np.asarray(out[:int(got)]).tolist(), int(rounds)
+        return Delivery(np.asarray(out)[:int(got)]), int(rounds)
 
     def _dequeue_n_host(self, n: int, shard: int = 0,
                         max_waves: int = 10_000):
@@ -385,7 +443,9 @@ class PersistentQueue:
             self._vol, self._nvm, outs = fabric_dequeue_scan(
                 self._vol, self._nvm, jnp.asarray(counts), jnp.int32(shard),
                 W, backend=self.backend)
+            self.dispatches += 1
             outl = np.asarray(jax.device_get(outs))      # [Q, k_used, W]
+            self.host_syncs += 1
             # round-robin service order: wave-major, then queue rotation
             act_all = []
             for k in range(k_used):
@@ -432,6 +492,93 @@ class PersistentQueue:
     def backlog(self) -> int:
         """Live-item upper bound across every internal queue."""
         return int(self._backlogs().sum())
+
+    # -- fused round: the combiner hot path (DESIGN.md §10) -------------------
+
+    def submit_round(self, items, n: int, shard: int = 0,
+                     max_waves: int = 10_000) -> RoundFlight:
+        """Dispatch one fused combined round -- the whole enqueue batch plus
+        a dequeue demand of ``n`` as ONE device program
+        (``driver.fabric_submit_round``) -- and return immediately with a
+        ``RoundFlight`` of un-synced device futures.  No host sync happens
+        here: state futures thread straight into the next dispatch (donated
+        buffers alias across consecutive rounds), so the host builds the
+        next flush while the device executes this one.  ``retire_round``
+        pays the round's single sync and resolves delivery/accounting;
+        enqueue semantics (placement, FIFO, ``QueueFull`` payload) are
+        bit-identical to ``enqueue_all`` + ``dequeue_n``."""
+        assert self.driver == "device", \
+            "submit_round is the device-driver hot path (driver='device')"
+        place0 = self._place
+        pend = self._placed(items)
+        pos = [list(range((q - place0) % self.Q,
+                          (q - place0) % self.Q + self.Q * pend[q].size,
+                          self.Q))
+               for q in range(self.Q)]
+        N = bucket_pow2(max([p.size for p in pend] + [1]))
+        rows = np.full((self.Q, N), -1, np.int32)
+        for q in range(self.Q):
+            rows[q, :pend[q].size] = pend[q]
+        cap = bucket_pow2(max(int(n), 1))
+        # scalars go in as np.int32 (strong-typed, same jit cache entry as a
+        # device scalar) and ``rows`` as the raw numpy board: pjit's C++
+        # dispatch converts them in-path, ~4x cheaper per flush than eager
+        # jnp.asarray wrappers -- this call IS the combiner hot loop
+        take = self._take
+        if isinstance(take, (int, np.integer)):
+            take = np.int32(take)
+        dev = _drv.fabric_submit_round(
+            self._vol, self._nvm, rows, np.int32(n),
+            take, np.int32(shard),
+            np.int32(max_waves), W=self.device_wave, cap=cap,
+            backend=self.backend, fused_round=self.fused_round)
+        self._vol, self._nvm = dev[0], dev[1]
+        self.dispatches += 1
+        take_dev = dev[9]
+        # the service cursor stays a DEVICE scalar while rounds are in
+        # flight; consumers of self._take coerce via jnp.asarray, and
+        # retire_round collapses it to a host int once synced
+        self._take = take_dev
+        return RoundFlight(dev=dev[2:], take_dev=take_dev, rows=rows,
+                           pos=pos, pend_sizes=[p.size for p in pend],
+                           shard=int(shard), n=int(n),
+                           max_waves=int(max_waves))
+
+    def retire_round(self, flight: RoundFlight) -> RoundResult:
+        """Retire one in-flight round: the round's ONE blocking host sync.
+        Folds persist accounting (pwbs/ops per queue, psyncs = enqueue +
+        dequeue rounds -- identical totals to the two-dispatch path),
+        detects a terminal ``QueueFull`` from the done flags, and returns
+        the delivery as a zero-copy ``Delivery`` view.  Idempotent."""
+        if flight.retired:
+            return flight.result
+        (done, e_rounds, e_pwbs, e_ops, out, got, d_rounds, take,
+         d_pwbs, d_ops) = jax.device_get(flight.dev)
+        self.host_syncs += 1
+        flight.dev = None                       # futures consumed
+        if self._take is flight.take_dev:       # newest round: cursor synced
+            self._take = int(take)
+        sh = flight.shard
+        self.pwbs[:, sh] += np.asarray(e_pwbs, np.int64)
+        self.pwbs[:, sh] += np.asarray(d_pwbs, np.int64)
+        self.ops[:, sh] += np.asarray(e_ops, np.int64)
+        self.ops[:, sh] += np.asarray(d_ops, np.int64)
+        self.psyncs[sh] += int(e_rounds) + int(d_rounds)
+        pending = pending_pos = None
+        if int(e_rounds) >= flight.max_waves:
+            done = np.asarray(done)
+            if not done.all():
+                stuck = [(int(flight.rows[q][j]), flight.pos[q][j])
+                         for q in range(self.Q)
+                         for j in np.nonzero(~done[q])[0]
+                         if j < flight.pend_sizes[q]]
+                pending = [v for v, _ in stuck]
+                pending_pos = [p for _, p in stuck]
+        flight.result = RoundResult(
+            delivered=Delivery(np.asarray(out)[:int(got)]),
+            enq_rounds=int(e_rounds), deq_rounds=int(d_rounds),
+            pending=pending, pending_pos=pending_pos)
+        return flight.result
 
     # -- fault injection ------------------------------------------------------
 

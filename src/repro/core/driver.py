@@ -308,6 +308,44 @@ def fabric_dequeue_n(vol, nvm, n, take0, shard, max_rounds,
                            b, fused=resolve_fused_round(fused_round, b))
 
 
+# ---------------------------------------------------------------------------
+# fused submit round: enqueue half + dequeue half as ONE device program
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("W", "cap", "backend", "fused_round"),
+                   donate_argnums=(0, 1))
+def fabric_submit_round(vol, nvm, items, n, take0, shard, max_rounds,
+                        W: int, cap: int, backend: BackendLike = "jnp",
+                        fused_round: str = "auto"):
+    """One combiner flush as ONE jitted device program (DESIGN.md §10):
+    the in-device-retry enqueue loop over ``items`` [Q, N] followed by the
+    work-stealing dequeue loop for ``n`` items, sequenced inside a single
+    dispatch.  Bit-identical to ``fabric_enqueue_all`` then
+    ``fabric_dequeue_n`` on the same state -- the two ``while_loop`` bodies
+    are reused verbatim (both megakernel routes included), only the
+    dispatch boundary between them is gone.  The dequeue half runs even if
+    the enqueue half stalled at ``max_rounds``: the caller splits the
+    ``QueueFull`` from the ``done`` flags at retirement, exactly like the
+    combiner's two-dispatch flush did on the host.
+
+    Returns (vol, nvm, done[Q, N], enq_rounds, enq_pwbs[Q], enq_ops[Q],
+    out[:cap], got, deq_rounds, take, deq_pwbs[Q], deq_ops[Q]).  None of
+    the results are synced here -- the caller holds them as device futures
+    and defers the ONE host sync to delivery time, so consecutive rounds
+    (donated vol/nvm threading straight back in) overlap device execution
+    with host-side board building."""
+    b = get_backend(backend)
+    fused = resolve_fused_round(fused_round, b)
+    vol, nvm, done, e_rounds, e_pwbs, e_ops = _enqueue_all_impl(
+        vol, nvm, items, shard, max_rounds, W, b, fused=fused)
+    vol, nvm, out, got, d_rounds, take, d_pwbs, d_ops = _dequeue_n_impl(
+        vol, nvm, n, take0, shard, max_rounds, W, cap, b, fused=fused)
+    return (vol, nvm, done, e_rounds, e_pwbs, e_ops,
+            out, got, d_rounds, take, d_pwbs, d_ops)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("W", "cap", "backend", "fused_round"),
                    donate_argnums=(0, 1))

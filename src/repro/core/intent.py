@@ -76,6 +76,13 @@ class IntentJournal:
         self.pwb_count = 0
         self.psync_count = 0
         self._seq = 0
+        # hot-path indexes: the journal only ever grows, so commit/sync
+        # must not rescan it (a full-records walk per flush turns the
+        # combiner loop quadratic).  ``_pending`` holds the not-yet-durable
+        # tail in append order; ``_open`` maps ticket -> its unresolved
+        # announcement record.
+        self._pending: List[IntentRecord] = []
+        self._open: Dict[int, IntentRecord] = {}
 
     # -- announcements ------------------------------------------------------
 
@@ -87,31 +94,35 @@ class IntentJournal:
                            n=int(n))
         self._seq += 1
         self.records.append(rec)
+        self._pending.append(rec)
+        self._open[ticket] = rec
         self.pwb_count += 1
         return rec
 
     def commit(self, round_id: int, ticket_ids: Sequence[int]) -> None:
         """Append the round's commit record (one pwb, synced lazily) and
-        mark the covered intents resolved."""
+        mark the covered intents resolved.  O(len(ticket_ids)) via the
+        open-ticket index, never a full-journal scan."""
         covered = frozenset(int(t) for t in ticket_ids)
         rec = IntentRecord(seq=self._seq, ticket=-1, producer=-1,
                            kind=COMMIT,
                            items=tuple(sorted(covered)), round_id=round_id)
         self._seq += 1
         self.records.append(rec)
+        self._pending.append(rec)
         self.pwb_count += 1
-        for r in self.records:
-            if r.kind in (ENQ, DEQ) and r.ticket in covered:
+        for t in covered:
+            r = self._open.pop(t, None)
+            if r is not None:
                 r.resolved = True
 
     def sync(self) -> int:
         """Drain every pending record (ONE psync); returns #records made
         durable by this drain."""
-        n = 0
-        for r in self.records:
-            if not r.durable:
-                r.durable = True
-                n += 1
+        n = len(self._pending)
+        for r in self._pending:
+            r.durable = True
+        self._pending.clear()
         self.psync_count += 1
         return n
 
@@ -125,7 +136,7 @@ class IntentJournal:
         ``persistence.torn_mask``.  Lost records are REMOVED (a real
         restart reads only the durable journal); returns them so the
         caller can resolve their tickets as not-completed."""
-        pending = [r for r in self.records if not r.durable]
+        pending = list(self._pending)
         rng = random.Random(seed)
         point = rng.randint(0, len(pending))
         lost: List[IntentRecord] = []
@@ -136,9 +147,22 @@ class IntentJournal:
                 lost.append(r)
         lost_ids = {id(r) for r in lost}
         self.records = [r for r in self.records if id(r) not in lost_ids]
+        self._pending.clear()             # every pending record landed or died
+        for r in lost:
+            if r.kind in (ENQ, DEQ):      # a lost announcement can never be
+                self._open.pop(r.ticket, None)  # resolved by a later commit
         return lost
 
     # -- queries ------------------------------------------------------------
+
+    def pending_records(self) -> int:
+        """Records appended but not yet covered by a psync -- the lazy
+        commit tail that "rides the next sync".  The combiner's
+        ``persist_stats`` charges the drain these records still owe
+        (``psyncs_total_with_journal`` adds one when this is non-zero), so
+        bench ``psyncs_per_op`` rows cannot under-report by deferring the
+        last commit forever."""
+        return len(self._pending)
 
     def outstanding(self) -> List[IntentRecord]:
         """Durable announcements with no durable commit covering them --

@@ -38,12 +38,15 @@ class PersistentDataPipeline:
         self.batch_size = batch_size
         self.seq_len = seq_len
         # device-resident driving through the flat-combining front-end:
-        # produce()/next_batch() cost one device call each, and
+        # produce()/next_batch() cost one fused device call each, and
         # produce_async() lets many workers coalesce their trickle into
-        # ONE maximal round at the next flush
+        # ONE maximal round at the next flush.  pipeline_depth=2: a
+        # produce flush may stay in flight while the host stages the next
+        # board; acknowledgement settles at the deferred sync.
         self.combiner = Combiner(config=QueueConfig(
             Q=n_queues, S=S, R=R, P=n_shards, W=W,
-            backend=backend, driver=driver, detectable=True))
+            backend=backend, driver=driver, detectable=True),
+            pipeline_depth=2)
         self.queue = self.combiner.queue
         self.slab = np.zeros((slab_capacity, seq_len + 1), np.int32)
         self.slab_nvm = np.zeros_like(self.slab)
@@ -96,8 +99,13 @@ class PersistentDataPipeline:
         """Run the combiner pass and settle every resolved produce ticket:
         completed handles become acknowledged; a per-ticket ``QueueFull``
         re-raises (its handles stay un-acked, exactly the pre-combiner
-        failure surface)."""
+        failure surface).  At pipeline depth >= 2 the dispatched round may
+        stay in flight: its tickets settle at the next deferred sync
+        (``next_batch``'s ``result()``, ``produce``, or a later flush)."""
         self.combiner.flush(shard)
+        self._settle()
+
+    def _settle(self) -> None:
         err = None
         still: List[Ticket] = []
         for t in self._pending:
@@ -115,10 +123,17 @@ class PersistentDataPipeline:
 
     def produce(self, n: int, shard: int = 0) -> int:
         """Pull n samples from the source, persist payloads, enqueue handles
-        (one combined round, together with any announced intents).  Returns
-        the number acknowledged (durably enqueued)."""
+        (one combined round, together with any announced intents).
+        Synchronous: retires the round before returning (the async path is
+        ``produce_async``).  Returns the number acknowledged (durably
+        enqueued)."""
         t = self.produce_async(n, shard)
         self.flush(shard)
+        if t.status == "pending":
+            try:
+                t.result()          # deferred sync: retire the round now
+            finally:
+                self._settle()
         return len(t.items)
 
     # -- consumer side ---------------------------------------------------------
@@ -130,7 +145,8 @@ class PersistentDataPipeline:
         ticket = self.combiner.submit_dequeue(self.batch_size,
                                               producer=shard)
         self.flush(shard)       # settles produce tickets too (acked)
-        handles = ticket.result()
+        handles = ticket.result()   # deferred sync: retires the round
+        self._settle()          # tickets resolved by that retirement
         if len(handles) < self.batch_size:
             # partial batch: push back is not allowed (queue semantics);
             # deliver only full batches in this reference impl, so requeue

@@ -49,11 +49,14 @@ class ServingEngine:
         # (requests are independent, so the MultiFIFO relaxation across
         # internal queues is invisible to clients -- relax_rank is left
         # unbounded).  submit() only announces; the intents coalesce with
-        # the next step's refill into ONE device round, and detectable
-        # recovery gives every in-flight admission a crash verdict.
+        # the next step's refill into ONE fused device round, and
+        # detectable recovery gives every in-flight admission a crash
+        # verdict.  pipeline_depth=2: a flush may stay in flight across a
+        # decode step; Ticket.result() pays the deferred sync at refill.
         self.combiner = Combiner(config=QueueConfig(
             Q=queue_shards, S=8, R=queue_depth, W=16,
-            backend=queue_backend, driver=queue_driver, detectable=True))
+            backend=queue_backend, driver=queue_driver, detectable=True),
+            pipeline_depth=2)
         self.queue = self.combiner.queue
         self.requests: Dict[int, Request] = {}
         self._rid = 0

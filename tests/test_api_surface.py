@@ -17,6 +17,7 @@ API_SURFACE = [
     "CapabilityError",
     "CombinedSweep",
     "Combiner",
+    "Delivery",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",
@@ -25,6 +26,8 @@ API_SURFACE = [
     "QueueState",
     "RebaseNotQuiescent",
     "RebaseReport",
+    "RoundFlight",
+    "RoundResult",
     "SweepResult",
     "TICKET_HORIZON",
     "Ticket",
@@ -37,8 +40,8 @@ API_SURFACE = [
 
 # the module files that implement the package (importing them is fine;
 # they are not part of the guarded name surface)
-_SUBMODULES = {"combine", "config", "faults", "maintenance", "queue",
-               "compat"}
+_SUBMODULES = {"combine", "config", "delivery", "faults", "maintenance",
+               "queue", "compat"}
 
 
 def test_api_all_matches_snapshot():
@@ -68,7 +71,22 @@ def test_facade_methods_are_the_documented_surface():
     assert methods == {
         "backlog", "bind", "crash", "crash_and_recover", "dequeue_n",
         "drain", "enqueue_all", "maintenance", "nvm", "peek_items",
-        "peek_items_per_queue", "persist_stats", "plan_torn_wave", "state",
-        "step", "torn_crash_and_recover", "vol",
+        "peek_items_per_queue", "persist_stats", "plan_torn_wave",
+        "retire_round", "state", "step", "submit_round",
+        "torn_crash_and_recover", "vol",
     }, "PersistentQueue public surface drifted; update the snapshot " \
        "deliberately if so"
+
+
+def test_no_tolist_on_delivery_hot_path():
+    """Satellite guard (PR 8): the eager per-call ``.tolist()`` conversion
+    must not reappear on the delivery hot path -- ``Delivery``
+    (api/delivery.py) is the one place list materialization lives.  CI
+    runs the same grep as a lint step."""
+    import pathlib
+    root = pathlib.Path(api.__file__).parent
+    for mod in ("queue.py", "combine.py"):
+        text = (root / mod).read_text()
+        assert ".tolist(" not in text, (
+            f"src/repro/api/{mod} reintroduced .tolist() on the hot path; "
+            "route delivery through repro.api.delivery.Delivery instead")

@@ -1,0 +1,391 @@
+"""Single-dispatch combined rounds + the overlapped flush pipeline (PR 8;
+DESIGN.md §10): bit-exact parity of the fused ``fabric_submit_round``
+program with the two-dispatch ``fabric_enqueue_all`` + ``fabric_dequeue_n``
+sequence (jnp x pallas, megakernel on/off, Q=1/Q=4), combiner parity of
+``single_dispatch=True`` vs the legacy two-dispatch flush (including the
+mid-round QueueFull split), depth-2 pipelining vs depth-1 observables,
+crash semantics with a flush in flight (>= 128-point torn sweeps per
+backend through the UNCHANGED ``check_wave_crash``), the pending-commit
+psync accounting, and delivery-type stability of the zero-copy path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Combiner, Delivery, FaultPlan, QueueConfig, QueueFull,
+                       open_combiner, open_queue)
+from repro.core import driver as _drv
+from repro.core.backend import has_fused_fabric_round
+from repro.core.fabric import fabric_init
+from repro.core.persistence import tree_copy
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _cfg(backend="jnp", **kw):
+    kw.setdefault("Q", 4)
+    kw.setdefault("S", 4)
+    kw.setdefault("R", 16)
+    kw.setdefault("W", 8)
+    return QueueConfig(backend=backend, **kw)
+
+
+def _assert_trees_equal(a, b, msg):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}[leaf {i}]")
+
+
+def _megakernel_axis(backend):
+    return ("off", "on") if has_fused_fabric_round(backend) else ("off",)
+
+
+def _assert_stats_equal(a, b):
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"persist_stats[{k}]")
+
+
+# ---------------------------------------------------------------------------
+# driver-level parity: ONE fused program == the two-dispatch sequence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("Q", (1, 4))
+def test_fabric_submit_round_bit_exact_parity(backend, Q):
+    """``fabric_submit_round`` must be bit-identical to
+    ``fabric_enqueue_all`` followed by ``fabric_dequeue_n`` on the same
+    state -- outputs AND both state trees -- for every megakernel route the
+    backend grants, across several consecutive rounds (the donated buffers
+    thread through)."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    S, R, W = 4, 16, 8
+    for fused_round in _megakernel_axis(backend):
+        vol_a = fabric_init(Q, S, R, 1)
+        nvm_a = fabric_init(Q, S, R, 1)
+        vol_b = tree_copy(vol_a)
+        nvm_b = tree_copy(nvm_a)
+        take_a = jnp.zeros((), jnp.int32)
+        take_b = jnp.zeros((), jnp.int32)
+        nxt = 0
+        for rnd, (n_items, n_deq) in enumerate(
+                ((Q * 6, 3), (Q * 2, Q * 5), (0, 4), (Q * 3, 0))):
+            N = 8
+            rows = np.full((Q, N), -1, np.int32)
+            for j in range(n_items):
+                rows[j % Q, j // Q] = nxt + j
+            nxt += n_items
+            rows = jnp.asarray(rows)
+            cap = 64
+            # two dispatches on state A
+            vol_a, nvm_a, done_a, er_a, epw_a, eop_a = _drv.fabric_enqueue_all(
+                vol_a, nvm_a, rows, jnp.int32(0), jnp.int32(100), W=W,
+                backend=backend, fused_round=fused_round)
+            vol_a, nvm_a, out_a, got_a, dr_a, take_a, dpw_a, dop_a = \
+                _drv.fabric_dequeue_n(
+                    vol_a, nvm_a, jnp.int32(n_deq), take_a, jnp.int32(0),
+                    jnp.int32(100), W=W, cap=cap, backend=backend,
+                    fused_round=fused_round)
+            # ONE dispatch on state B
+            (vol_b, nvm_b, done_b, er_b, epw_b, eop_b, out_b, got_b, dr_b,
+             take_b, dpw_b, dop_b) = _drv.fabric_submit_round(
+                vol_b, nvm_b, rows, jnp.int32(n_deq), take_b, jnp.int32(0),
+                jnp.int32(100), W=W, cap=cap, backend=backend,
+                fused_round=fused_round)
+            for name, a, b in (("done", done_a, done_b), ("er", er_a, er_b),
+                               ("epwbs", epw_a, epw_b), ("eops", eop_a, eop_b),
+                               ("out", out_a, out_b), ("got", got_a, got_b),
+                               ("dr", dr_a, dr_b), ("take", take_a, take_b),
+                               ("dpwbs", dpw_a, dpw_b),
+                               ("dops", dop_a, dop_b)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{fused_round}/round {rnd}: {name}")
+            _assert_trees_equal(vol_a, vol_b,
+                                f"{fused_round}/round {rnd}: vol")
+            _assert_trees_equal(nvm_a, nvm_b,
+                                f"{fused_round}/round {rnd}: nvm")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_facade_submit_round_matches_two_call_path(backend):
+    """Facade-level parity: ``submit_round`` + ``retire_round`` delivers
+    exactly what ``enqueue_all`` + ``dequeue_n`` would, with identical
+    surviving queue contents and identical persist accounting."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    qa = open_queue(_cfg(backend=backend))
+    qb = open_queue(_cfg(backend=backend))
+    items = list(range(20))
+    ra = qa.enqueue_all(items)
+    got_a, dra = qa.dequeue_n(7)
+    fl = qb.submit_round(items, 7)
+    res = qb.retire_round(fl)
+    assert res.pending is None
+    assert res.enq_rounds == ra and res.deq_rounds == dra
+    assert list(res.delivered) == list(got_a)
+    assert sorted(qb.peek_items()) == sorted(qa.peek_items())
+    _assert_stats_equal(qa.persist_stats(), qb.persist_stats())
+    assert qb.dispatches == 1 and qa.dispatches == 2
+    # idempotent retirement
+    assert qb.retire_round(fl) is res
+
+
+# ---------------------------------------------------------------------------
+# combiner parity: fused single-dispatch flush vs the legacy two-dispatch one
+# ---------------------------------------------------------------------------
+
+
+def _drive(comb, flushes=3, n_prod=4, batch=3):
+    tickets = []
+    base = 0
+    for f in range(flushes):
+        fts = []
+        for p in range(n_prod):
+            fts.append(comb.submit_enqueue(
+                range(base + p * batch, base + (p + 1) * batch), producer=p))
+        base += n_prod * batch
+        for p in range(n_prod):
+            fts.append(comb.submit_dequeue(2, producer=p))
+        comb.flush()
+        tickets.append(fts)
+    comb.settle()
+    return tickets
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("Q", (1, 4))
+def test_combiner_single_dispatch_parity(backend, Q):
+    """The fused flush must resolve every ticket exactly as the legacy
+    two-dispatch flush does, at ONE device program per flush (counted by
+    the facade's dispatch counters, not inferred)."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    ca = Combiner(config=_cfg(backend=backend, Q=Q, detectable=True),
+                  single_dispatch=False)
+    cb = Combiner(config=_cfg(backend=backend, Q=Q, detectable=True),
+                  single_dispatch=True)
+    ta = _drive(ca)
+    tb = _drive(cb)
+    for fa, fb in zip(ta, tb):
+        for a, b in zip(fa, fb):
+            assert a.status == b.status == "done"
+            assert list(a.result()) == list(b.result())
+    assert sorted(ca.queue.peek_items()) == sorted(cb.queue.peek_items())
+    _assert_stats_equal(ca.queue.persist_stats(), cb.queue.persist_stats())
+    assert ca.wave_occupancy() == cb.wave_occupancy()
+    assert ca.queue.dispatches == 2 * ca.flushes
+    assert cb.queue.dispatches == 1 * cb.flushes
+
+
+def test_queue_full_split_parity_fused():
+    """A mid-round terminal QueueFull must split per ticket IDENTICALLY on
+    the fused path: same failed tickets, same pending items, same
+    ticket-relative pending positions -- and unrelated tickets (and every
+    dequeue ticket) still complete."""
+    combs = []
+    for single in (False, True):
+        c = Combiner(config=_cfg(Q=1, S=2, R=4, W=4, detectable=True),
+                     single_dispatch=single)
+        t_fit = c.submit_enqueue([1, 2], producer=0)
+        t_stuck = c.submit_enqueue(range(10, 22), producer=1)  # overflows
+        t_deq = c.submit_dequeue(2, producer=2)
+        c.flush(max_waves=3)
+        combs.append((c, t_fit, t_stuck, t_deq))
+    (ca, fa, sa, da), (cb, fb, sb, db) = combs
+    assert fa.status == fb.status == "done"
+    assert sa.status == sb.status == "failed"
+    assert da.status == db.status == "done"
+    assert list(da.result()) == list(db.result())
+    with pytest.raises(QueueFull) as ea:
+        sa.result()
+    with pytest.raises(QueueFull) as eb:
+        sb.result()
+    assert ea.value.pending == eb.value.pending
+    assert ea.value.pending_pos == eb.value.pending_pos
+    assert sorted(ca.queue.peek_items()) == sorted(cb.queue.peek_items())
+
+
+# ---------------------------------------------------------------------------
+# the overlapped flush pipeline: depth-2 observables == depth-1 results
+# ---------------------------------------------------------------------------
+
+
+def test_depth2_pipeline_matches_depth1_results():
+    c1 = open_combiner(_cfg(), pipeline_depth=1)
+    c2 = open_combiner(_cfg(), pipeline_depth=2)
+    t1 = _drive(c1)
+    # depth 2: after each flush (but the retiring ones) a round is in
+    # flight and its tickets are still pending
+    tickets = []
+    base = 0
+    for f in range(3):
+        fts = [c2.submit_enqueue(range(base + p * 3, base + (p + 1) * 3),
+                                 producer=p) for p in range(4)]
+        base += 12
+        fts += [c2.submit_dequeue(2, producer=p) for p in range(4)]
+        c2.flush()
+        assert c2.in_flight() == 1
+        assert all(t.status == "pending" for t in fts)
+        tickets.append(fts)
+    assert c2.settle() == 1                # the tail flight
+    for fa, fb in zip(t1, tickets):
+        for a, b in zip(fa, fb):
+            assert b.status == "done"
+            assert list(a.result()) == list(b.result())
+    assert sorted(c1.queue.peek_items()) == sorted(c2.queue.peek_items())
+    _assert_stats_equal(c1.queue.persist_stats(), c2.queue.persist_stats())
+
+
+def test_result_on_inflight_ticket_retires_the_flight():
+    """``Ticket.result()`` on a dispatched-but-unretired ticket pays the
+    deferred sync (and retires OLDER flights first, preserving FIFO
+    retirement)."""
+    c = open_combiner(_cfg(), pipeline_depth=3)
+    t1 = c.submit_enqueue([1, 2, 3])
+    c.flush()
+    t2 = c.submit_enqueue([4, 5])
+    c.flush()
+    assert c.in_flight() == 2
+    assert t2.status == t1.status == "pending"
+    assert t2.result() == [4, 5]           # retires flight 1 THEN flight 2
+    assert t1.status == "done"             # FIFO: the older one came along
+    assert c.in_flight() == 0
+    assert t1.result() == [1, 2, 3]
+
+
+def test_take_cursor_not_clobbered_by_older_retire():
+    """With two rounds in flight, retiring the OLDER round must not regress
+    the service cursor the NEWER round's dispatch advanced."""
+    c = open_combiner(_cfg(Q=2), pipeline_depth=3)
+    c.submit_enqueue(range(12))
+    d1 = c.submit_dequeue(4)
+    c.flush()
+    d2 = c.submit_dequeue(4)
+    c.flush()
+    assert c.in_flight() == 2
+    # Q-relaxed FIFO: assert the SETS -- a clobbered cursor would re-deliver
+    # d1's items to d2 or skip items entirely
+    assert sorted(d1.result()) == list(range(4))
+    assert sorted(d2.result()) == list(range(4, 8))
+    assert sorted(c.queue.drain()) == list(range(8, 12))
+
+
+# ---------------------------------------------------------------------------
+# crash semantics with a flush in flight
+# ---------------------------------------------------------------------------
+
+
+def test_crash_with_inflight_flight_resolves_verdicts():
+    """A crash while a flush is in flight: its device round completed (only
+    the host never synced), so the enqueue ticket's verdict reads completed
+    off the recovered image, the dequeue ticket never completes (its
+    response died with the host), and ``result()`` raises -- never
+    delivers."""
+    c = open_combiner(_cfg(), pipeline_depth=2)
+    c.submit_enqueue([1, 2, 3]).result()   # pre-contents feed the dequeue
+    te = c.submit_enqueue([7, 8, 9])
+    td = c.submit_dequeue(1)               # consumes a pre-round item
+    c.flush()
+    assert c.in_flight() == 1 and te.status == "pending"
+    verdicts = c.crash(FaultPlan("clean"))
+    assert te.status == "crashed" and td.status == "crashed"
+    assert verdicts[te.id].completed
+    assert sorted(verdicts[te.id].survived) == [7, 8, 9]
+    assert not verdicts[td.id].completed
+    with pytest.raises(RuntimeError):
+        te.result()
+    # the in-flight round's effects were durable: 3 + 3 items minus the
+    # dequeued one, and the journal does not keep the tickets outstanding
+    assert len(c.queue.peek_items()) == 5
+    assert not c.journal.outstanding()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_torn_sweep_with_flush_in_flight(backend):
+    """>= 128 torn crash points of a round dispatched while ANOTHER flush
+    is still in flight: queue-level recovery passes the UNCHANGED
+    ``check_wave_crash`` at every (point, queue), every outstanding ticket
+    (the in-flight flight's included) resolves at every point, and the
+    in-flight enqueue items count as dispatched."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    c = open_combiner(_cfg(backend=backend), pipeline_depth=2)
+    c.submit_enqueue(range(500, 508)).result()       # pre-wave contents
+    inflight = c.submit_enqueue([900, 901, 902])
+    c.flush()                                         # stays in flight
+    assert c.in_flight() == 1
+    for p in range(8):
+        c.submit_enqueue([p * 10 + j for j in range(4)], producer=p)
+    c.submit_dequeue(6)
+    sweep = c.crash_sweep(n_points=128, seed=5)
+    assert sweep.sweep.n_points == 128
+    assert {900, 901, 902} <= set(sweep.dispatched)
+    assert inflight.id in {r.ticket for r in sweep.records}
+    agg = sweep.check()
+    assert agg["verdicts"] == 128 * len(sweep.records)
+    # the in-flight round's items are durable at EVERY point (its wave
+    # completed before the crash; only the host sync was pending)
+    for point in (0, 63, 127):
+        v = sweep.verdicts_at(point)[inflight.id]
+        assert v.completed and list(v.survived) == [900, 901, 902]
+    # forensics: board, flight and queue untouched
+    assert c.in_flight() == 1 and c.pending() == 9
+
+
+# ---------------------------------------------------------------------------
+# accounting + delivery-type stability
+# ---------------------------------------------------------------------------
+
+
+def test_psync_accounting_charges_pending_commit():
+    """The lazy commit record owes one psync until the next drain:
+    ``psyncs_total_with_journal`` must charge it (the PR-7 accounting gap),
+    and the charge disappears once a later sync drains the record."""
+    c = open_combiner(_cfg())
+    c.submit_enqueue([1, 2, 3])
+    c.flush()
+    st = c.persist_stats()
+    assert st["journal_pending_records"] > 0
+    assert st["psyncs_total_with_journal"] == (
+        st["psyncs_total"] + st["journal_psyncs"] + 1)
+    c.journal.sync()
+    st = c.persist_stats()
+    assert st["journal_pending_records"] == 0
+    assert st["psyncs_total_with_journal"] == (
+        st["psyncs_total"] + st["journal_psyncs"])
+
+
+def test_delivery_is_list_shaped_and_zero_copy():
+    """Regression: the facade's dequeue results are ``Delivery`` -- numpy
+    access never materializes, list-shaped access behaves exactly like the
+    ``List[int]`` the facade used to return."""
+    q = open_queue(_cfg(Q=1))          # strict FIFO: delivery order = range
+    q.enqueue_all(range(10))
+    got, _ = q.dequeue_n(6)
+    assert isinstance(got, Delivery)
+    assert isinstance(got.view, np.ndarray)
+    assert got.view.dtype == np.int32
+    assert got._list is None                   # len/array access is lazy
+    assert len(got) == 6 and np.asarray(got).sum() == sum(range(6))
+    assert got._list is None
+    assert got == list(range(6))               # materializes once, cached
+    assert got[2] == 2 and got[1:3] == [1, 2]
+    assert all(isinstance(x, int) for x in got)
+    assert got + [9] == [0, 1, 2, 3, 4, 5, 9]
+    assert [9] + got == [9, 0, 1, 2, 3, 4, 5]
+    assert got.tolist() == list(range(6))
+    empty, _ = q.dequeue_n(0)
+    assert isinstance(empty, Delivery) and not empty and len(empty) == 0
+    # combiner tickets deliver the same shapes
+    c = open_combiner(_cfg())
+    c.submit_enqueue([50, 51])
+    t = c.submit_dequeue(2)
+    c.flush()
+    assert t.result() == [50, 51] or sorted(t.result()) == [50, 51]
+    assert all(isinstance(x, int) for x in t.result())
