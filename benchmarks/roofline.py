@@ -6,6 +6,7 @@ repro.launch.dryrun) and emits the EXPERIMENTS.md tables.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
@@ -89,10 +90,8 @@ def main():
     emit_table(rows, "16x16")
     emit_table(rows, "2x16x16")
     emit_summary(rows)
-    try:
+    with contextlib.suppress(ValueError):
         pick_hillclimb(rows)
-    except ValueError:
-        pass
 
 
 if __name__ == "__main__":

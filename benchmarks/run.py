@@ -107,7 +107,8 @@ def _shard_list(text: str):
         counts = tuple(int(s) for s in text.split(",") if s.strip())
     except ValueError:
         raise argparse.ArgumentTypeError(
-            f"--shards wants comma-separated positive ints, got {text!r}")
+            f"--shards wants comma-separated positive ints, "
+            f"got {text!r}") from None
     if not counts or any(c < 1 for c in counts):
         raise argparse.ArgumentTypeError(
             f"--shards wants at least one positive int, got {text!r}")

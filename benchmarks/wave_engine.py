@@ -164,7 +164,8 @@ def run(W: int = 256, R: int = 4096, S: int = 8, iters: int = 200,
         q = _open(Qmax, S_q, r, w, backend)
         q.enqueue_all(list(range(2 * r)))
         n_rec = 20 if backend == "jnp" else 3
-        dt = _time(lambda: fabric_recover(q.nvm, backend=backend).vals, n_rec)
+        dt = _time(lambda q=q, backend=backend:
+                   fabric_recover(q.nvm, backend=backend).vals, n_rec)
         rows.append({
             "path": f"wave_recovery/{backend}/q{Qmax}",
             "backend": backend, "shards": Qmax,
@@ -196,7 +197,7 @@ def run_churn(backends: Sequence[str] = ("jnp", "pallas"),
             chunk = Qi * 2 * r          # one full pool fill per cycle
             nxt = 0
 
-            def cycle():
+            def cycle(q=q, chunk=chunk, backend=backend, Qi=Qi):
                 nonlocal nxt
                 q.enqueue_all(list(range(nxt, nxt + chunk)))
                 nxt += chunk
@@ -272,7 +273,7 @@ def run_api(backends: Sequence[str] = ("jnp", "pallas"),
         nvm = fabric_init(Q, S, r, 1)
         cap = bucket_pow2(total)
 
-        def direct_pass(vol, nvm):
+        def direct_pass(vol, nvm, backend=backend):
             drows = np.full((Q, bucket_pow2(-(-total // Q))), -1, np.int32)
             for qq in range(Q):
                 place = items[qq::Q]
@@ -573,7 +574,7 @@ def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
                 img = jax.vmap(apply_delta)(nvm_pre, delta, mask)
                 jax.block_until_ready(img.vals)
                 dt = _time(
-                    lambda img=img: fabric_recover(
+                    lambda img=img, backend=backend: fabric_recover(
                         img, backend=backend).vals, n_time)
                 rows.append({
                     "path": f"wave_recovery_torn/{backend}/q{Q}",
@@ -584,8 +585,10 @@ def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
                 })
             key = jax.random.PRNGKey(0)
             dt = _time(
-                lambda: fabric_crash_sweep(nvm_pre, delta, key, n_sweep,
-                                           backend=backend)[0].vals, n_time)
+                lambda nvm_pre=nvm_pre, delta=delta, key=key, \
+                       backend=backend:
+                fabric_crash_sweep(nvm_pre, delta, key, n_sweep,
+                                   backend=backend)[0].vals, n_time)
             rows.append({
                 "path": f"wave_recovery_sweep/{backend}/q{Q}",
                 "backend": backend, "shards": Q,

@@ -10,6 +10,11 @@
 4. Maintenance: the quiescent int32 ticket rebase (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+The durability/dispatch invariants this file leans on (persist-before-sync,
+<=2 persistence instructions/op, np.int32 dispatch discipline) are checked
+statically by  PYTHONPATH=src python -m repro.analysis.qlint src
+(DESIGN.md §11).
 """
 from repro.api import FaultPlan, QueueConfig, open_queue
 from repro.core.harness import drain, pairs_workload, random_schedule, run_epoch

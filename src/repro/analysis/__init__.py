@@ -1,0 +1,22 @@
+"""repro.analysis -- qlint: the durability & dispatch static-analysis
+suite (DESIGN.md §11).
+
+Two layers over the queue fabric:
+
+  * Layer 1 (``jaxpr_rules``): trace the jit entry points and verify the
+    persistence discipline of the COMPILED program -- psyncs dominated by
+    the pwb records they cover, the paper's <=2-persistence-instructions
+    budget re-derived statically, fused driver branches scatter-free.
+  * Layer 2 (``ast_rules``): repo-specific source lint -- np.int32
+    dispatch-arg discipline, no hot-path ``.tolist()``, explicit jit
+    donation/static declarations, donated-buffer reuse.
+
+Plus the runtime companions: ``sanitize`` (QLINT_SANITIZE=1 poisons
+donated buffers for the whole test suite) and ``cache_churn`` (steady-
+state recompile detector).  CLI: ``python -m repro.analysis.qlint``.
+"""
+from repro.analysis.rules import (Finding, Rule, SimpleRule, SourceFile,
+                                  all_rules, register)
+
+__all__ = ["Finding", "Rule", "SimpleRule", "SourceFile", "all_rules",
+           "register"]

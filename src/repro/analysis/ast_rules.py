@@ -1,0 +1,264 @@
+"""Layer-2 qlint rules: repo-specific AST lint over ``src/`` (DESIGN.md
+§11d-f).
+
+These are the hygiene rules generic linters cannot know: which functions
+are jit dispatch sites, which of their buffers are donated, and which
+modules are the delivery hot path.  All repo knowledge comes from
+``repro.analysis.registry``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis import registry as reg
+from repro.analysis.rules import Finding, SimpleRule, SourceFile, register
+
+_STMT_TYPES = (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr,
+               ast.Return, ast.Raise, ast.Assert, ast.If, ast.For,
+               ast.While, ast.With, ast.Try)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _matches_module(path: str, modules: Iterable[str]) -> bool:
+    norm = path.replace("\\", "/")
+    return any(norm.endswith(m) for m in modules)
+
+
+# ---------------------------------------------------------------------------
+# eager-wrapper: np.int32 scalars at jit dispatch sites, never jnp wrappers
+# ---------------------------------------------------------------------------
+
+
+def _eager_wrapper(src: SourceFile) -> List[Finding]:
+    if not _matches_module(src.path, reg.HOT_DISPATCH_MODULES):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if terminal_name(node.func) not in reg.DONATING_ENTRY_POINTS \
+                and terminal_name(node.func) not in reg.JIT_ENTRY_POINTS:
+            continue
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        for a in args:
+            if not isinstance(a, ast.Call):
+                continue
+            name = dotted_name(a.func)
+            if name in reg.EAGER_WRAPPERS:
+                findings.append(Finding(
+                    "eager-wrapper", src.path, a.lineno,
+                    f"eager {name}(...) argument at a jit dispatch site "
+                    f"({terminal_name(node.func)}): each wrapper is its own "
+                    "dispatched device program (~700us/flush on the "
+                    "combiner path) -- pass np.int32 scalars / raw numpy "
+                    "arrays and let the jit boundary place them"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# no-tolist: the facade delivery path must never host-sync item-by-item
+# ---------------------------------------------------------------------------
+
+
+def _no_tolist(src: SourceFile) -> List[Finding]:
+    if not _matches_module(src.path, reg.HOT_DELIVERY_MODULES):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "tolist":
+            findings.append(Finding(
+                "no-tolist", src.path, node.lineno,
+                ".tolist() in the facade hot path: one host sync per call "
+                "and a Python list copy -- use np.asarray(jax.device_get(...)) "
+                "once, or a zero-copy Delivery view"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# jit-decl: no argless jax.jit -- state-carrying entry points must declare
+# donation/static structure explicitly
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = ("jax.jit", "jit")
+_JIT_KWARGS = {"donate_argnums", "donate_argnames", "static_argnums",
+               "static_argnames"}
+
+
+def _jit_decl(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(line: int, what: str):
+        findings.append(Finding(
+            "jit-decl", src.path, line,
+            f"{what} without donate_argnums/static_argnums: entry points "
+            "carrying state pytrees must declare their buffer discipline "
+            "explicitly (donate hot state; mark shape-affecting scalars "
+            "static)"))
+
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call) and dotted_name(node.func) in _JIT_NAMES:
+            if not any(kw.arg in _JIT_KWARGS for kw in node.keywords):
+                flag(node.lineno, "argless jax.jit(...)")
+        elif isinstance(node, ast.Call) \
+                and dotted_name(node.func) in ("functools.partial", "partial") \
+                and node.args and dotted_name(node.args[0]) in _JIT_NAMES \
+                and not any(kw.arg in _JIT_KWARGS for kw in node.keywords):
+            flag(node.lineno, "functools.partial(jax.jit)")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call) \
+                        and dotted_name(dec) in _JIT_NAMES:
+                    flag(dec.lineno, "bare @jax.jit decorator")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# donation-reuse: donated buffers are dead to the caller after dispatch
+# ---------------------------------------------------------------------------
+
+
+def _parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _enclosing(node: ast.AST, parents: Dict[ast.AST, ast.AST],
+               types) -> Optional[ast.AST]:
+    cur = parents.get(node)
+    while cur is not None and not isinstance(cur, types):
+        cur = parents.get(cur)
+    return cur
+
+
+def _path_nodes(scope: ast.AST, path: str
+                ) -> Tuple[List[ast.AST], List[ast.AST]]:
+    """(loads, stores) of the exact dotted ``path`` within ``scope``."""
+    loads: List[ast.AST] = []
+    stores: List[ast.AST] = []
+    for n in ast.walk(scope):
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and dotted_name(n) == path:
+            ctx = getattr(n, "ctx", None)
+            if isinstance(ctx, ast.Store):
+                stores.append(n)
+            elif isinstance(ctx, ast.Load):
+                loads.append(n)
+    return loads, stores
+
+
+def _image_role(path: Optional[str]) -> Optional[str]:
+    """'vol' / 'nvm' when a dotted path names a state image."""
+    if not path:
+        return None
+    leaf = path.rsplit(".", 1)[-1].lstrip("_")
+    if leaf in ("vol", "vols"):
+        return "vol"
+    if leaf in ("nvm", "nvms"):
+        return "nvm"
+    return None
+
+
+def _donation_reuse(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    parents = _parent_map(src.tree)
+    scopes = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)
+
+    for node in ast.walk(src.tree):
+        # -- image aliasing: vol/nvm rebound to the same live object -------
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+            trole, vrole = _image_role(dotted_name(tgt)), \
+                _image_role(dotted_name(val))
+            if trole and vrole and trole != vrole:
+                findings.append(Finding(
+                    "donation-reuse", src.path, node.lineno,
+                    f"{dotted_name(tgt)} aliased to {dotted_name(val)}: the "
+                    "volatile and NVM images must never share buffers "
+                    "(donation would free both) -- deep-copy through "
+                    "persistence.crash_recover_images, the sole sanctioned "
+                    "copy point"))
+
+        if not isinstance(node, ast.Call):
+            continue
+        fname = terminal_name(node.func)
+        donated = reg.DONATING_ENTRY_POINTS.get(fname or "")
+        if not donated:
+            continue
+        scope = _enclosing(node, parents, scopes) or src.tree
+        stmt = _enclosing(node, parents, _STMT_TYPES)
+        if stmt is None:
+            continue
+        call_nodes = set(map(id, ast.walk(node)))
+        stmt_end = getattr(stmt, "end_lineno", stmt.lineno)
+        for pos in donated:
+            if pos >= len(node.args):
+                continue
+            path = dotted_name(node.args[pos])
+            if path is None:
+                continue            # not a trackable simple reference
+            loads, stores = _path_nodes(scope, path)
+            # rebinding in the dispatching statement itself (the idiomatic
+            # `vol, nvm, ... = entry(vol, nvm, ...)`) retires the old ref
+            if any(stmt.lineno <= s.lineno <= stmt_end for s in stores):
+                continue
+            after = sorted(s.lineno for s in stores if s.lineno > stmt_end)
+            horizon = after[0] if after else 10 ** 9
+            bad = [ld for ld in loads
+                   if id(ld) not in call_nodes
+                   and stmt_end < ld.lineno <= horizon]
+            if bad:
+                findings.append(Finding(
+                    "donation-reuse", src.path, bad[0].lineno,
+                    f"{path} read after being donated to {fname}() at line "
+                    f"{node.lineno}: donated buffers may already be freed "
+                    "or aliased by the result -- rebind from the call's "
+                    "return value first (crash_recover_images is the only "
+                    "sanctioned way to clone an image)"))
+    return findings
+
+
+register(SimpleRule(
+    id="eager-wrapper", kind="ast",
+    doc="no eager jnp scalar/array wrappers at jit dispatch sites in the "
+        "hot modules (np.int32 discipline)",
+    fn=_eager_wrapper))
+
+register(SimpleRule(
+    id="no-tolist", kind="ast",
+    doc="no .tolist() on the facade delivery hot path",
+    fn=_no_tolist))
+
+register(SimpleRule(
+    id="jit-decl", kind="ast",
+    doc="no argless jax.jit on state-carrying functions (explicit "
+        "donate/static declarations)",
+    fn=_jit_decl))
+
+register(SimpleRule(
+    id="donation-reuse", kind="ast",
+    doc="donated (vol, nvm) buffers are never read by the caller after "
+        "dispatch; images never alias",
+    fn=_donation_reuse))

@@ -1,0 +1,93 @@
+"""jit-cache-churn detector (DESIGN.md §11g).
+
+A steady-state workload must hit a FIXED set of compiled programs: any
+recompile in round 2 of an identical round-1 workload means a dispatch
+site leaks non-hashable-but-varying structure into the jit cache (python
+float scalars with drifting values are fine; varying shapes, weak-typed
+wrappers or fresh static closures are not) -- the exact regression class
+the np.int32 dispatch discipline exists to prevent.
+
+``measure(workload)`` runs the workload twice and snapshots
+``_cache_size()`` of every registered jit entry point between runs; the
+``cache-churn`` rule fails on any growth in the second run.  This
+executes device code, so the CLI gates it behind ``--churn``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.analysis.registry import DONATING_DEFINITIONS
+from repro.analysis.rules import Finding, SimpleRule, register
+
+#: non-donating cold entries worth watching too
+_EXTRA = {
+    "repro.core.wave": ("wave_step_delta", "crash_sweep"),
+    "repro.core.fabric": ("fabric_step_delta", "fabric_crash_sweep"),
+}
+
+
+def entry_points() -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    for table in (DONATING_DEFINITIONS, _EXTRA):
+        for mod_name, names in table.items():
+            mod = importlib.import_module(mod_name)
+            for name in names:
+                fn = getattr(mod, name)
+                if getattr(fn, "__qlint_sanitized__", False):
+                    fn = fn.__wrapped__               # sanitizer-transparent
+                if hasattr(fn, "_cache_size"):
+                    out[f"{mod_name}.{name}"] = fn
+    return out
+
+
+def _snapshot(fns: Dict[str, object]) -> Dict[str, int]:
+    return {name: fn._cache_size() for name, fn in fns.items()}
+
+
+def default_workload() -> None:
+    """A small representative facade run: open, enqueue, dequeue, flush a
+    combined round, torn-crash sweep.  Shapes are quantized exactly like
+    production callers, so a second identical run must be all cache hits."""
+    from repro.api import QueueConfig, open_queue
+    q = open_queue(QueueConfig(Q=2, S=2, R=32, W=8))
+    q.enqueue_all(list(range(1, 25)))
+    got = q.dequeue_n(16)
+    assert len(got) == 16
+    q.enqueue_all(list(range(100, 108)))
+    q.dequeue_n(4)
+
+
+def measure(workload: Optional[Callable[[], None]] = None,
+            ) -> List[Tuple[str, int, int]]:
+    """Run ``workload`` twice; return [(entry point, round-1 cache size,
+    round-2 cache size)] for every entry the workload touched."""
+    wl = workload or default_workload
+    fns = entry_points()
+    wl()
+    before = _snapshot(fns)
+    wl()
+    after = _snapshot(fns)
+    return [(name, before[name], after[name]) for name in sorted(fns)
+            if after[name] > 0]
+
+
+def churn_findings(workload: Optional[Callable[[], None]] = None,
+                   ) -> List[Finding]:
+    findings: List[Finding] = []
+    for name, n1, n2 in measure(workload):
+        if n2 > n1:
+            findings.append(Finding(
+                "cache-churn", name, 0,
+                f"jit cache grew {n1} -> {n2} entries on an identical "
+                "second workload round: a dispatch site recompiles in "
+                "steady state (varying shapes or non-canonical scalar "
+                "types reaching the jit boundary)"))
+    return findings
+
+
+register(SimpleRule(
+    id="cache-churn", kind="runtime",
+    doc="no jit-cache growth across two identical workload rounds "
+        "(steady-state recompile detector)",
+    fn=lambda _=None: churn_findings()))

@@ -1,0 +1,666 @@
+"""Layer-1 qlint rules: jaxpr analysis of the traced queue programs
+(DESIGN.md §11a-c).
+
+These rules do not read source text -- they trace the registered jit entry
+points with small representative shapes (`jax.make_jaxpr`) and walk the
+resulting equation graphs, so they check what the compiled program DOES:
+
+  * ``persist-order`` -- in every device-driver ``while_loop`` body the
+    psync counter increment (``rounds + 1``: one drain per fused wave) is
+    traced AFTER the equations that produce the new NVM image leaves, i.e.
+    every psync is dominated by the pwb records it covers (the ordered
+    ``WaveDelta`` flush of DESIGN.md §7).  The delta-emitting entry points
+    (``wave_step_delta`` / ``fabric_step_delta``) are additionally checked
+    for *record coverage*: each persisted NVM leaf must be materialized
+    FROM the delta record arrays (``apply_delta``), so the torn-crash
+    injector replays exactly the records the hot path flushed.  The
+    host-side half of the same invariant -- the ``IntentJournal``
+    announce-before-apply barrier -- is checked structurally in
+    ``Combiner.flush`` (journal ``sync()`` precedes the round dispatch).
+  * ``psync-budget`` -- statically re-derives the paper's headline bound
+    from the trace: the psync carry slot is incremented by exactly ONE per
+    round, and the pwb accumulator update decomposes into one unit-weight
+    lane-mask cell count (== at most one cell pwb per operation) plus
+    per-round constant line records (mirror + segment header, <= 2).  A
+    full wave of W ops therefore costs at most (W + 2)/W pwbs + 1/W psyncs
+    per op -- <= 2 persistence instructions per operation for W >= 3
+    (device waves are >= 512; the facade asserts W >= 4).
+  * ``scatter-free`` -- the ``fused=True`` (megakernel) driver branches
+    must stay gather-only outside the Pallas kernels themselves: no
+    ``scatter*`` primitive anywhere in the traced round bodies (the
+    rank-gather done-marking / searchsorted compaction formulations of
+    core/driver.py, which the CPU backend would otherwise scalarize).
+
+Every structural assumption (carry slot layout, literal increment) is
+verified against the trace before use; a mismatch is itself a finding, so
+a refactor that moves a carry slot fails loudly instead of being silently
+un-checked.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import warnings
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.analysis import registry as reg
+from repro.analysis.rules import Finding, SimpleRule, register
+
+try:  # jax >= 0.4.33 exposes the jaxpr types under jax.extend.core
+    from jax.extend.core import ClosedJaxpr, Jaxpr, JaxprEqn, Literal, Var
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr, JaxprEqn, Literal, Var
+
+DRIVER_FILE = "src/repro/core/driver.py"
+WAVE_FILE = "src/repro/core/wave.py"
+COMBINE_FILE = "src/repro/api/combine.py"
+
+SCATTER_PRIMS = frozenset(
+    {"scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+     "scatter_apply"})
+
+# ---------------------------------------------------------------------------
+# jaxpr walking helpers
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn: JaxprEqn) -> List[Jaxpr]:
+    out: List[Jaxpr] = []
+
+    def collect(v):
+        if isinstance(v, ClosedJaxpr):
+            out.append(v.jaxpr)
+        elif isinstance(v, Jaxpr):
+            out.append(v)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                collect(x)
+
+    for v in eqn.params.values():
+        collect(v)
+    return out
+
+
+def iter_eqns(jaxpr: Jaxpr, skip_pallas: bool = False
+              ) -> Iterable[JaxprEqn]:
+    """All equations, recursing into sub-jaxprs (pjit / while / scan /
+    cond bodies).  ``skip_pallas`` stops at ``pallas_call`` boundaries --
+    the kernel-internal program is the kernel's business, not the
+    driver's."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if skip_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, skip_pallas=skip_pallas)
+
+
+def unwrap_pjit(closed: ClosedJaxpr) -> Tuple[Jaxpr, List]:
+    """Descend through single-eqn pjit wrappers (tracing a jitted function
+    yields one pjit eqn whose inner jaxpr is the program), remapping the
+    flat output list by position at each level.  Returns the innermost
+    flat jaxpr and its outvars in the ORIGINAL output order."""
+    jaxpr = closed.jaxpr
+    outs = list(jaxpr.outvars)
+    for _ in range(8):
+        if len(jaxpr.eqns) != 1 or jaxpr.eqns[0].primitive.name != "pjit":
+            break
+        eqn = jaxpr.eqns[0]
+        pos = {ov: i for i, ov in enumerate(eqn.outvars)}
+        inner = eqn.params["jaxpr"].jaxpr
+        # vars not produced by the pjit are outer passthroughs (e.g. an
+        # argument returned verbatim): keep them -- they have no producer
+        # in the inner jaxpr either, which is what "passthrough" means.
+        outs = [inner.outvars[pos[v]]
+                if isinstance(v, Var) and v in pos else v
+                for v in outs]
+        jaxpr = inner
+    return jaxpr, outs
+
+
+def find_while_eqns(closed: ClosedJaxpr) -> List[JaxprEqn]:
+    return [e for e in iter_eqns(closed.jaxpr) if e.primitive.name == "while"]
+
+
+def producer_map(jaxpr: Jaxpr) -> Dict[Var, Tuple[int, JaxprEqn]]:
+    """var -> (trace position, producing eqn) over one (flat) jaxpr body."""
+    prod: Dict[Var, Tuple[int, JaxprEqn]] = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for ov in eqn.outvars:
+            prod[ov] = (i, eqn)
+    return prod
+
+
+def ancestor_vars(start: Var, prod: Dict[Var, Tuple[int, JaxprEqn]]
+                  ) -> Set[Var]:
+    """Every var reachable backwards from ``start`` through producer
+    equations (inclusive of ``start``); stops at jaxpr inputs/consts."""
+    seen: Set[Var] = set()
+    stack = [start]
+    while stack:
+        v = stack.pop()
+        if not isinstance(v, Var) or v in seen:
+            continue
+        seen.add(v)
+        hit = prod.get(v)
+        if hit is not None:
+            stack.extend(iv for iv in hit[1].invars if isinstance(iv, Var))
+    return seen
+
+
+def _literal_value(v) -> Optional[int]:
+    """The scalar value of a Literal invar (possibly broadcast/converted),
+    else None."""
+    if isinstance(v, Literal):
+        try:
+            return int(np.asarray(v.val).item())
+        except (TypeError, ValueError):
+            return None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# trace construction (small representative shapes, cached per matrix cell)
+# ---------------------------------------------------------------------------
+
+_Q, _S, _R, _P, _W, _N, _CAP = 2, 2, 8, 1, 4, 6, 8
+
+
+@functools.lru_cache(maxsize=None)
+def _example_images():
+    from repro.core.fabric import fabric_init
+    vol = fabric_init(_Q, _S, _R, _P)
+    nvm = fabric_init(_Q, _S, _R, _P)
+    return vol, nvm
+
+
+@functools.lru_cache(maxsize=None)
+def driver_trace(entry: str, backend: str, fused_round: str) -> ClosedJaxpr:
+    """Traced jaxpr of one driver entry point at the given matrix cell."""
+    import jax
+
+    from repro.core import driver as drv
+
+    def raw(fn):
+        # trace the pristine entry even when the QLINT_SANITIZE runtime
+        # wrapper is installed (it would add copy/delete noise to the jaxpr)
+        return fn.__wrapped__ if getattr(fn, "__qlint_sanitized__",
+                                         False) else fn
+
+    vol, nvm = _example_images()
+    items = np.full((_Q, _N), -1, np.int32)
+    items[:, : _N // 2] = np.arange(_Q * (_N // 2),
+                                    dtype=np.int32).reshape(_Q, -1)
+    shard = np.int32(0)
+    max_rounds = np.int32(8)
+    n = np.int32(_N)
+    take0 = np.int32(0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # donation is moot under tracing
+        if entry == "fabric_enqueue_all":
+            fn = functools.partial(raw(drv.fabric_enqueue_all), W=_W,
+                                   backend=backend, fused_round=fused_round)
+            return jax.make_jaxpr(fn)(vol, nvm, items, shard, max_rounds)
+        if entry == "fabric_dequeue_n":
+            fn = functools.partial(raw(drv.fabric_dequeue_n), W=_W, cap=_CAP,
+                                   backend=backend, fused_round=fused_round)
+            return jax.make_jaxpr(fn)(vol, nvm, n, take0, shard, max_rounds)
+        if entry == "fabric_submit_round":
+            fn = functools.partial(raw(drv.fabric_submit_round), W=_W, cap=_CAP,
+                                   backend=backend, fused_round=fused_round)
+            return jax.make_jaxpr(fn)(vol, nvm, items, n, take0, shard,
+                                      max_rounds)
+    raise ValueError(f"unknown driver entry {entry!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def delta_trace(entry: str, backend: str = "jnp") -> ClosedJaxpr:
+    """Traced jaxpr of one delta-emitting entry point."""
+    import jax
+
+    from repro.core import fabric as fab
+    from repro.core import wave as wv
+    vol, nvm = _example_images()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        if entry == "fabric_step_delta":
+            ev = np.full((_Q, _W), -1, np.int32)
+            dm = np.zeros((_Q, _W), bool)
+            fn = functools.partial(fab.fabric_step_delta, backend=backend)
+            return jax.make_jaxpr(fn)(vol, nvm, ev, dm, np.int32(0))
+        if entry == "wave_step_delta":
+            one = jax.tree.map(lambda x: x[0], vol)
+            one_n = jax.tree.map(lambda x: x[0], nvm)
+            ev = np.full((_W,), -1, np.int32)
+            dm = np.zeros((_W,), bool)
+            fn = functools.partial(wv.wave_step_delta, backend=backend)
+            return jax.make_jaxpr(fn)(one, one_n, ev, dm, np.int32(0))
+    raise ValueError(f"unknown delta entry {entry!r}")
+
+
+def _loops_for_entry(entry: str, closed: ClosedJaxpr
+                     ) -> List[Tuple[reg.LoopSpec, JaxprEqn]]:
+    """Match the traced while eqns of one driver entry against the carry
+    specs (by carry length -- enqueue and dequeue loops differ)."""
+    whiles = find_while_eqns(closed)
+    out: List[Tuple[reg.LoopSpec, JaxprEqn]] = []
+    for eqn in whiles:
+        body = eqn.params["body_jaxpr"].jaxpr
+        n_carry = len(body.invars) - eqn.params["body_nconsts"]
+        for spec in reg.DRIVER_LOOPS:
+            if n_carry == spec.n_carry:
+                out.append((spec, eqn))
+                break
+    return out
+
+
+def _expected_loops(entry: str) -> int:
+    return 2 if entry == "fabric_submit_round" else 1
+
+
+# ---------------------------------------------------------------------------
+# per-loop checks
+# ---------------------------------------------------------------------------
+
+
+def _psync_chain(out, carry_in, prod) -> Tuple[Optional[int], Optional[int],
+                                               str]:
+    """Walk the psync carry slot's update chain.  Returns (total increment,
+    trace position of the final update eqn, error)."""
+    total, pos = 0, None
+    v = out
+    for _ in range(32):
+        if v is carry_in:
+            return total, pos, ""
+        if not isinstance(v, Var) or v not in prod:
+            return None, None, "psync slot fed by unrecognized value"
+        i, eqn = prod[v]
+        pos = i if pos is None else pos
+        name = eqn.primitive.name
+        if name == "add":
+            a, b = eqn.invars
+            lit = _literal_value(a)
+            nxt = b
+            if lit is None:
+                lit, nxt = _literal_value(b), a
+            if lit is None:
+                return None, None, "psync update adds a non-literal"
+            total += lit
+            v = nxt
+        elif name == "convert_element_type":
+            v = eqn.invars[0]
+        else:
+            return None, None, f"psync update via {name!r}"
+    return None, None, "psync update chain too deep"
+
+
+def _strip_convert(v, prod):
+    while isinstance(v, Var) and v in prod:
+        eqn = prod[v][1]
+        if eqn.primitive.name in ("convert_element_type", "broadcast_in_dim"):
+            v = eqn.invars[0]
+        else:
+            break
+    return v
+
+
+def _is_bool_derived(v, prod) -> bool:
+    v = _strip_convert(v, prod)
+    if isinstance(v, Literal):
+        return np.asarray(v.val).dtype == np.bool_
+    return getattr(v.aval, "dtype", None) == np.bool_
+
+
+def _classify_pwb_term(v, prod) -> Tuple[str, int]:
+    """One addend of the pwb accumulator update.  Returns (kind, weight):
+    ``per_op`` -- reduce_sum over a boolean lane mask (<= 1 cell pwb per
+    active lane / completed op); ``per_round`` -- a bounded constant number
+    of line records per round (mirror / segment header); ``unknown``."""
+    v = _strip_convert(v, prod)
+    if not isinstance(v, Var) or v not in prod:
+        return "unknown", 0
+    eqn = prod[v][1]
+    name = eqn.primitive.name
+    if name == "reduce_sum":
+        if _is_bool_derived(eqn.invars[0], prod):
+            return "per_op", 1
+        return "unknown", 0
+    if name in ("reduce_or", "reduce_and", "reduce_max"):
+        return "per_round", 1
+    if name in ("and", "or", "not", "eq", "ne", "ge", "gt", "le", "lt"):
+        return "per_round", 1
+    if name == "mul":
+        a, b = eqn.invars
+        lit = _literal_value(a)
+        other = b
+        if lit is None:
+            lit, other = _literal_value(b), a
+        if lit is not None and _is_bool_derived(other, prod):
+            return "per_round", lit
+    return "unknown", 0
+
+
+def _decompose_sum(out, carry_in, prod) -> Tuple[List, bool]:
+    """Flatten the pwb update ``carry + t1 + t2 + ...`` into addend vars."""
+    terms: List = []
+    saw_carry = [False]
+
+    def walk(v, depth=0):
+        if v is carry_in:
+            saw_carry[0] = True
+            return
+        if depth < 16 and isinstance(v, Var) and v in prod:
+            eqn = prod[v][1]
+            if eqn.primitive.name == "add":
+                walk(eqn.invars[0], depth + 1)
+                walk(eqn.invars[1], depth + 1)
+                return
+            if eqn.primitive.name == "convert_element_type" \
+                    and eqn.invars[0] is carry_in:
+                saw_carry[0] = True
+                return
+        terms.append(v)
+
+    walk(out)
+    return terms, saw_carry[0]
+
+
+def check_driver_loop(body: Jaxpr, nconsts: int, spec: reg.LoopSpec,
+                      label: str) -> Tuple[List[Finding], Dict[str, object]]:
+    """Run persist-order dominance + psync/pwb budget decomposition on one
+    driver while-loop body.  Returns (findings, budget report entry)."""
+    findings: List[Finding] = []
+    info: Dict[str, object] = {"loop": spec.name, "label": label}
+    carry_in = list(body.invars)[nconsts:]
+    outs = list(body.outvars)
+    prod = producer_map(body)
+
+    def fail(rule: str, msg: str):
+        findings.append(Finding(rule, DRIVER_FILE, 0, f"{label}: {msg}"))
+
+    if len(carry_in) != spec.n_carry or len(outs) != spec.n_carry:
+        fail("persist-order",
+             f"carry layout mismatch: expected {spec.n_carry} slots, "
+             f"got {len(carry_in)}/{len(outs)} -- update "
+             "repro.analysis.registry.DRIVER_LOOPS")
+        return findings, info
+
+    # -- psync slot: exactly one +1 per round, traced at position p --------
+    total, psync_pos, err = _psync_chain(outs[spec.psync_slot],
+                                         carry_in[spec.psync_slot], prod)
+    if err:
+        fail("psync-budget", f"{err} (slot {spec.psync_slot})")
+        return findings, info
+    info["psyncs_per_round"] = total
+    if total != 1:
+        fail("psync-budget",
+             f"psync counter advances by {total} per round (expected "
+             "exactly 1 drain per fused wave)")
+
+    # -- persist-order: psync increment dominated by every NVM leaf write --
+    late: List[str] = []
+    for slot in spec.persisted_nvm_slots + (spec.pwb_slot,):
+        ov = outs[slot]
+        if not isinstance(ov, Var):
+            continue
+        hit = prod.get(ov)
+        if hit is None:          # passthrough: leaf untouched this loop
+            continue
+        if psync_pos is not None and hit[0] > psync_pos:
+            field = (reg.WAVE_STATE_FIELDS[slot - reg.N_STATE_LEAVES]
+                     if slot in spec.persisted_nvm_slots else "pwb counter")
+            late.append(field)
+    if late:
+        fail("persist-order",
+             "psync counter update traced BEFORE the NVM record writes it "
+             f"must cover (late leaves: {', '.join(late)}) -- the drain "
+             "would not dominate its pwbs")
+    info["persist_order_ok"] = not late
+
+    # -- pwb budget: one unit lane-mask count + bounded per-round lines ----
+    terms, saw_carry = _decompose_sum(outs[spec.pwb_slot],
+                                      carry_in[spec.pwb_slot], prod)
+    if not saw_carry:
+        fail("psync-budget", "pwb accumulator does not accumulate (carry "
+             "slot not part of its own update)")
+    per_op = per_round = 0
+    unknown = 0
+    for t in terms:
+        kind, w = _classify_pwb_term(t, prod)
+        if kind == "per_op":
+            per_op += w
+        elif kind == "per_round":
+            per_round += w
+        else:
+            unknown += 1
+    info.update(pwbs_per_op=per_op, pwbs_per_round=per_round,
+                unknown_pwb_terms=unknown)
+    if unknown:
+        fail("psync-budget",
+             f"{unknown} unrecognized pwb accumulator term(s): cannot "
+             "statically bound the per-op persistence cost")
+    if per_op > 1:
+        fail("psync-budget",
+             f"{per_op} cell pwbs per operation (the paper's bound needs "
+             "exactly one cell record per completed op)")
+    if per_round > 2:
+        fail("psync-budget",
+             f"{per_round} per-round line pwbs (mirror + segment header "
+             "must stay <= 2 lines per wave)")
+    # <= 2 persistence instructions per op once a wave carries >= min_wave
+    # ops: (W * per_op + per_round) pwbs + 1 psync over W ops.
+    ok = (total == 1 and unknown == 0 and per_op <= 1 and per_round <= 2)
+    info["budget_ok"] = ok
+    info["min_wave_for_budget"] = (per_round + total) if ok else None
+    return findings, info
+
+
+# ---------------------------------------------------------------------------
+# rule bodies
+# ---------------------------------------------------------------------------
+
+
+def _driver_matrix() -> List[Tuple[str, str, str]]:
+    out = []
+    for backend, fused in reg.DRIVER_TRACE_MATRIX:
+        for entry in ("fabric_enqueue_all", "fabric_dequeue_n",
+                      "fabric_submit_round"):
+            out.append((entry, backend, fused))
+    return out
+
+
+def _checked_loops() -> Tuple[List[Finding], List[Dict[str, object]]]:
+    findings: List[Finding] = []
+    report: List[Dict[str, object]] = []
+    for entry, backend, fused in _driver_matrix():
+        label = f"{entry}[{backend}, megakernel={fused}]"
+        try:
+            closed = driver_trace(entry, backend, fused)
+        except Exception as e:  # pragma: no cover - trace infra failure
+            findings.append(Finding("persist-order", DRIVER_FILE, 0,
+                                    f"{label}: trace failed: {e!r}"))
+            continue
+        loops = _loops_for_entry(entry, closed)
+        if len(loops) != _expected_loops(entry):
+            findings.append(Finding(
+                "persist-order", DRIVER_FILE, 0,
+                f"{label}: expected {_expected_loops(entry)} driver "
+                f"while-loop(s) matching the registry carry specs, found "
+                f"{len(loops)}"))
+            continue
+        for spec, eqn in loops:
+            body = eqn.params["body_jaxpr"].jaxpr
+            f, info = check_driver_loop(body, eqn.params["body_nconsts"],
+                                        spec, label)
+            findings.extend(f)
+            report.append(info)
+    return findings, report
+
+
+@functools.lru_cache(maxsize=None)
+def _checked_loops_cached() -> Tuple[Tuple[Finding, ...],
+                                     Tuple[Tuple[Tuple[str, object], ...],
+                                           ...]]:
+    f, rep = _checked_loops()
+    return tuple(f), tuple(tuple(sorted(d.items(), key=lambda kv: kv[0]))
+                           for d in rep)
+
+
+def psync_budget_report() -> List[Dict[str, object]]:
+    """Per driver loop x matrix cell: the statically derived persistence
+    budget (used by the CLI summary and the acceptance tests)."""
+    _, rep = _checked_loops_cached()
+    return [dict(d) for d in rep]
+
+
+def _delta_coverage_findings() -> List[Finding]:
+    """Persisted NVM leaves of the delta-emitting waves must descend from
+    the WaveDelta record arrays (the image is materialized by replaying
+    the ordered records -- apply_delta)."""
+    from repro.core.persistence import WaveDelta
+    findings: List[Finding] = []
+    n_delta = len(WaveDelta._fields)
+    for entry, fname in (("wave_step_delta", WAVE_FILE),
+                         ("fabric_step_delta",
+                          "src/repro/core/fabric.py")):
+        try:
+            jaxpr, outs = unwrap_pjit(delta_trace(entry))
+        except Exception as e:  # pragma: no cover
+            findings.append(Finding("persist-order", fname, 0,
+                                    f"{entry}: trace failed: {e!r}"))
+            continue
+        # flat outputs: vol[12], nvm[12], enq_ok, deq_out, delta[n_delta]
+        if len(outs) != 2 * reg.N_STATE_LEAVES + 2 + n_delta:
+            findings.append(Finding(
+                "persist-order", fname, 0,
+                f"{entry}: unexpected output arity {len(outs)} (expected "
+                f"{2 * reg.N_STATE_LEAVES + 2 + n_delta}) -- delta "
+                "coverage check needs updating"))
+            continue
+        prod = producer_map(jaxpr)
+        delta_vars = {v for v in outs[-n_delta:] if isinstance(v, Var)}
+        uncovered = []
+        for field in reg.PERSISTED_FIELDS:
+            slot = reg.N_STATE_LEAVES + reg.WAVE_STATE_FIELDS.index(field)
+            ov = outs[slot]
+            if not isinstance(ov, Var) or prod.get(ov) is None:
+                continue     # passthrough leaf: nothing flushed this wave
+            if not (ancestor_vars(ov, prod) & delta_vars):
+                uncovered.append(field)
+        if uncovered:
+            findings.append(Finding(
+                "persist-order", fname, 0,
+                f"{entry}: persisted NVM leaves not materialized from the "
+                f"WaveDelta records: {', '.join(uncovered)} -- the torn-"
+                "crash injector would replay a different flush than the "
+                "one applied"))
+    return findings
+
+
+def _journal_barrier_findings() -> List[Finding]:
+    """Announce-before-apply: ``Combiner.flush`` must drain the intent
+    journal (``journal.sync()``) before dispatching the round."""
+    import repro.api.combine as combine_mod
+    path = combine_mod.__file__
+    try:
+        with open(path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError) as e:  # pragma: no cover
+        return [Finding("persist-order", COMBINE_FILE, 0,
+                        f"cannot parse combine module: {e!r}")]
+    dispatch_names = {"submit_round", "enqueue_all", "dequeue_n"}
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.FunctionDef) and node.name == "flush"):
+            continue
+        sync_line = None
+        first_dispatch = None
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = sub.func
+            if not isinstance(fn, ast.Attribute):
+                continue
+            if fn.attr == "sync" and isinstance(fn.value, ast.Attribute) \
+                    and fn.value.attr == "journal":
+                if sync_line is None:
+                    sync_line = sub.lineno
+            elif fn.attr in dispatch_names and (
+                    first_dispatch is None or sub.lineno < first_dispatch):
+                first_dispatch = sub.lineno
+        if first_dispatch is None:
+            continue
+        if sync_line is None or sync_line > first_dispatch:
+            findings.append(Finding(
+                "persist-order", COMBINE_FILE, first_dispatch,
+                "round dispatched before the intent journal's announcement "
+                "psync (journal.sync() must precede the dispatch -- the "
+                "announce-before-apply barrier of DESIGN.md §9)"))
+    return findings
+
+
+def _persist_order_rule(_=None) -> List[Finding]:
+    f, _rep = _checked_loops_cached()
+    findings = [x for x in f if x.rule == "persist-order"]
+    findings.extend(_delta_coverage_findings())
+    findings.extend(_journal_barrier_findings())
+    return findings
+
+
+def _psync_budget_rule(_=None) -> List[Finding]:
+    f, _rep = _checked_loops_cached()
+    return [x for x in f if x.rule == "psync-budget"]
+
+
+def scatter_findings_for(closed: ClosedJaxpr, label: str,
+                         file: str = DRIVER_FILE) -> List[Finding]:
+    bad = sorted({e.primitive.name
+                  for e in iter_eqns(closed.jaxpr, skip_pallas=True)
+                  if e.primitive.name in SCATTER_PRIMS})
+    if not bad:
+        return []
+    return [Finding(
+        "scatter-free", file, 0,
+        f"{label}: {', '.join(bad)} primitive(s) in a fused (megakernel) "
+        "driver branch -- the Q-flat round bodies must stay gather-only "
+        "(rank-gather done-marking / searchsorted compaction; a scatter "
+        "scalarizes on the CPU backend)")]
+
+
+def _scatter_free_rule(_=None) -> List[Finding]:
+    findings: List[Finding] = []
+    for entry in ("fabric_enqueue_all", "fabric_dequeue_n",
+                  "fabric_submit_round"):
+        for backend, fused in reg.DRIVER_TRACE_MATRIX:
+            if fused != "on":
+                continue
+            label = f"{entry}[{backend}, megakernel=on]"
+            try:
+                closed = driver_trace(entry, backend, fused)
+            except Exception as e:  # pragma: no cover
+                findings.append(Finding("scatter-free", DRIVER_FILE, 0,
+                                        f"{label}: trace failed: {e!r}"))
+                continue
+            findings.extend(scatter_findings_for(closed, label))
+    return findings
+
+
+register(SimpleRule(
+    id="persist-order", kind="trace",
+    doc="every psync is dominated by the pwb records it covers (driver "
+        "loops, delta waves, intent-journal barrier)",
+    fn=_persist_order_rule))
+
+register(SimpleRule(
+    id="psync-budget", kind="trace",
+    doc="statically re-derive the <=2-persistence-instructions-per-op "
+        "bound from the traced driver loops",
+    fn=_psync_budget_rule))
+
+register(SimpleRule(
+    id="scatter-free", kind="trace",
+    doc="fused (megakernel) driver branches contain no scatter primitives "
+        "outside the Pallas kernels",
+    fn=_scatter_free_rule))

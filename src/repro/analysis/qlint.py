@@ -1,0 +1,118 @@
+"""qlint CLI: static durability & dispatch analysis for the queue fabric.
+
+Usage::
+
+    python -m repro.analysis.qlint [paths ...] [options]
+
+Runs the Layer-2 AST rules over every ``.py`` file under ``paths``
+(default: ``src``) and the Layer-1 jaxpr trace rules over the registered
+jit entry points, printing one line per finding and exiting non-zero if
+any survive suppression.  Options:
+
+  --json FILE    machine-readable report (findings + psync-budget summary)
+  --no-trace     skip the jaxpr trace rules (pure-AST mode; no jax import)
+  --churn        also run the jit-cache-churn detector (executes a small
+                 device workload twice; see analysis/cache_churn.py)
+  --disable IDS  comma-separated rule ids to skip for this run
+  --list-rules   print the rule catalog and exit
+
+Per-line suppression: ``# qlint: disable=RULE`` on the finding's line or
+the line above (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis.rules import (Finding, SourceFile, all_rules,
+                                  apply_suppressions, report_json)
+
+
+def collect_sources(paths: List[str]) -> List[SourceFile]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = [d for d in dirs if d != "__pycache__"]
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    out: List[SourceFile] = []
+    for f in sorted(set(files)):
+        with open(f, encoding="utf-8") as fh:
+            text = fh.read()
+        rel = os.path.relpath(f)
+        out.append(SourceFile.parse(rel if not rel.startswith("..") else f,
+                                    text))
+    return out
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.qlint",
+        description="durability & dispatch static analysis for the "
+                    "persistent queue fabric")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories for the AST rules "
+                         "(default: src)")
+    ap.add_argument("--json", metavar="FILE", default=None)
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip jaxpr trace rules")
+    ap.add_argument("--churn", action="store_true",
+                    help="also run the jit-cache-churn detector")
+    ap.add_argument("--disable", default="",
+                    help="comma-separated rule ids to skip")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for rid in sorted(rules):
+            r = rules[rid]
+            print(f"{rid:16s} [{r.kind}] {r.doc}")
+        return 0
+
+    disabled = {x.strip() for x in args.disable.split(",") if x.strip()}
+    findings: List[Finding] = []
+    sources = collect_sources(args.paths or ["src"])
+    for src in sources:
+        for rule in rules.values():
+            if rule.kind != "ast" or rule.id in disabled:
+                continue
+            findings.extend(apply_suppressions(src, rule.run(src)))
+
+    summary = {"files": len(sources)}
+    if not args.no_trace:
+        for rule in rules.values():
+            if rule.kind != "trace" or rule.id in disabled:
+                continue
+            findings.extend(rule.run(None))
+        from repro.analysis.jaxpr_rules import psync_budget_report
+        budget = psync_budget_report()
+        summary["psync_budget"] = budget
+        summary["budget_ok"] = all(b.get("budget_ok") for b in budget)
+    if args.churn and "cache-churn" not in disabled:
+        findings.extend(rules["cache-churn"].run(None))
+
+    for f in findings:
+        print(f.format())
+    summary["findings"] = len(findings)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(report_json(findings, summary))
+    if findings:
+        print(f"qlint: {len(findings)} finding(s)")
+        return 1
+    checked = [k for k in ("psync_budget",) if k in summary]
+    extra = (f"; budget confirmed <=2 persistence instructions/op on "
+             f"{len(summary['psync_budget'])} traced driver loops"
+             if checked and summary.get("budget_ok") else "")
+    print(f"qlint: clean ({len(sources)} files{extra})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

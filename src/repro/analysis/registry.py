@@ -1,0 +1,153 @@
+"""What qlint knows about THIS repo: the jit entry points, which of their
+arguments are donated, which modules are hot path, and the carry layouts of
+the device driver loops (DESIGN.md §11).
+
+Everything the jaxpr and AST rules check is anchored here so a future PR
+that adds an entry point (or reorders a driver carry) has ONE place to
+update -- and the rules self-verify the layouts against the trace (a spec
+that no longer matches the program is itself reported as a finding, never
+silently skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+# -- entry points ------------------------------------------------------------
+
+#: jit entry points whose arguments 0/1 are the donated (vol, nvm) state
+#: images.  Callers must rebind both from the results -- the donation-reuse
+#: AST rule checks every call site, and sanitize.install() poisons the
+#: passed buffers under QLINT_SANITIZE=1.
+DONATING_ENTRY_POINTS: Dict[str, Tuple[int, ...]] = {
+    # core/driver.py
+    "fabric_enqueue_all": (0, 1),
+    "device_enqueue_all": (0, 1),
+    "fabric_dequeue_n": (0, 1),
+    "device_dequeue_n": (0, 1),
+    "fabric_submit_round": (0, 1),
+    # core/wave.py
+    "wave_step": (0, 1),
+    "enqueue_scan": (0, 1),
+    "dequeue_scan": (0, 1),
+    # core/fabric.py
+    "fabric_step": (0, 1),
+    "fabric_enqueue_scan": (0, 1),
+    "fabric_dequeue_scan": (0, 1),
+}
+
+#: module path -> donating entry point names defined there (for the runtime
+#: sanitizer, which patches the defining module and every from-importer).
+DONATING_DEFINITIONS: Dict[str, Tuple[str, ...]] = {
+    "repro.core.driver": ("fabric_enqueue_all", "device_enqueue_all",
+                          "fabric_dequeue_n", "device_dequeue_n",
+                          "fabric_submit_round"),
+    "repro.core.wave": ("wave_step", "enqueue_scan", "dequeue_scan"),
+    "repro.core.fabric": ("fabric_step", "fabric_enqueue_scan",
+                          "fabric_dequeue_scan"),
+}
+
+#: every jit entry point a facade/host loop may dispatch to -- the set the
+#: eager-wrapper AST rule treats as "jit dispatch sites" and the churn
+#: detector snapshots cache sizes for.  (Non-donating cold-path entries
+#: included: an eager wrapper there still burns a device round trip.)
+JIT_ENTRY_POINTS: Tuple[str, ...] = tuple(DONATING_ENTRY_POINTS) + (
+    "wave_step_delta", "fabric_step_delta", "crash_sweep",
+    "fabric_crash_sweep", "recover", "fabric_recover",
+)
+
+#: functions sanctioned to hand back a FRESH (vol, nvm) pair -- rebinding
+#: both images from their result is never an aliasing hazard.  This is the
+#: sole sanctioned copy point of DESIGN.md §7: everywhere else, vol and nvm
+#: must come from an entry point that computed them apart.
+FRESH_IMAGE_PRODUCERS: Tuple[str, ...] = ("crash_recover_images",)
+
+# -- hot-path modules --------------------------------------------------------
+
+#: modules whose jit dispatch sites must pass host scalars as np.int32 (not
+#: eager jnp wrappers: each one is a separate dispatched device program,
+#: ~700us/flush on the combiner hot path -- DESIGN.md §10).
+HOT_DISPATCH_MODULES: Tuple[str, ...] = (
+    "api/queue.py", "api/combine.py", "core/driver.py",
+)
+
+#: facade modules whose delivery path must never host-sync item-by-item
+#: (.tolist() on a device array); zero-copy Delivery views instead.
+HOT_DELIVERY_MODULES: Tuple[str, ...] = ("api/queue.py", "api/combine.py")
+
+#: the eager wrapper calls the dispatch rule bans at dispatch sites.
+EAGER_WRAPPERS: Tuple[str, ...] = (
+    "jnp.asarray", "jnp.array", "jnp.int32", "jnp.bool_",
+    "jax.numpy.asarray", "jax.numpy.array", "jax.numpy.int32",
+    "jax.numpy.bool_",
+)
+
+# -- driver loop carry layouts ----------------------------------------------
+
+#: WaveState leaf order (NamedTuple field order; 12 leaves per image).
+WAVE_STATE_FIELDS: Tuple[str, ...] = (
+    "vals", "idxs", "safes", "heads", "tails", "closed",
+    "epoch", "base", "first", "last", "mirrors", "mirror_seg",
+)
+
+#: WaveState fields with a durable (NVM) image -- the leaves the flush
+#: delta materializes; heads/tails/first/last are volatile-only (the paper
+#: never persists the global Head/Tail).
+PERSISTED_FIELDS: Tuple[str, ...] = (
+    "vals", "idxs", "safes", "closed", "epoch", "base",
+    "mirrors", "mirror_seg",
+)
+
+N_STATE_LEAVES = len(WAVE_STATE_FIELDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopSpec:
+    """Flat carry layout of one driver ``lax.while_loop`` (core/driver.py).
+
+    ``psync_slot`` is the round counter: one increment per loop body ==
+    one psync per fused wave (the drain covering that wave's pwbs).
+    ``pwb_slot`` is the per-queue pwb accumulator.  The jaxpr rules verify
+    the spec against the trace (scalar int32 carry whose update is
+    ``add(carry, 1)``) before using it, so a reordered carry is reported
+    as a layout mismatch instead of silently checking the wrong slot."""
+
+    name: str
+    n_carry: int
+    psync_slot: int
+    pwb_slot: int
+    ops_slot: int
+
+    @property
+    def vol_slots(self) -> Tuple[int, ...]:
+        return tuple(range(0, N_STATE_LEAVES))
+
+    @property
+    def nvm_slots(self) -> Tuple[int, ...]:
+        return tuple(range(N_STATE_LEAVES, 2 * N_STATE_LEAVES))
+
+    @property
+    def persisted_nvm_slots(self) -> Tuple[int, ...]:
+        return tuple(N_STATE_LEAVES + WAVE_STATE_FIELDS.index(f)
+                     for f in PERSISTED_FIELDS)
+
+
+#: _enqueue_all_impl carry: (vol[12], nvm[12], done, rounds, pwbs, ops)
+ENQ_LOOP = LoopSpec("enqueue_all", n_carry=28, psync_slot=25, pwb_slot=26,
+                    ops_slot=27)
+
+#: _dequeue_n_impl carry: (vol[12], nvm[12], out, got, rounds, take, pwbs,
+#: ops, gave_up)
+DEQ_LOOP = LoopSpec("dequeue_n", n_carry=31, psync_slot=26, pwb_slot=28,
+                    ops_slot=29)
+
+DRIVER_LOOPS: Tuple[LoopSpec, ...] = (ENQ_LOOP, DEQ_LOOP)
+
+#: trace matrix for the driver rules: (backend, fused_round) pairs.  The
+#: jnp backend has no fused_fabric_round capability, so the megakernel
+#: route is pallas-only; "off" on both backends covers the vmapped path.
+DRIVER_TRACE_MATRIX: Tuple[Tuple[str, str], ...] = (
+    ("jnp", "off"),
+    ("pallas", "off"),
+    ("pallas", "on"),
+)

@@ -1,0 +1,155 @@
+"""qlint rule protocol: findings, suppression, registration (DESIGN.md §11).
+
+A rule is any object with an ``id``, a one-line ``doc``, a ``kind`` and a
+``run`` method returning ``Finding``s.  Three kinds exist:
+
+  * ``"ast"``     -- runs per source file over its parsed ``ast`` tree
+                     (``run(SourceFile)``); cheap, pure-syntax.
+  * ``"trace"``   -- runs once per invocation over the *traced jaxprs* of
+                     the registered jit entry points (``run(None)``); this
+                     is the layer that checks what the compiled program
+                     actually does rather than what the source says.
+  * ``"runtime"`` -- runs once and may execute device code (the jit-cache
+                     churn detector); opt-in from the CLI (``--churn``).
+
+Suppression: a finding on line L is dropped when line L or line L-1 of the
+file carries ``# qlint: disable=RULE`` (comma-separated ids, or ``all``).
+Trace findings carry no source line and are not comment-suppressible --
+disable them per-run with ``--disable RULE`` instead.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from typing import Callable, Dict, List, Optional, Protocol, Sequence
+
+_DISABLE_RE = re.compile(r"#\s*qlint:\s*disable=([\w,\-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.  ``line`` is 1-based (0 = whole-program/trace
+    finding with no source anchor)."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.line else self.file
+        return f"{loc}: {self.rule}: {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file handed to AST rules."""
+
+    path: str                  # as reported in findings (relative if possible)
+    text: str
+    tree: ast.Module
+    lines: List[str]
+
+    @classmethod
+    def parse(cls, path: str, text: str) -> "SourceFile":
+        return cls(path=path, text=text, tree=ast.parse(text, filename=path),
+                   lines=text.splitlines())
+
+
+class Rule(Protocol):
+    id: str
+    kind: str                  # "ast" | "trace" | "runtime"
+    doc: str
+
+    def run(self, target: Optional[SourceFile]) -> List[Finding]:
+        ...
+
+
+def disabled_rules_on_line(lines: Sequence[str], line: int) -> frozenset:
+    """Rule ids suppressed at 1-based ``line`` (same line or the line
+    above)."""
+    ids: set = set()
+    for ln in (line, line - 1):
+        if 1 <= ln <= len(lines):
+            m = _DISABLE_RE.search(lines[ln - 1])
+            if m:
+                ids.update(x.strip() for x in m.group(1).split(","))
+    return frozenset(ids)
+
+
+def apply_suppressions(source: SourceFile,
+                       findings: Sequence[Finding]) -> List[Finding]:
+    out: List[Finding] = []
+    for f in findings:
+        sup = disabled_rules_on_line(source.lines, f.line)
+        if "all" in sup or f.rule in sup:
+            continue
+        out.append(f)
+    return out
+
+
+# -- registry ----------------------------------------------------------------
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.id in _RULES:
+        raise ValueError(f"duplicate qlint rule id {rule.id!r}")
+    _RULES[rule.id] = rule
+    return rule
+
+
+def all_rules() -> Dict[str, Rule]:
+    """id -> rule, importing the built-in rule modules on first use."""
+    if not _RULES:
+        from repro.analysis import ast_rules, cache_churn, jaxpr_rules  # noqa: F401
+    return dict(_RULES)
+
+
+# -- report ------------------------------------------------------------------
+
+
+def report_json(findings: Sequence[Finding],
+                summary: Optional[Dict[str, object]] = None) -> str:
+    return json.dumps(
+        {
+            "tool": "qlint",
+            "version": 1,
+            "findings": [f.to_json() for f in findings],
+            "summary": dict(summary or {}),
+        },
+        indent=2, sort_keys=True)
+
+
+def run_ast_rules(sources: Sequence[SourceFile],
+                  rules: Sequence[Rule],
+                  ) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for rule in rules:
+            if rule.kind != "ast":
+                continue
+            findings.extend(apply_suppressions(src, rule.run(src)))
+    return findings
+
+
+RuleFn = Callable[[Optional[SourceFile]], List[Finding]]
+
+
+@dataclasses.dataclass
+class SimpleRule:
+    """Plain-function rule adapter (what the built-in modules register)."""
+
+    id: str
+    kind: str
+    doc: str
+    fn: RuleFn
+
+    def run(self, target: Optional[SourceFile] = None) -> List[Finding]:
+        return self.fn(target)

@@ -1,0 +1,98 @@
+"""Runtime donation sanitizer (QLINT_SANITIZE=1; DESIGN.md §11f).
+
+The donation-reuse AST rule is a line-order approximation; this is the
+ground truth.  When installed, every donating jit entry point is wrapped
+so the buffers the caller handed in are POISONED after the dispatch:
+
+  1. the donated pytree's ``jax.Array`` leaves are copied and the COPIES
+     are passed to the real entry point (so they, not the caller's
+     buffers, get donated -- correct whether or not the platform honors
+     donation);
+  2. the caller's original arrays are then ``delete()``d.
+
+Any later read of a stale reference -- exactly the bug class donation
+makes silent on platforms that alias the output onto the input buffer --
+raises ``RuntimeError: Array has been deleted`` at the offending line
+instead of corrupting the queue image.  ``tests/conftest.py`` installs
+this for the whole tier-1 suite when ``QLINT_SANITIZE=1`` (CI runs one
+such job), so every donation contract in the repo is exercised under
+poisoning, not just the ones with dedicated tests.
+
+Scope note: ``distributed.fabric_map.make_sharded_fabric_step`` builds
+its donating step per call and is not patchable by name; mesh-placement
+donation is covered by the AST rule only.
+"""
+from __future__ import annotations
+
+import functools
+import importlib
+import sys
+from typing import Dict, Tuple
+
+from repro.analysis.registry import (DONATING_DEFINITIONS,
+                                     DONATING_ENTRY_POINTS)
+
+_installed: Dict[Tuple[str, str], object] = {}
+
+
+def _poison_wrapper(fn, donated: Tuple[int, ...]):
+    import jax
+    import jax.numpy as jnp
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        args = list(args)
+        originals = []
+        for pos in donated:
+            if pos >= len(args):
+                continue
+            leaves = jax.tree.leaves(args[pos])
+            originals.extend(x for x in leaves if isinstance(x, jax.Array))
+            args[pos] = jax.tree.map(
+                lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x,
+                args[pos])
+        out = fn(*args, **kwargs)
+        for a in originals:
+            if not a.is_deleted():
+                a.delete()
+        return out
+
+    wrapper.__qlint_sanitized__ = True
+    return wrapper
+
+
+def install() -> None:
+    """Wrap every registered donating entry point (idempotent).  Also
+    rebinds from-imported references in already-loaded ``repro``/test
+    modules, so install order does not matter."""
+    if _installed:
+        return
+    for mod_name, names in DONATING_DEFINITIONS.items():
+        mod = importlib.import_module(mod_name)
+        for name in names:
+            orig = getattr(mod, name)
+            wrapped = _poison_wrapper(orig, DONATING_ENTRY_POINTS[name])
+            setattr(mod, name, wrapped)
+            _installed[(mod_name, name)] = orig
+            for other in list(sys.modules.values()):
+                if other is None or other is mod:
+                    continue
+                if getattr(other, name, None) is orig:
+                    setattr(other, name, wrapped)
+
+
+def uninstall() -> None:
+    for (mod_name, name), orig in _installed.items():
+        mod = sys.modules.get(mod_name)
+        if mod is None:
+            continue
+        wrapped = getattr(mod, name, None)
+        setattr(mod, name, orig)
+        for other in list(sys.modules.values()):
+            if other is not None and getattr(other, name, None) is wrapped:
+                setattr(other, name, orig)
+    _installed.clear()
+
+
+def active() -> bool:
+    return bool(_installed)

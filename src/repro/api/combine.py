@@ -129,7 +129,7 @@ class CombinedSweep:
         states = self.sweep.states
         out: List[int] = []
         for q in range(len(self.sweep.pre_items)):
-            st = jax.tree.map(lambda a: a[point][q], states)
+            st = jax.tree.map(lambda a, q=q: a[point][q], states)
             out.extend(peek_items(jax.device_get(st)))
         return out
 
@@ -440,7 +440,7 @@ class Combiner:
             return
         stuck_by_ticket: Dict[int, List[int]] = {}
         bounds = offsets + [len(all_items)]
-        for val, pos in zip(e.pending, e.pending_pos):
+        for _val, pos in zip(e.pending, e.pending_pos):
             # offsets are sorted; find the ticket whose [off, off+len) span
             # holds this batch position
             lo, hi = 0, len(enq_ts) - 1

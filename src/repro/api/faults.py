@@ -76,7 +76,8 @@ class SweepResult:
         lost = survived = 0
         for i in range(self.n_points):
             for q in range(len(self.pre_items)):
-                out = peek_items(jax.tree.map(lambda a: a[i][q], states))
+                out = peek_items(jax.tree.map(lambda a, i=i, q=q: a[i][q],
+                                              states))
                 r = check_wave_crash(list(self.pre_items[q]),
                                      list(self.wave_enqs[q]),
                                      self.deq_lanes, out)

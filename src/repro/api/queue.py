@@ -221,8 +221,8 @@ class PersistentQueue:
         """One raw fused wave across all Q queues: enq_vals [Q, W] int32
         (-1 = idle lane), deq_mask [Q, W] bool.  With ``placement="mesh"``
         the step runs shard_mapped over the negotiated device mesh."""
-        ev = jnp.asarray(enq_vals, jnp.int32)
-        dm = jnp.asarray(deq_mask, bool)
+        ev = np.asarray(enq_vals, np.int32)
+        dm = np.asarray(deq_mask, bool)
         if self.placement == "mesh":
             if self._mesh_step is None:
                 from repro.distributed.fabric_map import (
@@ -239,8 +239,8 @@ class PersistentQueue:
         return ok, out
 
     @staticmethod
-    def _shard_arr(shard) -> jnp.ndarray:
-        return jnp.int32(shard)
+    def _shard_arr(shard) -> np.int32:
+        return np.int32(shard)
 
     # -- producer side --------------------------------------------------------
 
@@ -283,8 +283,8 @@ class PersistentQueue:
             rows[q, :pend[q].size] = pend[q]
         (self._vol, self._nvm, done, rounds, pwbs,
          ops) = _drv.fabric_enqueue_all(
-            self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
-            jnp.int32(max_waves), W=self.device_wave, backend=self.backend,
+            self._vol, self._nvm, rows, np.int32(shard),
+            np.int32(max_waves), W=self.device_wave, backend=self.backend,
             fused_round=self.fused_round)
         self.dispatches += 1
         rounds, pwbs, ops = jax.device_get((rounds, pwbs, ops))
@@ -322,7 +322,7 @@ class PersistentQueue:
                 chunk = pend[q][:k_used * W]
                 rows[q].reshape(-1)[:len(chunk)] = np.asarray(chunk, np.int32)
             self._vol, self._nvm, oks, submitted = fabric_enqueue_scan(
-                self._vol, self._nvm, jnp.asarray(rows), jnp.int32(shard),
+                self._vol, self._nvm, rows, np.int32(shard),
                 backend=self.backend)
             self.dispatches += 1
             oks = np.asarray(jax.device_get(oks))
@@ -402,11 +402,15 @@ class PersistentQueue:
         if n <= 0:
             return Delivery(np.empty((0,), np.int32)), 0
         cap = bucket_pow2(n)
+        # np.int32 scalars, not eager jnp wrappers: same jit cache entry,
+        # conversion happens inside pjit's C++ dispatch (DESIGN.md §11)
+        take = self._take
+        if isinstance(take, (int, np.integer)):
+            take = np.int32(take)
         (self._vol, self._nvm, out, got, rounds, take, pwbs,
          ops) = _drv.fabric_dequeue_n(
-            self._vol, self._nvm, jnp.int32(n),
-            jnp.asarray(self._take, jnp.int32),
-            jnp.int32(shard), jnp.int32(max_waves),
+            self._vol, self._nvm, np.int32(n), take,
+            np.int32(shard), np.int32(max_waves),
             W=self.device_wave, cap=cap, backend=self.backend,
             fused_round=self.fused_round)
         self.dispatches += 1
@@ -441,7 +445,7 @@ class PersistentQueue:
                     if counts_q[q] else np.zeros((0,), np.int32)
                 counts[q, :plan.shape[0]] = plan
             self._vol, self._nvm, outs = fabric_dequeue_scan(
-                self._vol, self._nvm, jnp.asarray(counts), jnp.int32(shard),
+                self._vol, self._nvm, counts, np.int32(shard),
                 W, backend=self.backend)
             self.dispatches += 1
             outl = np.asarray(jax.device_get(outs))      # [Q, k_used, W]
@@ -469,9 +473,9 @@ class PersistentQueue:
             waves += max(fused, 1)
             act = (np.concatenate(act_all) if act_all
                    else np.empty((0,), np.int32))
-            if probe and act.size and (act == EMPTY_V).all():
-                if self._all_empty():
-                    break
+            if probe and act.size and (act == EMPTY_V).all() \
+                    and self._all_empty():
+                break
         return got, waves
 
     def _all_empty(self) -> bool:
@@ -608,8 +612,8 @@ class PersistentQueue:
             ev, dm, _pend = self.plan_torn_wave(plan.enq_items,
                                                 plan.deq_lanes)
             _v, _n, _ok, _out, delta = fabric_step_delta(
-                self._vol, self._nvm, jnp.asarray(ev), jnp.asarray(dm),
-                jnp.int32(plan.shard), backend=self.backend)
+                self._vol, self._nvm, ev, dm,
+                np.int32(plan.shard), backend=self.backend)
             n_rec = delta_records(delta)
             keys = jax.random.split(jax.random.PRNGKey(plan.seed), self.Q)
             masks = jnp.stack([
@@ -627,8 +631,8 @@ class PersistentQueue:
         ev, dm, pend = self.plan_torn_wave(plan.enq_items, plan.deq_lanes)
         self._place = place0               # sweep must not advance placement
         _v, _n, _ok, _out, delta = fabric_step_delta(
-            self._vol, self._nvm, jnp.asarray(ev), jnp.asarray(dm),
-            jnp.int32(plan.shard), backend=self.backend)
+            self._vol, self._nvm, ev, dm,
+            np.int32(plan.shard), backend=self.backend)
         states, masks = fabric_crash_sweep(
             nvm_pre, delta, jax.random.PRNGKey(plan.seed), plan.n_points,
             backend=self.backend, evict_rate=plan.evict_rate)

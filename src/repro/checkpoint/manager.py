@@ -17,6 +17,7 @@ Design (maps the paper's persistence discipline onto training state):
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
@@ -101,7 +102,7 @@ class CheckpointManager:
             # the commit point: persist the step mirror (paper line 60)
             self.mirrors.persist(step)
             self._gc(step)
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # noqa: B036, BLE001 - stashed, re-raised in wait()
             self._error = e
 
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
@@ -140,10 +141,8 @@ class CheckpointManager:
                 if fn.startswith(f"w{self.worker:05d}") or \
                         fn == f"manifest_w{self.worker:05d}.json":
                     os.unlink(os.path.join(d, fn))
-            try:
-                os.rmdir(d)
-            except OSError:
-                pass  # other workers' shards remain
+            with contextlib.suppress(OSError):
+                os.rmdir(d)          # other workers' shards remain
 
     # -- restore -------------------------------------------------------------------
 
@@ -158,10 +157,9 @@ class CheckpointManager:
         d = self._shard_dir(step)
         if not os.path.isdir(d):
             return False
-        for w in range(self.n_workers):
-            if not os.path.exists(os.path.join(d, f"manifest_w{w:05d}.json")):
-                return False
-        return True
+        return all(
+            os.path.exists(os.path.join(d, f"manifest_w{w:05d}.json"))
+            for w in range(self.n_workers))
 
     def latest_step(self) -> Optional[int]:
         """Recovery rule: the max mirror value with a COMPLETE shard set;

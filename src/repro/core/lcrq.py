@@ -37,9 +37,9 @@ def _node_line(var: Any) -> Any:
     if isinstance(var, tuple):
         if var[0] == "node" and var[2] == "next":
             return ("nodehdr", var[1])
-        if var[0] == "crq" and var[1][0] == "n":
-            if var[2] == "Tail" or (var[2] == "Q" and var[3] == 0):
-                return ("nodehdr", var[1][1])
+        if var[0] == "crq" and var[1][0] == "n" \
+                and (var[2] == "Tail" or (var[2] == "Q" and var[3] == 0)):
+            return ("nodehdr", var[1][1])
     return var
 
 

@@ -314,6 +314,8 @@ class Machine:
         for var in meta.vars:
             cell = self.cells[var]
             if cell.dirty:
+                # host-model pwb: per-cell Python scalar copy, no device
+                # buffer aliasing  # qlint: disable=donation-reuse
                 cell.nvm = cell.vol
                 cell.dirty = False
 

@@ -181,6 +181,7 @@ def cache_specs(cache_shape, mesh, stages=None, shard_seq: bool = False,
         # matches across the stage and exceeds 1 are treated per-ndim
         return jax.tree.map(lambda x: leaf(x, False), cache_shape)
     out = []
-    for (kinds, _moes, n_rep), stage_cache in zip(stages, cache_shape):
-        out.append(jax.tree.map(lambda x: leaf(x, n_rep > 1), stage_cache))
+    for (_kinds, _moes, n_rep), stage_cache in zip(stages, cache_shape):
+        out.append(jax.tree.map(lambda x, rep=n_rep > 1: leaf(x, rep),
+                                stage_cache))
     return out

@@ -285,7 +285,7 @@ class Model:
             params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
         stage_params = []
         for si, (kinds, moes, n_rep) in enumerate(self.stages):
-            def block_init(k):
+            def block_init(k, kinds=kinds, moes=moes):
                 ks = jax.random.split(k, len(kinds))
                 return {f"sub{j}": _layer_init(ks[j], cfg, kinds[j], moes[j])
                         for j in range(len(kinds))}
@@ -317,7 +317,7 @@ class Model:
         for si, (kinds, moes, n_rep) in enumerate(self.stages):
             sp = params["stages"][si]
 
-            def block(x_, p_, cache_):
+            def block(x_, p_, cache_, kinds=kinds, moes=moes):
                 outc = {} if cache_ is not None else None
                 for j, kind in enumerate(kinds):
                     pj = p_[f"sub{j}"]
@@ -439,12 +439,13 @@ class Model:
 
     def init_cache(self, batch: int, max_len: int):
         caches = []
-        for kinds, moes, n_rep in self.stages:
+        for kinds, _moes, n_rep in self.stages:
             c = {f"sub{j}": _layer_cache_init(self.cfg, kinds[j], batch, max_len)
                  for j in range(len(kinds))}
             if n_rep > 1:
                 c = jax.tree.map(
-                    lambda a: jnp.broadcast_to(a, (n_rep,) + a.shape), c)
+                    lambda a, rep=n_rep: jnp.broadcast_to(
+                        a, (rep,) + a.shape), c)
             caches.append(c)
         return caches
 
@@ -464,7 +465,7 @@ class Model:
             enc_kv = (ks, vs)
             li = 0
             new_caches = []
-            for si, (kinds, moes, n_rep) in enumerate(self.stages):
+            for si, (kinds, moes, _n_rep) in enumerate(self.stages):
                 sp = params["stages"][si]
                 outc = {}
                 for j, kind in enumerate(kinds):
@@ -491,7 +492,7 @@ class Model:
             ks, vs = enc_kv
             li = 0
             new_caches = []
-            for si, (kinds, moes, n_rep) in enumerate(self.stages):
+            for si, (kinds, moes, _n_rep) in enumerate(self.stages):
                 sp = params["stages"][si]
                 outc = {}
                 for j, kind in enumerate(kinds):

@@ -66,7 +66,9 @@ class ServingEngine:
         self.slot_done = np.ones(max_batch, bool)
         self.caches = None
         self.tokens = np.zeros(max_batch, np.int32)
-        self._serve = jax.jit(make_serve_step(model))
+        # caches are single-owner and rebound from the output every step,
+        # so the decode cache buffer is donated back to the device
+        self._serve = jax.jit(make_serve_step(model), donate_argnums=(1,))
         self.completed: Dict[int, List[int]] = {}
         # local-persistence mirrors: per-slot (rid, emitted) -- single-writer
         self.slot_mirror = np.zeros((max_batch, 2), np.int64)

@@ -1,6 +1,12 @@
 """Make `repro` importable without PYTHONPATH=src (pip install -e . also
 works via pyproject.toml) and make the tests directory importable for the
-`_hypothesis_compat` shim."""
+`_hypothesis_compat` shim.
+
+With ``QLINT_SANITIZE=1`` the qlint donation sanitizer is installed for
+the whole suite (CI runs one such job): every donating jit entry point
+poisons the caller's buffers after dispatch, so any stale-reference read
+anywhere in the tests fails loudly instead of silently aliasing
+(src/repro/analysis/sanitize.py)."""
 import os
 import sys
 
@@ -9,3 +15,7 @@ _SRC = os.path.join(os.path.dirname(_TESTS), "src")
 for _p in (_SRC, _TESTS):
     if _p not in sys.path:
         sys.path.insert(0, _p)
+
+if os.environ.get("QLINT_SANITIZE") == "1":
+    from repro.analysis import sanitize as _sanitize
+    _sanitize.install()

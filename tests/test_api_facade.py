@@ -258,7 +258,7 @@ def test_persist_stats_one_schema_for_every_topology():
         assert st["ops_total"] == 100
         shapes[Q] = st
     # the discipline bounds hold identically at both topologies
-    for Q, st in shapes.items():
+    for _Q, st in shapes.items():
         busy = st["ops"] > 0
         assert (st["pwbs_per_op"][busy] <= 1.5).all()
         assert (st["psyncs_per_op"][busy] <= 1.0).all()
@@ -361,14 +361,14 @@ def test_rebase_torn_crash_sweep_128_points(backend):
                                                       seed=9))
     for i in range(n_points):
         for qq in range(q.Q):
-            st = jax.tree.map(lambda a: a[i][qq], rec)
+            st = jax.tree.map(lambda a, i=i, qq=qq: a[i][qq], rec)
             assert peek_items(st) == [], (backend, i, qq)
     # spot-check functionality: bind a few recovered points into a fresh
     # handle and drive real traffic through them
     for i in (0, n_points // 2, n_points - 1):
         q2 = open_queue(QueueConfig(Q=q.Q, S=q.S, R=q.R, W=q.W,
                                     backend=backend))
-        vol = jax.tree.map(lambda a: jnp.asarray(a[i]), rec)
+        vol = jax.tree.map(lambda a, i=i: jnp.asarray(a[i]), rec)
         q2.bind(QueueState(vol, tree_copy(vol)))
         q2.enqueue_all(range(10))
         assert sorted(q2.drain()) == list(range(10)), (backend, i)

@@ -79,14 +79,20 @@ def test_facade_methods_are_the_documented_surface():
 
 
 def test_no_tolist_on_delivery_hot_path():
-    """Satellite guard (PR 8): the eager per-call ``.tolist()`` conversion
-    must not reappear on the delivery hot path -- ``Delivery``
-    (api/delivery.py) is the one place list materialization lives.  CI
-    runs the same grep as a lint step."""
+    """Satellite guard (PR 8, enforced by qlint since PR 9): the eager
+    per-call ``.tolist()`` conversion must not reappear on the delivery
+    hot path -- ``Delivery`` (api/delivery.py) is the one place list
+    materialization lives.  CI runs the same rule via
+    ``python -m repro.analysis.qlint``."""
     import pathlib
+
+    from repro.analysis import SourceFile, all_rules
+    from repro.analysis.rules import apply_suppressions
+    rule = all_rules()["no-tolist"]
     root = pathlib.Path(api.__file__).parent
     for mod in ("queue.py", "combine.py"):
-        text = (root / mod).read_text()
-        assert ".tolist(" not in text, (
+        src = SourceFile.parse(f"src/repro/api/{mod}",
+                               (root / mod).read_text())
+        assert apply_suppressions(src, rule.run(src)) == [], (
             f"src/repro/api/{mod} reintroduced .tolist() on the hot path; "
             "route delivery through repro.api.delivery.Delivery instead")

@@ -209,7 +209,7 @@ def test_int8_compression_error_feedback():
     err = jnp.zeros_like(g)
     total_true = jnp.zeros_like(g)
     total_sent = jnp.zeros_like(g)
-    for i in range(20):
+    for _i in range(20):
         gi = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
         _, deq, err = compress_grad(gi, err)
         total_true += gi

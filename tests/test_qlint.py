@@ -1,0 +1,343 @@
+"""qlint self-tests (DESIGN.md §11).
+
+Each rule is exercised against a seeded known-bad fixture (so the rule
+demonstrably CATCHES the regression class it exists for), the suppression
+mechanism is checked, the trace layer re-derives the paper's <=2
+persistence-instructions-per-op bound on every driver loop in the backend
+matrix, and the real tree is asserted clean -- the same invocation CI
+runs (``python -m repro.analysis.qlint src``).
+"""
+import json
+import pathlib
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import SourceFile, all_rules  # noqa: E402
+from repro.analysis.rules import apply_suppressions  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(REPO / "src")
+
+
+def _findings(rule_id, path, code):
+    src = SourceFile.parse(path, textwrap.dedent(code))
+    return all_rules()[rule_id].run(src)
+
+
+# ---------------------------------------------------------------------------
+# rule catalog / CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog_complete():
+    rules = all_rules()
+    assert {"eager-wrapper", "no-tolist", "jit-decl", "donation-reuse",
+            "persist-order", "psync-budget", "scatter-free",
+            "cache-churn"} <= set(rules)
+    for r in rules.values():
+        assert r.kind in ("ast", "trace", "runtime") and r.doc
+
+
+# ---------------------------------------------------------------------------
+# Layer-2 AST rules: each catches its seeded fixture
+# ---------------------------------------------------------------------------
+
+_BAD_DISPATCH = """
+    import jax.numpy as jnp
+
+    def flush(vol, nvm, rows, shard):
+        return fabric_enqueue_all(vol, nvm, jnp.asarray(rows),
+                                  jnp.int32(shard), jnp.int32(8))
+"""
+
+
+def test_eager_wrapper_catches_jnp_scalars_at_dispatch():
+    fs = _findings("eager-wrapper", "src/repro/api/queue.py", _BAD_DISPATCH)
+    assert len(fs) == 3
+    assert all(f.rule == "eager-wrapper" for f in fs)
+    # the np.int32 discipline is scoped to the hot dispatch modules
+    assert _findings("eager-wrapper", "src/repro/bench/report.py",
+                     _BAD_DISPATCH) == []
+
+
+def test_no_tolist_catches_hot_path_materialization():
+    code = """
+        def deliver(out):
+            return out.tolist()
+    """
+    fs = _findings("no-tolist", "src/repro/api/combine.py", code)
+    assert len(fs) == 1 and ".tolist()" in fs[0].message
+    # api/delivery.py is the ONE sanctioned list-materialization point
+    assert _findings("no-tolist", "src/repro/api/delivery.py", code) == []
+
+
+def test_jit_decl_catches_argless_jit():
+    code = """
+        import jax
+
+        serve = jax.jit(step_fn)
+        good = jax.jit(step_fn, donate_argnums=(1,))
+
+        @jax.jit
+        def f(x):
+            return x
+    """
+    fs = _findings("jit-decl", "src/repro/serving/engine.py", code)
+    assert len(fs) == 2            # bare call + bare decorator, not `good`
+    assert {f.line for f in fs} == {4, 7}
+
+
+def test_donation_reuse_catches_stale_read():
+    bad = """
+        def step(self, ev, dm):
+            new = fabric_step(self.vol, self.nvm, ev, dm, 0)
+            stale = self.vol.vals          # read after donation
+            return new, stale
+    """
+    fs = _findings("donation-reuse", "src/repro/api/queue.py", bad)
+    assert len(fs) == 1 and "donated" in fs[0].message
+    good = """
+        def step(self, ev, dm):
+            self.vol, self.nvm, ok, out = fabric_step(
+                self.vol, self.nvm, ev, dm, 0)
+            return ok, self.vol.vals       # rebound first: fine
+    """
+    assert _findings("donation-reuse", "src/repro/api/queue.py", good) == []
+
+
+def test_donation_reuse_catches_image_aliasing():
+    alias = """
+        def adopt(self):
+            self._vol = self._nvm
+    """
+    fs = _findings("donation-reuse", "src/repro/core/persistence.py", alias)
+    assert len(fs) == 1 and "alias" in fs[0].message
+
+
+def test_suppression_comment_same_line_and_line_above():
+    code = """
+        def deliver(out):
+            return out.tolist()  # qlint: disable=no-tolist
+    """
+    src = SourceFile.parse("src/repro/api/combine.py", textwrap.dedent(code))
+    rule = all_rules()["no-tolist"]
+    assert rule.run(src)                       # raw finding exists
+    assert apply_suppressions(src, rule.run(src)) == []
+    code2 = """
+        def deliver(out):
+            # qlint: disable=all
+            return out.tolist()
+    """
+    src2 = SourceFile.parse("src/repro/api/combine.py",
+                            textwrap.dedent(code2))
+    assert apply_suppressions(src2, rule.run(src2)) == []
+
+
+# ---------------------------------------------------------------------------
+# Layer-1 trace rules: seeded bad loops against the real checker
+# ---------------------------------------------------------------------------
+
+
+def _check_fixture_loop(body):
+    """Trace a synthetic 28-slot while loop and run the real driver-loop
+    checker (ENQ_LOOP spec) over its body jaxpr."""
+    from repro.analysis.jaxpr_rules import check_driver_loop, find_while_eqns
+    from repro.analysis.registry import ENQ_LOOP
+    carry = tuple(np.int32(i) for i in range(ENQ_LOOP.n_carry))
+    closed = jax.make_jaxpr(lambda c: jax.lax.while_loop(
+        lambda cc: cc[ENQ_LOOP.psync_slot] < 8, body, c))(carry)
+    (eqn,) = find_while_eqns(closed)
+    return check_driver_loop(eqn.params["body_jaxpr"].jaxpr,
+                             eqn.params["body_nconsts"], ENQ_LOOP, "fixture")
+
+
+def test_persist_order_catches_psync_before_pwb():
+    def body(c):
+        c = list(c)
+        rounds = c[25] + 1            # psync counter traced FIRST ...
+        c[12] = c[12] + c[0]          # ... NVM 'vals' leaf written after
+        c[25] = rounds
+        return tuple(c)
+
+    findings, info = _check_fixture_loop(body)
+    assert any(f.rule == "persist-order" and "vals" in f.message
+               for f in findings)
+    assert info["persist_order_ok"] is False
+
+
+def test_psync_budget_catches_double_drain():
+    def body(c):
+        c = list(c)
+        c[12] = c[12] + c[0]
+        c[25] = c[25] + 2             # two drains per round
+        return tuple(c)
+
+    findings, info = _check_fixture_loop(body)
+    assert any(f.rule == "psync-budget" and "2" in f.message
+               for f in findings)
+    assert info["psyncs_per_round"] == 2 and info.get("budget_ok") is not True
+
+
+def test_psync_budget_catches_unbounded_pwb_term():
+    def body(c):
+        c = list(c)
+        c[12] = c[12] + c[0]
+        c[25] = c[25] + 1
+        c[26] = c[26] + c[27]         # pwb accumulator += arbitrary carry
+        return tuple(c)
+
+    findings, info = _check_fixture_loop(body)
+    assert any(f.rule == "psync-budget" and "unrecognized" in f.message
+               for f in findings)
+    assert info["unknown_pwb_terms"] == 1
+
+
+def test_clean_fixture_loop_passes():
+    def body(c):
+        c = list(c)
+        c[12] = c[12] + c[0]          # NVM write ...
+        c[26] = c[26] + (c[0] > 0)    # pwb: bounded per-round line record
+        c[25] = c[25] + 1             # ... then the single drain
+        return tuple(c)
+
+    findings, info = _check_fixture_loop(body)
+    assert findings == []
+    assert info["psyncs_per_round"] == 1 and info["persist_order_ok"]
+
+
+def test_scatter_free_catches_scatter_primitive():
+    from repro.analysis.jaxpr_rules import scatter_findings_for
+    x, i = np.zeros(8, np.int32), np.int32(3)
+    bad = jax.make_jaxpr(lambda a, j: a.at[j].set(0))(x, i)
+    fs = scatter_findings_for(bad, "fixture-loop")
+    assert len(fs) == 1 and "scatter" in fs[0].message
+    clean = jax.make_jaxpr(lambda a, j: a[j])(x, i)
+    assert scatter_findings_for(clean, "fixture-loop") == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree: trace layer re-derives the paper bound, AST layer clean
+# ---------------------------------------------------------------------------
+
+
+def test_psync_budget_report_confirms_paper_bound():
+    """The headline static check: every driver while-loop in the backend
+    matrix (jnp + pallas, megakernel on AND off) costs exactly one psync
+    per fused wave, at most one cell pwb per completed op, and <= 2
+    per-round line pwbs -- the paper's <=2 persistence instructions/op."""
+    from repro.analysis.jaxpr_rules import psync_budget_report
+    rows = psync_budget_report()
+    assert len(rows) == 12            # 3 entries x 3 matrix cells + submit x2
+    assert all(r["budget_ok"] for r in rows)
+    for r in rows:
+        assert r["psyncs_per_round"] == 1
+        assert r["pwbs_per_op"] == 1 and r["unknown_pwb_terms"] == 0
+        if r["loop"] == "enqueue_all":      # header line only
+            assert r["pwbs_per_round"] == 1 and r["min_wave_for_budget"] == 2
+        else:                               # dequeue: mirror + header
+            assert r["loop"] == "dequeue_n"
+            assert r["pwbs_per_round"] == 2 and r["min_wave_for_budget"] == 3
+    labels = " ".join(str(r["label"]) for r in rows)
+    assert "pallas" in labels and "jnp" in labels
+
+
+def test_trace_rules_clean_on_real_tree():
+    rules = all_rules()
+    for rid in ("persist-order", "psync-budget", "scatter-free"):
+        assert rules[rid].run(None) == [], f"{rid} regressed on src/"
+
+
+def test_qlint_cli_clean_on_src(tmp_path):
+    from repro.analysis import qlint
+    report = tmp_path / "qlint.json"
+    rc = qlint.main([SRC, "--json", str(report), "--no-trace"])
+    assert rc == 0
+    data = json.loads(report.read_text())
+    assert data["tool"] == "qlint" and data["findings"] == []
+    assert data["summary"]["findings"] == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime companions: dispatch parity, sanitizer, cache churn
+# ---------------------------------------------------------------------------
+
+
+def test_np_scalar_dispatch_parity_with_jnp_wrappers():
+    """The qlint eager-wrapper fixes converted facade dispatch scalars
+    from eager jnp wrappers to np.int32: results must be bit-identical."""
+    from repro.core import driver as drv
+    from repro.core.fabric import fabric_init
+
+    def run(mk):
+        vol, nvm = fabric_init(2, 2, 8), fabric_init(2, 2, 8)
+        items = np.full((2, 4), -1, np.int32)
+        items[0, :3] = [1, 2, 3]
+        items[1, :2] = [4, 5]
+        out = drv.fabric_enqueue_all(vol, nvm, items, mk(0), mk(6),
+                                     W=4, backend="jnp")
+        return jax.device_get(out)
+
+    a, b = run(np.int32), run(jnp.int32)
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sanitizer_poisons_donated_buffers():
+    """QLINT_SANITIZE ground truth: after a donating dispatch the caller's
+    original buffers are deleted, so any stale read raises instead of
+    silently aliasing the result image."""
+    from repro.analysis import sanitize
+    from repro.core import fabric as fab
+
+    was_active = sanitize.active()
+    sanitize.install()
+    try:
+        assert getattr(fab.fabric_step, "__qlint_sanitized__", False)
+        vol, nvm = fab.fabric_init(2, 2, 8), fab.fabric_init(2, 2, 8)
+        stale = vol.vals
+        ev = np.full((2, 4), -1, np.int32)
+        ev[:, 0] = (7, 8)
+        dm = np.zeros((2, 4), bool)
+        vol2, nvm2, ok, out = fab.fabric_step(vol, nvm, ev, dm, np.int32(0),
+                                              backend="jnp")
+        assert int(np.asarray(jax.device_get(ok)).sum()) == 2
+        with pytest.raises(RuntimeError):
+            np.asarray(stale)              # deleted: loud, not corrupt
+    finally:
+        if not was_active:
+            sanitize.uninstall()
+
+
+def test_cache_churn_detects_varying_dispatch_shapes():
+    """Seeded churn: a workload whose second round dispatches a new wave
+    width recompiles fabric_step -- exactly what the detector reports."""
+    from repro.analysis import cache_churn
+    from repro.core import fabric as fab
+
+    widths = iter([4, 8])
+
+    def workload():
+        W = next(widths)
+        vol, nvm = fab.fabric_init(2, 2, 8), fab.fabric_init(2, 2, 8)
+        ev = np.full((2, W), -1, np.int32)
+        dm = np.zeros((2, W), bool)
+        fab.fabric_step(vol, nvm, ev, dm, np.int32(0), backend="jnp")
+
+    fs = cache_churn.churn_findings(workload)
+    assert any(f.rule == "cache-churn" and "fabric_step" in f.file
+               for f in fs)
+
+    def steady():
+        vol, nvm = fab.fabric_init(2, 2, 8), fab.fabric_init(2, 2, 8)
+        ev = np.full((2, 4), -1, np.int32)
+        dm = np.zeros((2, 4), bool)
+        fab.fabric_step(vol, nvm, ev, dm, np.int32(0), backend="jnp")
+
+    assert cache_churn.churn_findings(steady) == []

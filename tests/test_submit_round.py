@@ -144,7 +144,7 @@ def test_facade_submit_round_matches_two_call_path(backend):
 def _drive(comb, flushes=3, n_prod=4, batch=3):
     tickets = []
     base = 0
-    for f in range(flushes):
+    for _f in range(flushes):
         fts = []
         for p in range(n_prod):
             fts.append(comb.submit_enqueue(
@@ -224,7 +224,7 @@ def test_depth2_pipeline_matches_depth1_results():
     # flight and its tickets are still pending
     tickets = []
     base = 0
-    for f in range(3):
+    for _f in range(3):
         fts = [c2.submit_enqueue(range(base + p * 3, base + (p + 1) * 3),
                                  producer=p) for p in range(4)]
         base += 12
