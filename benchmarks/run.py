@@ -95,6 +95,27 @@ ROW_SCHEMA = {
                       "the fraction of the fabric's lane capacity the "
                       "rounds actually filled (combine rows, computed "
                       "identically for both real paths)",
+    "qcheck_rows": "qcheck_exhaust = FaultPlan('exhaust') on the canonical "
+                   "primed small scope (S=2, R=4, W=4, all 2W+2 flush "
+                   "records live -- the full 2^10-image epoch per queue): "
+                   "enumeration + vmapped recovery of EVERY reachable "
+                   "crash image + the crash-during-recovery re-crash + "
+                   "the host checker pass, timed end to end (--qcheck "
+                   "rows, DESIGN.md §12)",
+    "qcheck_images": "first-order crash images enumerated (qcheck rows; "
+                     "equals qcheck_image_space iff coverage is exhaustive"
+                     " -- the claim_exhaustive_crash_coverage gate)",
+    "qcheck_recovery_images": "crash-during-recovery re-crash images "
+                              "(qcheck rows)",
+    "qcheck_image_space": "size of the full reachable-image space per the "
+                          "persist-order graphs (qcheck rows)",
+    "qcheck_recovery_mode": "'subsets' = recovery re-crashed at every "
+                            "subset of its write stream; 'points' = every "
+                            "prefix point (the over-budget floor; the "
+                            "interpret-mode pallas row)",
+    "us_per_image": "amortized microseconds per model-checked image, "
+                    "first-order + re-crash (qcheck rows)",
+    "images_per_sec": "model-checked images per second (qcheck rows)",
 }
 
 
@@ -157,6 +178,13 @@ def main() -> None:
                          "two-dispatch combine vs fused depth-1 vs fused "
                          "depth-2 at equal total ops (pipeline_* rows + "
                          "claims)")
+    ap.add_argument("--qcheck", action="store_true",
+                    help="additionally measure exhaustive small-scope "
+                         "crash-image model checking: FaultPlan('exhaust') "
+                         "on the canonical primed scope, enumeration + "
+                         "recovery + re-crash + checker end to end "
+                         "(qcheck_exhaust rows, images-checked/sec, and "
+                         "the exhaustive-coverage claim)")
     ap.add_argument("--out", metavar="FILE", default=None,
                     help="write the wave/fabric JSON rows (+ schema and the "
                          "claim checks) to FILE, e.g. BENCH_PR2.json")
@@ -238,6 +266,8 @@ def main() -> None:
         rowsw += wave_engine.run_combine(backends=backends, fast=args.fast)
     if args.pipeline:
         rowsw += wave_engine.run_pipeline(backends=backends, fast=args.fast)
+    if args.qcheck:
+        rowsw += wave_engine.run_qcheck(backends=backends, fast=args.fast)
     for r in rowsw:
         print(json.dumps(r, default=float))
     device = [r for r in rowsw if r["path"].startswith("wave_driver/")]
@@ -368,6 +398,27 @@ def main() -> None:
             if be == "jnp":
                 claims["pipeline"]["claim_pipeline_speedup"] = speed >= 1.3
         claims["pipeline"]["claim_single_dispatch_flush"] = single
+    # PR-10 tentpole: the qcheck rows only exist if EVERY enumerated crash
+    # image passed the checker (res.check() raises on any violation), so
+    # the claim pins coverage, not correctness-by-sampling: the jnp row
+    # must have enumerated the FULL image space of the primed scope
+    # (>= 2^10 images per queue) with the crash-during-recovery re-crash
+    # at every SUBSET of recovery's write stream
+    qr = {r["backend"]: r for r in rowsw
+          if r["path"].startswith("qcheck_exhaust/")}
+    if qr:
+        claims["qcheck"] = {}
+        for be, r in qr.items():
+            claims["qcheck"][f"images_per_sec_{be}"] = r["images_per_sec"]
+            claims["qcheck"][f"images_{be}"] = r["qcheck_images"]
+            claims["qcheck"][f"recovery_images_{be}"] = (
+                r["qcheck_recovery_images"])
+        if "jnp" in qr:
+            r = qr["jnp"]
+            claims["qcheck"]["claim_exhaustive_crash_coverage"] = (
+                r["qcheck_images"] == r["qcheck_image_space"]
+                and r["qcheck_images"] >= (1 << 10) * r["shards"]
+                and r["qcheck_recovery_mode"] == "subsets")
 
     print("\n# paper-claim checks", file=sys.stderr)
     print(json.dumps(claims, indent=2, default=float), file=sys.stderr)

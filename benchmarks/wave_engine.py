@@ -598,3 +598,56 @@ def run_recovery(backends: Sequence[str] = ("jnp", "pallas"),
                 "cells_per_sec": n_sweep * Q * S * r / dt,
             })
     return rows
+
+
+def run_qcheck(backends: Sequence[str] = ("jnp", "pallas"),
+               fast: bool = False, Q: int = 2):
+    """Exhaustive small-scope model-checking throughput (DESIGN.md §12):
+    ``FaultPlan("exhaust")`` on the canonical primed scope (S=2, R=4, W=4,
+    every flush record live -- the FULL 2^10-image epoch per queue), one
+    row per backend:
+
+      * enumeration+recovery of every reachable crash image, PLUS the
+        crash-during-recovery re-crash matrix, PLUS the host-side checker
+        pass over every terminal state, timed end to end;
+      * ``images_per_sec`` counts first-order AND recovery re-crash images
+        (the unit of model-checking work).
+
+    jnp exhausts the recovery re-crash at every SUBSET of recovery's write
+    stream (2^8 per image); interpret-mode pallas takes the prefix-points
+    floor (``budget=1``) -- mirroring the CI qcheck job.  The
+    ``claim_exhaustive_crash_coverage`` check in benchmarks/run.py pins
+    the jnp row to the full image space with zero violations (``check()``
+    raises on any)."""
+    from repro.analysis.qcheck.scenarios import (small_scope_queue,
+                                                 small_scope_wave)
+    from repro.api import FaultPlan
+
+    rows = []
+    enq, lanes = small_scope_wave(Q=Q)
+    for backend in backends:
+        budget = (1 << 20) if backend == "jnp" else 1
+        plan = FaultPlan("exhaust", enq_items=enq, deq_lanes=lanes,
+                         budget=budget)
+        q = small_scope_queue(Q=Q, backend=backend)
+        q.crash(plan)                          # warm pass compiles
+        t0 = time.perf_counter()
+        res = q.crash(plan)
+        dt_enum = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        agg = res.check()                      # raises on ANY violation
+        dt_check = time.perf_counter() - t0
+        n = agg["images"] + agg["recovery_images"]
+        dt = dt_enum + dt_check
+        rows.append({
+            "path": f"qcheck_exhaust/{backend}/q{Q}",
+            "backend": backend, "shards": Q,
+            "qcheck_images": agg["images"],
+            "qcheck_recovery_images": agg["recovery_images"],
+            "qcheck_image_space": agg["image_space"],
+            "qcheck_recovery_mode": res.recovery_mode,
+            "us_per_call": dt * 1e6,
+            "us_per_image": dt * 1e6 / n,
+            "images_per_sec": n / dt,
+        })
+    return rows

@@ -601,11 +601,162 @@ def _journal_barrier_findings() -> List[Finding]:
     return findings
 
 
+REBASE_FILE = "src/repro/core/persistence.py"
+SERVING_FILE = "src/repro/serving/engine.py"
+
+#: the combiner-journal bypasses the serving rule bans: any of these
+#: dispatched on a raw ``.queue`` handle skips the announce-before-apply
+#: barrier (intents must route through ``Combiner.submit_*``; forensic
+#: reads like ``peek_items``/``crash`` surfaces stay allowed)
+SERVING_DISPATCH_BANS = frozenset(
+    {"enqueue_all", "dequeue_n", "submit_round", "step", "drain"})
+
+
+def _rebase_coverage_findings(apply_fn=None) -> List[Finding]:
+    """RebaseDelta record coverage (the rebase analog of the wave delta
+    check): every persisted NVM leaf of ``apply_rebase`` must be
+    materialized FROM the RebaseDelta record arrays under the mask, so a
+    torn rebase replays exactly the records the maintenance flush issued.
+    ``apply_fn`` is injectable for the known-bad fixture tests."""
+    import jax
+
+    from repro.core.persistence import apply_rebase, make_rebase_delta
+    from repro.core.wave import init_state
+    apply_fn = apply_fn or apply_rebase
+    S, R, P = 2, 4, 1
+    fresh = init_state(S, R, P)
+    delta = make_rebase_delta(fresh)
+    n_rec = S * R + P + 1
+    mask = np.zeros((n_rec,), bool)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            closed = jax.make_jaxpr(apply_fn)(fresh, delta, mask)
+    except Exception as e:  # pragma: no cover - trace infra failure
+        return [Finding("persist-order", REBASE_FILE, 0,
+                        f"apply_rebase: trace failed: {e!r}")]
+    jaxpr, outs = unwrap_pjit(closed)
+    n_nvm = len(jax.tree.leaves(fresh))
+    n_delta = len(jax.tree.leaves(delta))
+    if len(outs) != n_nvm:
+        return [Finding(
+            "persist-order", REBASE_FILE, 0,
+            f"apply_rebase: unexpected output arity {len(outs)} (expected "
+            f"{n_nvm}) -- rebase coverage check needs updating")]
+    prod = producer_map(jaxpr)
+    # invars: nvm leaves, then delta record arrays, then the crash mask
+    delta_vars = {v for v in jaxpr.invars[n_nvm:n_nvm + n_delta]
+                  if isinstance(v, Var)}
+    mask_var = jaxpr.invars[n_nvm + n_delta]
+    uncovered, unmasked = [], []
+    for field in reg.PERSISTED_FIELDS:
+        ov = outs[reg.WAVE_STATE_FIELDS.index(field)]
+        if not isinstance(ov, Var) or prod.get(ov) is None:
+            # passthrough: a delta array returned verbatim replays the
+            # record UNMASKED (the adversary cannot tear it); anything
+            # else means the record is never applied at all
+            if ov in delta_vars:
+                unmasked.append(field)
+            else:
+                uncovered.append(field)
+            continue
+        anc = ancestor_vars(ov, prod)
+        if not (anc & delta_vars):
+            uncovered.append(field)
+        if mask_var not in anc:
+            unmasked.append(field)
+    findings: List[Finding] = []
+    if uncovered:
+        findings.append(Finding(
+            "persist-order", REBASE_FILE, 0,
+            "apply_rebase: persisted NVM leaves not materialized from the "
+            f"RebaseDelta records: {', '.join(uncovered)} -- a torn rebase "
+            "would replay a different flush than the one issued"))
+    if unmasked:
+        findings.append(Finding(
+            "persist-order", REBASE_FILE, 0,
+            "apply_rebase: persisted NVM leaves ignore the crash mask: "
+            f"{', '.join(unmasked)} -- the eviction adversary could not "
+            "tear these records, hiding reachable crash images"))
+    return findings
+
+
+def _rebase_barrier_findings(masks=None, S: int = 2, R: int = 4,
+                             P: int = 1) -> List[Finding]:
+    """The two-psync-epoch structure of ``rebase_masks``: every sampled
+    crash mask must be ADMISSIBLE under the rebase persist-order graph
+    (header record in => every phase-1 record in; the psync barrier of
+    DESIGN.md §8/§12).  Checked against ``qcheck.rebase_graph`` -- the
+    model checker's reachability predicate IS the spec.  ``masks`` is
+    injectable for the known-bad fixture tests."""
+    import jax
+
+    from repro.analysis.qcheck.graph import rebase_graph
+    from repro.core.persistence import rebase_masks, rebase_records
+    n_rec = rebase_records(S, R, P)
+    if masks is None:
+        masks, _ = rebase_masks(jax.random.PRNGKey(0), 64, n_rec)
+    g = rebase_graph(S, R, P)
+    m = np.asarray(jax.device_get(masks), bool)
+    bad = [i for i in range(m.shape[0]) if not g.admits(m[i])]
+    if not bad:
+        return []
+    return [Finding(
+        "persist-order", REBASE_FILE, 0,
+        f"rebase_masks: {len(bad)} of {m.shape[0]} sampled crash masks "
+        f"(rows {bad[:4]}{'...' if len(bad) > 4 else ''}) are unreachable "
+        "under the two-psync-epoch rebase graph -- the header commit "
+        "record landed without the phase-1 records the psync barrier "
+        "forces in")]
+
+
+def _serving_flush_findings(source: Optional[str] = None) -> List[Finding]:
+    """Serving-engine flush sites: every queue mutation must route through
+    the combiner front-end (``submit_enqueue``/``submit_dequeue``), never
+    dispatch on a raw ``.queue`` handle -- a direct dispatch skips the
+    intent journal, so a crash there loses the operation WITHOUT a verdict
+    (the announce-before-apply barrier, engine layer).  ``source`` is
+    injectable for the known-bad fixture tests."""
+    if source is None:
+        import repro.serving.engine as engine_mod
+        try:
+            with open(engine_mod.__file__, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as e:  # pragma: no cover
+            return [Finding("persist-order", SERVING_FILE, 0,
+                            f"cannot read serving engine: {e!r}")]
+    try:
+        tree = ast.parse(source, filename=SERVING_FILE)
+    except SyntaxError as e:  # pragma: no cover
+        return [Finding("persist-order", SERVING_FILE, 0,
+                        f"cannot parse serving engine: {e!r}")]
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute)
+                and fn.attr in SERVING_DISPATCH_BANS):
+            continue
+        recv = fn.value
+        if isinstance(recv, ast.Attribute) and recv.attr == "queue":
+            findings.append(Finding(
+                "persist-order", SERVING_FILE, node.lineno,
+                f"serving flush site dispatches .{fn.attr}() on the raw "
+                "queue handle, bypassing the combiner's intent journal -- "
+                "route it through Combiner.submit_* so a crash yields a "
+                "verdict instead of silent loss"))
+    return findings
+
+
 def _persist_order_rule(_=None) -> List[Finding]:
     f, _rep = _checked_loops_cached()
     findings = [x for x in f if x.rule == "persist-order"]
     findings.extend(_delta_coverage_findings())
     findings.extend(_journal_barrier_findings())
+    findings.extend(_rebase_coverage_findings())
+    findings.extend(_rebase_barrier_findings())
+    findings.extend(_serving_flush_findings())
     return findings
 
 

@@ -1,0 +1,30 @@
+"""qcheck: exhaustive small-scope crash-image model checking (DESIGN.md §12).
+
+The qlint layer (PR 9) lints the persistence DISCIPLINE -- the shape of the
+pwb/psync instruction stream.  qcheck proves the STATE SPACE that discipline
+induces: it rebuilds the persist-order happens-before graph from the
+recorded flush streams (``graph``), enumerates EVERY reachable NVM crash
+image of the open fence epoch (``exhaust`` -- all record prefixes x all
+per-line eviction subsets, which collapses to all subsets of the epoch's
+live records), drives each image through recovery, re-crashes recovery
+itself at every point of its own write stream (idempotence), and feeds
+every terminal state through the unchanged durable-linearizability checker.
+
+Entry points:
+
+  * ``PersistentQueue.crash(FaultPlan("exhaust"))`` -- facade surface,
+  * ``Combiner.crash_exhaust()`` -- with the intent journal + in-flight
+    rounds in the frame,
+  * ``python -m repro.analysis.qcheck`` -- the CLI (``--json`` artifact,
+    exit 1 on violations), alongside ``python -m repro.analysis.qlint``.
+"""
+from repro.analysis.qcheck.graph import (PersistGraph, journal_graph,
+                                         rebase_graph, recovery_graph,
+                                         wave_graph)
+from repro.analysis.qcheck.exhaust import (exhaust_announce, exhaust_rebase,
+                                           exhaust_wave)
+
+__all__ = [
+    "PersistGraph", "wave_graph", "rebase_graph", "recovery_graph",
+    "journal_graph", "exhaust_wave", "exhaust_rebase", "exhaust_announce",
+]

@@ -1,0 +1,141 @@
+"""qcheck CLI: exhaustive small-scope crash-image model checking.
+
+    python -m repro.analysis.qcheck [--backends jnp,pallas] [--queues 2]
+                                    [--budget N] [--json FILE]
+                                    [--skip wave,rebase,announce]
+
+Runs the three exhaustive enumerations of DESIGN.md §12 at the canonical
+small scope (S=2, R=4, W=4; every flush record live -- 2^10 images per
+queue) on each backend:
+
+  * wave     -- every reachable image of one wave's flush epoch, recovered
+                and re-crashed through recovery's own write stream
+                (``exhaust_wave`` via ``FaultPlan("exhaust")``),
+  * rebase   -- every image of the two-psync-epoch ticket rebase
+                (``exhaust_rebase``),
+  * announce -- every subset of the journal's pending announcements
+                (``exhaust_announce``).
+
+Exit status 1 if ANY enumerated image violates durable linearizability or
+recovery idempotence; ``--json`` writes the machine-readable report the CI
+qcheck job archives.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, List
+
+SECTIONS = ("wave", "rebase", "announce")
+
+
+def _run_wave(backend: str, queues: int, budget: int) -> Dict[str, Any]:
+    from repro.api import FaultPlan
+    from repro.analysis.qcheck.scenarios import (small_scope_queue,
+                                                 small_scope_wave)
+
+    q = small_scope_queue(Q=queues, backend=backend)
+    enq_items, deq_lanes = small_scope_wave(Q=queues)
+    res = q.crash(FaultPlan("exhaust", enq_items=enq_items,
+                            deq_lanes=deq_lanes, budget=budget))
+    agg = dict(res.check())
+    agg["recovery_mode"] = res.recovery_mode
+    # the model checker must never mutate the system under test
+    assert sorted(q.peek_items()) == sorted(
+        100 + 4 * queues + i for i in range(4 * queues)), \
+        "exhaust mutated the live queue"
+    return agg
+
+
+def _run_rebase(backend: str, queues: int, budget: int) -> Dict[str, Any]:
+    from repro.analysis.qcheck.exhaust import exhaust_rebase
+    from repro.analysis.qcheck.scenarios import small_scope_queue
+
+    q = small_scope_queue(Q=queues, backend=backend)
+    q.drain()                                   # rebase needs quiescence
+    return dict(exhaust_rebase(q, budget=budget))
+
+
+def _run_announce(backend: str, queues: int, budget: int) -> Dict[str, Any]:
+    from repro.analysis.qcheck.exhaust import exhaust_announce
+    from repro.analysis.qcheck.scenarios import small_scope_combiner
+
+    c = small_scope_combiner(Q=max(queues, 2), backend=backend)
+    return dict(exhaust_announce(c))
+
+
+_RUNNERS = {"wave": _run_wave, "rebase": _run_rebase,
+            "announce": _run_announce}
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.qcheck",
+        description="exhaustive small-scope crash-image model checker "
+                    "(DESIGN.md §12)")
+    ap.add_argument("--backends", default="jnp,pallas",
+                    help="comma list of engine backends (default both)")
+    ap.add_argument("--queues", type=int, default=2, metavar="Q",
+                    help="fabric width of the small scope (default 2)")
+    ap.add_argument("--budget", type=int, default=1 << 20,
+                    help="stage-2 (crash-during-recovery) image cap: under "
+                         "it every SUBSET of recovery's writes, over it "
+                         "every prefix point (default 2^20)")
+    ap.add_argument("--skip", default="", metavar="SECTIONS",
+                    help=f"comma list from {','.join(SECTIONS)}")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="machine-readable report (per-section counts)")
+    args = ap.parse_args(argv)
+
+    skip = {s for s in args.skip.split(",") if s}
+    unknown = skip - set(SECTIONS)
+    if unknown:
+        ap.error(f"--skip: unknown section(s) {sorted(unknown)}")
+
+    report: Dict[str, Any] = {"queues": args.queues, "budget": args.budget,
+                              "backends": {}, "violations": []}
+    for backend in args.backends.split(","):
+        per: Dict[str, Any] = {}
+        for section in SECTIONS:
+            if section in skip:
+                continue
+            t0 = time.perf_counter()
+            try:
+                agg = _RUNNERS[section](backend, args.queues, args.budget)
+                agg["seconds"] = round(time.perf_counter() - t0, 3)
+                per[section] = agg
+                print(f"qcheck [{backend}] {section}: "
+                      + " ".join(f"{k}={v}" for k, v in agg.items()))
+            except AssertionError as e:
+                report["violations"].append(
+                    {"backend": backend, "section": section,
+                     "error": str(e)})
+                per[section] = {"violation": str(e)}
+                print(f"qcheck [{backend}] {section}: VIOLATION\n"
+                      f"{traceback.format_exc()}", file=sys.stderr)
+        report["backends"][backend] = per
+
+    n_img = sum(int(sec.get("images", 0))
+                for per in report["backends"].values()
+                for sec in per.values())
+    n_rec = sum(int(sec.get("recovery_images", 0))
+                for per in report["backends"].values()
+                for sec in per.values())
+    report["images_total"] = n_img
+    report["recovery_images_total"] = n_rec
+    status = "FAIL" if report["violations"] else "ok"
+    print(f"qcheck: {n_img} crash images + {n_rec} recovery re-crash "
+          f"images checked -- {status}")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"qcheck: report written to {args.json}")
+    return 1 if report["violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

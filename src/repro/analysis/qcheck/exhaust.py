@@ -1,0 +1,300 @@
+"""Exhaustive crash-image enumeration + crash-during-recovery re-crash.
+
+The engine behind ``FaultPlan(kind="exhaust")`` (DESIGN.md §12).  Where
+``crash_sweep`` SAMPLES n_points seeded prefix+eviction cuts of a wave's
+flush, ``exhaust_wave`` enumerates the FULL reachable image space of the
+open fence epoch -- every record prefix x every per-line eviction subset,
+i.e. all 2^k subsets of the k live records per queue
+(``persistence.exhaustive_masks`` over the ``graph.wave_graph`` epochs) --
+and recovers every image in vmapped device batches, ``crash_sweep`` style.
+
+On top of the first-order images it re-crashes RECOVERY ITSELF: recovery's
+own write stream is the row-major cell re-init sequence of Algorithm 3
+lines 81-83 (``graph.recovery_graph`` -- one open epoch: recovery's psync
+may not have drained when the second crash hits), so for every first-order
+image X with full recovery R0 = recover(X) it materializes the partial
+images "X with an arbitrary subset (or, over budget, every prefix point)
+of R0's cell writes applied" and asserts the idempotence contract
+``recover(crash(recover(X))) == recover(X)`` BIT-EXACTLY.  The terminal
+states then feed the unchanged ``consistency.check_wave_crash`` through
+``api.faults.ExhaustResult.check``.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import get_backend
+from repro.core.persistence import (apply_delta, apply_rebase,
+                                    exhaustive_masks, make_rebase_delta,
+                                    tree_copy)
+from repro.core.wave import _recover_impl, init_state, peek_items
+from repro.analysis.qcheck.graph import (journal_graph, rebase_graph,
+                                         recovery_graph, wave_graph)
+
+#: stage-2 images per device call (bounds transient batch memory while
+#: keeping the whole small-scope run within a handful of dispatches)
+RECRASH_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Device batches (jitted; one compilation per (shape, backend))
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exhaust_batch(nvm_pre, delta, masks, qidx, backend="jnp"):
+    """Materialize + recover every enumerated image in ONE device call.
+    ``masks`` [N, n_records] spans all queues; ``qidx`` [N] gathers each
+    image's queue out of the Q-stacked pre-wave image and delta.  Returns
+    (torn images, recovered states), both stacked on the [N] axis."""
+    b = get_backend(backend)
+
+    def one(qi, mk):
+        nvm_q = jax.tree.map(lambda a: a[qi], nvm_pre)
+        d_q = jax.tree.map(lambda a: a[qi], delta)
+        img = apply_delta(nvm_q, d_q, mk)
+        return img, _recover_impl(img, b)
+
+    return jax.vmap(one)(qidx, masks)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _full_flush(nvm_pre, delta, backend="jnp"):
+    """Recovery of the COMPLETED flush (every record landed) per queue --
+    the [Q]-stacked endpoint image the combined checker embeds exhaustive
+    single-queue images into."""
+    b = get_backend(backend)
+    return jax.vmap(
+        lambda n, d: _recover_impl(apply_delta(n, d), b))(nvm_pre, delta)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _recrash_batch(imgs, recs, rmasks, backend="jnp"):
+    """Idempotence of recovery under its own torn write stream, vmapped:
+    for every (first-order image, its full recovery) pair and every
+    recovery-write mask [M, S, R], recover the partial image and compare
+    BIT-EXACTLY against the full recovery.  Returns ok [N, M] bool."""
+    b = get_backend(backend)
+
+    def one_pair(img, rec):
+        def one_mask(mk):
+            part = img._replace(
+                vals=jnp.where(mk, rec.vals, img.vals),
+                idxs=jnp.where(mk, rec.idxs, img.idxs),
+                safes=jnp.where(mk, rec.safes, img.safes))
+            r1 = _recover_impl(part, b)
+            eq = jax.tree.map(lambda x, y: jnp.all(x == y), r1, rec)
+            return jnp.stack(jax.tree.leaves(eq)).all()
+
+        return jax.vmap(one_mask)(rmasks)
+
+    return jax.vmap(one_pair)(imgs, recs)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _rebase_batch(nvm_pre, delta, masks, qidx, backend="jnp"):
+    """Rebase counterpart of ``_exhaust_batch``: every reachable torn image
+    of the two-epoch rebase flush, materialized + recovered in one call."""
+    b = get_backend(backend)
+
+    def one(qi, mk):
+        nvm_q = jax.tree.map(lambda a: a[qi], nvm_pre)
+        img = apply_rebase(nvm_q, delta, mk)
+        return img, _recover_impl(img, b)
+
+    return jax.vmap(one)(qidx, masks)
+
+
+def _recovery_masks(S: int, R: int, n_images: int, budget: int
+                    ) -> Tuple[np.ndarray, str]:
+    """The stage-2 mask universe over recovery's S*R-record write stream:
+    every subset when the (n_images x 2^(S*R)) product fits ``budget``,
+    else every prefix point (the crash-during-recovery points floor)."""
+    n = S * R
+    if n <= 24 and n_images * (1 << n) <= budget:
+        return exhaustive_masks(np.ones(n, bool)).reshape(-1, S, R), \
+            "subsets"
+    return np.tril(np.ones((n + 1, n), bool), -1).reshape(-1, S, R), \
+        "points"
+
+
+def _recrash_all(imgs, recs, rmasks: np.ndarray, backend: str) -> np.ndarray:
+    """Chunked driver for ``_recrash_batch`` (RECRASH_CHUNK images per
+    dispatch; at most two compiled shapes).  Returns ok [N, M] bool."""
+    N = int(jax.tree.leaves(imgs)[0].shape[0])
+    rm = jnp.asarray(rmasks)
+    outs: List[np.ndarray] = []
+    for lo in range(0, N, RECRASH_CHUNK):
+        hi = min(lo + RECRASH_CHUNK, N)
+        sl = jax.tree.map(lambda a: a[lo:hi], imgs)
+        sr = jax.tree.map(lambda a: a[lo:hi], recs)
+        outs.append(np.asarray(jax.device_get(
+            _recrash_batch(sl, sr, rm, backend=backend))))
+    return np.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The wave-flush exhaust (consumed by PersistentQueue.crash("exhaust"))
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveExhaust:
+    """Carrier for one exhaustive wave-flush enumeration (the facade wraps
+    it with the FIFO oracle as ``api.faults.ExhaustResult``)."""
+
+    states: Any               # [n_images, ...] recovered single-queue states
+    images: Any               # [n_images, ...] torn NVM images (pre-recovery)
+    full_states: Any          # [Q, ...] recovery of the completed flush
+    masks: np.ndarray         # [n_images, n_records] bool
+    queue_index: np.ndarray   # [n_images] int32
+    graphs: Tuple[Any, ...]   # per-queue PersistGraph
+    recovery_ok: np.ndarray   # [n_images, n_recovery_masks] bool
+    recovery_mode: str        # "subsets" | "points"
+    n_recovery_images: int
+
+
+def exhaust_wave(nvm_pre, delta, backend: str = "jnp", *,
+                 budget: int = 1 << 20) -> WaveExhaust:
+    """Enumerate EVERY reachable crash image of one fabric wave's flush and
+    drive each through recovery plus the crash-during-recovery re-crash.
+
+    ``nvm_pre``/``delta`` are the Q-stacked pre-wave image and flush delta
+    (``fabric_step_delta``).  Each queue's flush epoch is exhausted
+    independently (2^k_q images for k_q live records): recovery and the
+    per-queue FIFO contract are queue-local, so the per-queue enumeration
+    covers the full product space for every property checked -- the
+    combined checker embeds each image with every OTHER queue's flush
+    complete, a reachable global image (see ``CombinedExhaust``).
+
+    ``budget`` caps the stage-2 image count: under it, recovery is
+    re-crashed at every SUBSET of its write stream; over it, at every
+    prefix point."""
+    Q = int(jax.tree.leaves(nvm_pre)[0].shape[0])
+    S, R = (int(d) for d in np.shape(nvm_pre.vals)[1:])
+    graphs = tuple(wave_graph(delta, queue=q) for q in range(Q))
+    per_q = [g.reachable_masks() for g in graphs]
+    masks = np.concatenate(per_q, axis=0)
+    qidx = np.concatenate([np.full(m.shape[0], q, np.int32)
+                           for q, m in enumerate(per_q)])
+    imgs, states = _exhaust_batch(nvm_pre, delta, jnp.asarray(masks),
+                                  jnp.asarray(qidx), backend=backend)
+    full_states = _full_flush(nvm_pre, delta, backend=backend)
+    rmasks, mode = _recovery_masks(S, R, masks.shape[0], budget)
+    ok = _recrash_all(imgs, states, rmasks, backend)
+    return WaveExhaust(
+        states=states, images=imgs, full_states=full_states, masks=masks,
+        queue_index=qidx, graphs=graphs, recovery_ok=ok,
+        recovery_mode=mode,
+        n_recovery_images=int(masks.shape[0]) * int(rmasks.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# The rebase-flush exhaust (two psync epochs; every image recovers empty)
+# ---------------------------------------------------------------------------
+
+
+def exhaust_rebase(queue, *, budget: int = 1 << 20) -> Dict[str, int]:
+    """Exhaust the quiescent ticket rebase: every reachable image of the
+    two-epoch rebase flush (all phase-1 subsets with the header out, plus
+    the committed image -- ``rebase_graph.reachable_masks``) must recover
+    EMPTY on every internal queue, and recovery over each must be
+    idempotent under its own torn write stream.  Non-mutating forensics on
+    a DRAINED facade handle; raises on the first violation."""
+    leftover = queue.peek_items()
+    assert not leftover, f"rebase exhaust needs a drained queue: {leftover}"
+    Q, S, R, P = queue.Q, queue.S, queue.R, queue.P
+    g = rebase_graph(S, R, P)
+    per_q = g.reachable_masks()
+    masks = np.concatenate([per_q] * Q, axis=0)
+    qidx = np.concatenate([np.full(per_q.shape[0], q, np.int32)
+                           for q in range(Q)])
+    delta = make_rebase_delta(init_state(S, R, P))
+    nvm_pre = tree_copy(queue._nvm)
+    imgs, states = _rebase_batch(nvm_pre, delta, jnp.asarray(masks),
+                                 jnp.asarray(qidx), backend=queue.backend)
+    host = jax.device_get(states)
+    for i in range(masks.shape[0]):
+        out = peek_items(jax.tree.map(lambda a, i=i: a[i], host))
+        assert not out, (
+            f"rebase image {i} (queue {qidx[i]}, mask {masks[i].astype(int)})"
+            f" recovered non-empty: {out}")
+    rmasks, mode = _recovery_masks(S, R, masks.shape[0], budget)
+    ok = _recrash_all(imgs, states, rmasks, backend=queue.backend)
+    assert ok.all(), (
+        f"rebase recovery not idempotent at image "
+        f"{np.argwhere(~ok)[0].tolist()}")
+    return {"images": int(masks.shape[0]),
+            "recovery_images": int(masks.shape[0]) * int(rmasks.shape[0]),
+            "recovery_mode": mode,
+            "image_space": Q * g.image_space_size()}
+
+
+# ---------------------------------------------------------------------------
+# The announce-crash exhaust (journal epoch; host-side, no device batches)
+# ---------------------------------------------------------------------------
+
+
+def exhaust_announce(combiner) -> Dict[str, int]:
+    """Exhaust the intent journal's open epoch: the round never dispatched,
+    so for EVERY subset of the pending announcement records the surviving
+    journal must resolve each affected ticket to a definitive verdict
+    against the recovered image -- never ``completed`` (nothing of the
+    round reached the device), lost announcements as "announcement-lost".
+    Non-mutating (each subset tears a deep copy of the journal); raises on
+    the first violation; returns enumeration counts."""
+    from repro.core.intent import DEQ, ENQ, Verdict, resolve_verdicts
+    journal = combiner.journal
+    g = journal_graph(journal)
+    pend = journal.pending_records()
+    if pend > 16:
+        raise ValueError(
+            f"exhaust_announce: 2^{pend} journal images is not a small "
+            f"scope")
+    pending_ids = [r.ticket for r in journal._pending
+                   if r.kind in (ENQ, DEQ)]
+    from repro.core.fabric import fabric_recover
+    rec = fabric_recover(tree_copy(combiner.queue._nvm),
+                         backend=combiner.queue.backend)
+    host = jax.device_get(rec)
+    survivors = frozenset(
+        it for q in range(combiner.queue.Q)
+        for it in peek_items(jax.tree.map(lambda a, q=q: a[q], host)))
+    dispatched = frozenset(combiner._inflight_dispatched())
+    masks = exhaustive_masks(np.ones(pend, bool))
+    checked = 0
+    for mk in masks:
+        assert g.admits(np.concatenate(
+            [np.ones(len(journal.records) - pend, bool), mk]))
+        j2 = copy.deepcopy(journal)
+        lost = j2.crash(mask=[bool(b) for b in mk])
+        verdicts = resolve_verdicts(j2.outstanding(), survivors,
+                                    dispatched=dispatched)
+        for r in lost:
+            if r.kind in (ENQ, DEQ):
+                verdicts[r.ticket] = Verdict(
+                    r.ticket, r.producer, r.kind, completed=False,
+                    note="announcement-lost")
+        for t in pending_ids:
+            v = verdicts.get(t)
+            assert v is not None, (
+                f"pending ticket {t} left unresolved at journal mask "
+                f"{mk.astype(int)}")
+            assert not v.completed, (
+                f"undispatched ticket {t} resolved completed at journal "
+                f"mask {mk.astype(int)}: {v}")
+            assert set(v.survived) <= survivors, (t, v)
+            checked += 1
+    return {"images": int(masks.shape[0]), "records": pend,
+            "verdicts": checked, "image_space": g.image_space_size()}
+
+
+__all__ = ["WaveExhaust", "exhaust_wave", "exhaust_rebase",
+           "exhaust_announce", "RECRASH_CHUNK"]

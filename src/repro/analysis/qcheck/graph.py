@@ -1,0 +1,177 @@
+"""Persist-order happens-before graphs over recorded flush streams.
+
+Every flush in the repo is an ORDERED sequence of pwb records (the record
+idiom of ``core/persistence.py::apply_delta``); psyncs partition that
+sequence into *fence epochs*.  The happens-before structure is exactly:
+
+  * records inside one epoch are CONCURRENT -- the pwbs only request
+    write-backs, so until the epoch's psync drains them the eviction
+    adversary can land any subset, in any order;
+  * a psync is a barrier edge -- every record of a drained epoch
+    happens-before every record issued after the drain, so an image
+    containing any record of epoch e+1 contains ALL of epoch e.
+
+A reachable crash image is therefore "every earlier epoch complete, the
+open epoch torn to an arbitrary subset of its live records" -- which is
+what ``reachable_masks`` enumerates exhaustively (``persistence.
+exhaustive_masks`` per epoch) and ``admits`` decides for a single mask.
+The graph builders read the three recorded stream kinds: a wave's
+``WaveDelta`` (one open epoch), the quiescent rebase's ``RebaseDelta``
+(two psync epochs -- the header commit record rides the second), the
+``IntentJournal`` (durable prefix + pending open tail), plus recovery's
+own cell re-init stream (one open epoch; crash-during-recovery).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.persistence import exhaustive_masks
+
+
+@dataclasses.dataclass(frozen=True)
+class PersistGraph:
+    """The persist-order DAG of one recorded flush stream.
+
+    Nodes are the ordered pwb records (``kinds``/``live``); the only edges
+    are the psync barriers, stored as the epoch partition (``epochs``:
+    half-open record ranges in issue order, a psync after each except --
+    when ``open_epoch`` -- the last)."""
+
+    kinds: Tuple[str, ...]
+    live: Any                            # np bool [n_records]
+    epochs: Tuple[Tuple[int, int], ...]
+    open_epoch: bool = True
+    source: str = "wave"
+
+    @property
+    def n_records(self) -> int:
+        return len(self.kinds)
+
+    def epoch_of(self, i: int) -> int:
+        for e, (lo, hi) in enumerate(self.epochs):
+            if lo <= i < hi:
+                return e
+        raise IndexError(f"record {i} outside {self.epochs}")
+
+    def happens_before(self, i: int, j: int) -> bool:
+        """True iff a psync barrier orders record i before record j (same-
+        epoch records are concurrent -- the adversary picks)."""
+        return self.epoch_of(i) < self.epoch_of(j)
+
+    def admits(self, mask) -> bool:
+        """Is ``mask`` a reachable crash image?  Reachable = all live
+        records of every epoch before some crash epoch e present, none of
+        any epoch after e, any subset inside e.  Dead-record bits are
+        ignored (they flush nothing)."""
+        m = np.asarray(jax.device_get(mask), bool).reshape(-1)
+        live = np.asarray(self.live, bool)
+        assert m.size == live.size, (m.size, live.size)
+        ml = m & live
+        for e in range(len(self.epochs)):
+            ok = True
+            for e2, (lo, hi) in enumerate(self.epochs):
+                if e2 < e and not (ml[lo:hi] == live[lo:hi]).all():
+                    ok = False
+                elif e2 > e and ml[lo:hi].any():
+                    ok = False
+            if ok:
+                return True
+        return False
+
+    def image_space_size(self) -> int:
+        """Number of DISTINCT reachable images: 1 (nothing landed) plus
+        2^k_e - 1 fresh images per epoch e (k_e = live records in e) --
+        epoch boundaries alias (epoch e complete == epoch e+1 empty)."""
+        total = 1
+        live = np.asarray(self.live, bool)
+        for lo, hi in self.epochs:
+            total += (1 << int(live[lo:hi].sum())) - 1
+        return total
+
+    def reachable_masks(self) -> np.ndarray:
+        """EVERY reachable crash image, deduped: np bool
+        [image_space_size, n_records], dead bits False."""
+        live = np.asarray(self.live, bool)
+        rows = []
+        for e, (lo, hi) in enumerate(self.epochs):
+            sub = exhaustive_masks(live[lo:hi])
+            block = np.zeros((sub.shape[0], live.size), bool)
+            block[:, lo:hi] = sub
+            for lo2, hi2 in self.epochs[:e]:
+                block[:, lo2:hi2] = live[lo2:hi2]
+            rows.append(block)
+        masks = np.unique(np.concatenate(rows, axis=0), axis=0)
+        assert masks.shape[0] == self.image_space_size()
+        return masks
+
+
+def wave_graph(delta, queue: Optional[int] = None) -> PersistGraph:
+    """Graph of ONE wave's flush delta (``persistence.WaveDelta``): W
+    enqueue cells, W dequeue cells, the Head-mirror line, the segment-
+    header line -- all in ONE open epoch (the wave's psync has not drained
+    when the crash hits; that is the whole torn-crash surface).  ``queue``
+    unstacks one queue of a Q-stacked fabric delta."""
+    d = jax.device_get(delta)
+    if queue is not None:
+        d = jax.tree.map(lambda a: a[queue], d)
+    W2 = int(np.asarray(d.slot).shape[-1])
+    W = W2 // 2
+    kinds = (("enq-cell",) * W + ("deq-cell",) * W
+             + ("head-mirror", "seg-header"))
+    live = np.concatenate([
+        np.asarray(d.live, bool).reshape(-1),
+        np.asarray([bool(np.asarray(d.mirror_live)), True]),
+    ])
+    return PersistGraph(kinds=kinds, live=live, epochs=((0, W2 + 2),),
+                        open_epoch=True, source="wave")
+
+
+def rebase_graph(S: int, R: int, P: int = 1) -> PersistGraph:
+    """Graph of the quiescent ticket rebase (``persistence.RebaseDelta``):
+    S*R cell re-init lines + P Head-mirror lines, a psync barrier, then the
+    header commit record as its own second epoch -- the adversary can never
+    land the header ahead of a phase-1 record (``rebase_masks`` semantics,
+    machine-checked by qlint's barrier rule through ``admits``)."""
+    n1 = S * R + P
+    kinds = (("rebase-cell",) * (S * R) + ("head-mirror",) * P
+             + ("seg-header",))
+    return PersistGraph(kinds=kinds, live=np.ones(n1 + 1, bool),
+                        epochs=((0, n1), (n1, n1 + 1)),
+                        open_epoch=True, source="rebase")
+
+
+def recovery_graph(S: int, R: int) -> PersistGraph:
+    """Graph of recovery's OWN write stream: the S*R cell re-init lines
+    (row-major) of Algorithm 3 lines 81-83.  Recovery never rewrites
+    mirrors or the segment header, and a crash can hit before its final
+    psync -- one open epoch, so crash-during-recovery images are arbitrary
+    subsets of the re-init writes over the pre-recovery image."""
+    kinds = ("recovery-cell",) * (S * R)
+    return PersistGraph(kinds=kinds, live=np.ones(S * R, bool),
+                        epochs=((0, S * R),), open_epoch=True,
+                        source="recovery")
+
+
+def journal_graph(journal) -> PersistGraph:
+    """Graph of an ``IntentJournal``: records already covered by a psync
+    form the drained prefix epoch; the pending tail (announcements riding
+    the next sync) is the open epoch the announce-crash adversary tears."""
+    recs = list(journal.records)
+    n = len(recs)
+    pend = journal.pending_records()
+    kinds = tuple(f"journal-{r.kind}" for r in recs)
+    durable = n - pend
+    if durable and pend:
+        epochs: Tuple[Tuple[int, int], ...] = ((0, durable), (durable, n))
+    else:
+        epochs = ((0, n),)
+    return PersistGraph(kinds=kinds, live=np.ones(n, bool), epochs=epochs,
+                        open_epoch=pend > 0, source="journal")
+
+
+__all__ = ["PersistGraph", "wave_graph", "rebase_graph", "recovery_graph",
+           "journal_graph"]

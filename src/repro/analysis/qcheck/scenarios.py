@@ -1,0 +1,77 @@
+"""Canonical small-scope states for the qcheck model checker.
+
+The exhaustive enumeration is only exhaustive relative to the wave it
+tears, and a wave's flush epoch carries 2^k images for k LIVE records --
+lanes that actually linearized.  A casually-built queue silently shrinks
+the scope: a full tail row kills every enqueue lane, an empty head row
+every dequeue lane.  These builders construct the maximal small scope the
+acceptance bar asks for -- at S=2, R=4, W=4 a wave with ALL 2W+2 = 10
+records live per queue, i.e. the full 2^10-image epoch:
+
+  1. fill both rows (8 items/queue; the tantrum FAI overshoots the first
+     row's tail, which is why a bare partial drain never retires it),
+  2. dequeue the first row's items,
+  3. one all-dequeue wave to burn the overshot tickets so ``first``
+     advances off the drained row,
+  4. one failing-enqueue wave to tantrum-close the full row and RECYCLE
+     the retired one as a fresh empty tail.
+
+The wave then torn by ``FaultPlan("exhaust")`` lands W enqueues in the
+recycled row and W dequeues from the full one -- every cell record live,
+and the enumeration runs against a post-recycling pool (epoch 2), the
+state the recovery-idempotence satellite cares about.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+#: the small-scope shape of the acceptance bar (2^10 images per queue)
+SMALL_SCOPE = dict(S=2, R=4, W=4)
+
+
+def small_scope_queue(Q: int = 1, backend: str = "jnp", *,
+                      first_item: int = 100):
+    """A ``PersistentQueue`` primed so the next W-enqueue/W-dequeue wave
+    has every flush record live (head row full, tail row a recycled empty
+    incarnation).  Returns the queue; its contents are items
+    ``first_item + 4*Q .. first_item + 8*Q - 1`` (round-robin placed)."""
+    from repro.api import QueueConfig, open_queue
+
+    q = open_queue(QueueConfig(Q=Q, backend=backend, **SMALL_SCOPE))
+    W = q.W
+    q.enqueue_all(range(first_item, first_item + 8 * Q))
+    q.dequeue_n(4 * Q)
+    idle = np.full((Q, W), -1, np.int32)
+    q.step(idle, np.ones((Q, W), bool))        # burn overshot tickets
+    fail = np.copy(idle)
+    fail[:, 0] = 2 ** 20                       # doomed lane: tantrum + recycle
+    q.step(fail, np.zeros((Q, W), bool))
+    return q
+
+
+def small_scope_wave(Q: int = 1) -> Tuple[Tuple[int, ...], int]:
+    """The (enq_items, deq_lanes) wave that is maximally live on a
+    ``small_scope_queue``: W fresh items per queue, every dequeue lane."""
+    W = SMALL_SCOPE["W"]
+    return tuple(range(1, W * Q + 1)), W
+
+
+def small_scope_combiner(Q: int = 2, backend: str = "jnp", *,
+                         pending: int = 6):
+    """A ``Combiner`` with a durable pre-state and ``pending`` announced
+    but never-dispatched intents -- the open journal epoch
+    ``exhaust_announce`` enumerates (2^pending images)."""
+    from repro.api import QueueConfig, open_combiner
+
+    c = open_combiner(QueueConfig(Q=Q, backend=backend, **SMALL_SCOPE))
+    c.submit_enqueue([1, 2, 3]).result()       # durable, synced pre-state
+    for i in range(pending - 1):
+        c.submit_enqueue([10 + i])
+    c.submit_dequeue(1)
+    return c
+
+
+__all__ = ["SMALL_SCOPE", "small_scope_queue", "small_scope_wave",
+           "small_scope_combiner"]

@@ -16,12 +16,13 @@ the functional core: stable for power users, but only this module is the
 supported constructor surface -- ``tests/test_api_surface.py`` snapshots
 ``__all__`` so it cannot grow by accident.
 """
-from repro.api.combine import (CombinedSweep, Combiner, Ticket, Verdict,
-                               open_combiner)
+from repro.api.combine import (CombinedExhaust, CombinedSweep, Combiner,
+                               Ticket, Verdict, open_combiner)
 from repro.api.config import (TICKET_HORIZON, Capabilities, CapabilityError,
                               QueueConfig, negotiate)
 from repro.api.delivery import Delivery
-from repro.api.faults import FaultPlan, SweepResult, as_fault_plan
+from repro.api.faults import (ExhaustResult, FaultPlan, SweepResult,
+                              as_fault_plan)
 from repro.api.maintenance import (Maintenance, RebaseNotQuiescent,
                                    RebaseReport)
 from repro.api.queue import (PersistentQueue, QueueFull, QueueState,
@@ -30,9 +31,11 @@ from repro.api.queue import (PersistentQueue, QueueFull, QueueState,
 __all__ = [
     "Capabilities",
     "CapabilityError",
+    "CombinedExhaust",
     "CombinedSweep",
     "Combiner",
     "Delivery",
+    "ExhaustResult",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",

@@ -170,6 +170,83 @@ class CombinedSweep:
         return agg
 
 
+@dataclasses.dataclass(frozen=True)
+class CombinedExhaust:
+    """An EXHAUSTIVE crash enumeration of one combined round, with
+    per-ticket verdicts on every image (the qcheck counterpart of
+    ``CombinedSweep``; DESIGN.md §12).
+
+    The facade's ``ExhaustResult`` enumerates each internal queue's flush
+    epoch independently; the global crash image behind image i is "queue
+    ``queue_index[i]`` torn at mask i, every OTHER queue's flush complete"
+    -- a reachable image (a psync-free epoch can land fully), and since
+    round items live on exactly one internal queue, sweeping i over all
+    (queue, subset) pairs exercises every per-item durability case the
+    verdict logic can meet."""
+
+    exhaust: Any                       # the facade's ExhaustResult
+    records: tuple                     # outstanding IntentRecords (snapshot)
+    dispatched: frozenset              # items of the crashed round's wave
+    queue: Any                         # the live PersistentQueue (peek only)
+
+    def survivors_at(self, image: int) -> List[int]:
+        """Recovered queue contents (all Q queues, queue-major) of the
+        global image embedding enumerated image ``image``."""
+        ex = self.exhaust
+        qi = int(ex.queue_index[image])
+        full = ex.full_items()
+        out: List[int] = []
+        for q in range(len(ex.pre_items)):
+            out.extend(ex.items_at(image) if q == qi else full[q])
+        return out
+
+    def verdicts_at(self, image: int) -> Dict[int, Verdict]:
+        """Per-ticket verdicts for one enumerated image."""
+        return resolve_verdicts(self.records,
+                                frozenset(self.survivors_at(image)),
+                                dispatched=self.dispatched)
+
+    def check(self) -> Dict[str, int]:
+        """Queue-level durable linearizability + recovery idempotence on
+        EVERY enumerated image (``ExhaustResult.check``) PLUS the
+        ``CombinedSweep.check`` verdict invariants at every image.  Raises
+        on the first violation; returns aggregates."""
+        import jax
+        from repro.core.wave import peek_items
+        ex = self.exhaust
+        agg = ex.check()
+        full = ex.full_items()
+        states = jax.device_get(ex.states)
+        qn = len(ex.pre_items)
+        full_flat: List[List[int]] = [list(full[q]) for q in range(qn)]
+        completed = 0
+        for i in range(ex.n_images):
+            qi = int(ex.queue_index[i])
+            own = peek_items(jax.tree.map(lambda a, i=i: a[i], states))
+            surv = set(own)
+            for q in range(qn):
+                if q != qi:
+                    surv.update(full_flat[q])
+            vs = resolve_verdicts(self.records, frozenset(surv),
+                                  dispatched=self.dispatched)
+            assert len(vs) == len(self.records)
+            for rec in self.records:
+                v = vs[rec.ticket]
+                if rec.kind == DEQ:
+                    assert not v.completed, (i, rec)
+                    continue
+                durable = [it for it in rec.items if it in surv]
+                assert list(v.survived) == durable, (i, rec, v)
+                assert v.completed == (len(durable) == len(rec.items))
+                for it in rec.items:
+                    if it not in self.dispatched:
+                        assert it not in surv, (i, rec, it)
+                completed += int(v.completed)
+        agg["verdicts"] = ex.n_images * len(self.records)
+        agg["completed_tickets"] = completed
+        return agg
+
+
 class _Flight:
     """One dispatched-but-unretired flush (the pipelined flush unit).
 
@@ -552,9 +629,14 @@ class Combiner:
         submission -- not the board's) and resolve the board: announced-
         but-unflushed intents were never dispatched, so each gets a
         definitive verdict against the recovered image.  For the board's
-        OWN wave use ``crash_torn``; for sweeps use ``crash_sweep``."""
+        OWN wave use ``crash_torn``; for sweeps use ``crash_sweep``; for
+        exhaustive small-scope enumeration use ``crash_exhaust``."""
         if plan.kind == "sweep":
             raise ValueError("use crash_sweep() for non-mutating sweeps")
+        if plan.kind == "exhaust":
+            raise ValueError(
+                "use crash_exhaust() for non-mutating exhaustive "
+                "enumeration")
         self.journal.sync()
         self.queue.crash(plan)
         verdicts = resolve_verdicts(
@@ -605,6 +687,28 @@ class Combiner:
                         | frozenset(self._inflight_dispatched())),
             queue=self.queue)
 
+    def crash_exhaust(self, shard: int = 0, budget: int = 1 << 20
+                      ) -> CombinedExhaust:
+        """Small-scope model checking of the board's in-flight wave:
+        enumerate EVERY reachable crash image of its flush epoch (plus the
+        crash-during-recovery re-crash -- ``FaultPlan("exhaust")``,
+        DESIGN.md §12) WITHOUT mutating the live queue or the board, and
+        resolve per-ticket verdicts on every image.  In-flight
+        (dispatched-but-unretired) flushes stay journal-outstanding and
+        their items join the dispatched set, exactly as in
+        ``crash_sweep``."""
+        self.journal.sync()
+        wave, deq_lanes = self._plan_wave()
+        ex = self.queue.crash(FaultPlan(
+            "exhaust", enq_items=tuple(wave), deq_lanes=deq_lanes,
+            shard=shard, budget=budget))
+        records = tuple(r for r in self.journal.outstanding())
+        return CombinedExhaust(
+            exhaust=ex, records=records,
+            dispatched=(frozenset(wave)
+                        | frozenset(self._inflight_dispatched())),
+            queue=self.queue)
+
     def _resolve_crashed(self, verdicts: Dict[int, Verdict]) -> None:
         # in-flight flushes die with the host: their results were never
         # synced, so the tickets resolve to verdicts (never "done") -- the
@@ -626,5 +730,5 @@ class Combiner:
             self.journal.sync()
 
 
-__all__ = ["Combiner", "CombinedSweep", "Ticket", "Verdict", "IntentRecord",
-           "open_combiner"]
+__all__ = ["Combiner", "CombinedSweep", "CombinedExhaust", "Ticket",
+           "Verdict", "IntentRecord", "open_combiner"]

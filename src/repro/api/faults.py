@@ -17,6 +17,13 @@ folds them into one declarative object consumed by
     device call, WITHOUT mutating the live queue.  Returns a ``SweepResult``
     whose per-point/per-queue contents feed ``consistency.check_wave_crash``
     directly (``SweepResult.check`` runs the whole sweep through it).
+  * ``FaultPlan("exhaust", ...)`` -- small-scope model checking: enumerate
+    EVERY reachable crash image of the wave's flush epoch (all record
+    prefixes x all per-line eviction subsets -- ``repro.analysis.qcheck``,
+    DESIGN.md §12), recover each, re-crash recovery itself at every point
+    of its own write stream, WITHOUT mutating the live queue.  Returns an
+    ``ExhaustResult`` whose ``check()`` feeds every terminal state through
+    the same checker and asserts recovery idempotence bit-exactly.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import dataclasses
 from typing import Any, Dict, List, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.consistency import check_wave_crash
 from repro.core.wave import peek_items
@@ -31,7 +39,8 @@ from repro.core.wave import peek_items
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
-    """One crash, declaratively.  ``kind``: "clean" | "torn" | "sweep"."""
+    """One crash, declaratively.
+    ``kind``: "clean" | "torn" | "sweep" | "exhaust"."""
 
     kind: str = "clean"
     enq_items: Tuple[int, ...] = ()   # in-flight enqueues of the crashed wave
@@ -41,12 +50,13 @@ class FaultPlan:
     crash_point: Any = None           # pin the flush prefix (None = random)
     evict_rate: float = 0.25          # eviction-adversary rate
     n_points: int = 256               # sweep only: crash points to cover
+    budget: int = 1 << 20             # exhaust only: stage-2 image cap
 
     def __post_init__(self):
-        if self.kind not in ("clean", "torn", "sweep"):
+        if self.kind not in ("clean", "torn", "sweep", "exhaust"):
             raise ValueError(
-                f"FaultPlan.kind must be 'clean', 'torn' or 'sweep',"
-                f" got {self.kind!r}")
+                f"FaultPlan.kind must be 'clean', 'torn', 'sweep' or"
+                f" 'exhaust', got {self.kind!r}")
         object.__setattr__(self, "enq_items",
                            tuple(int(x) for x in self.enq_items))
 
@@ -71,7 +81,11 @@ class SweepResult:
     def check(self) -> Dict[str, int]:
         """Run every (point, queue) recovery through the shared
         durable-linearizability checker; raises on the first violation.
-        Returns aggregate {"lost_prefix": ..., "survived_wave_enqs": ...}."""
+        ``distinct_points`` is the deduped crash-image count the sampled
+        sweep actually covered (seeded draws can alias; exhaustive qcheck
+        masks are distinct by construction) -- the number a reproducible
+        coverage claim should quote, not ``n_points``."""
+        from repro.core.persistence import distinct_mask_count
         states = jax.device_get(self.states)
         lost = survived = 0
         for i in range(self.n_points):
@@ -83,7 +97,85 @@ class SweepResult:
                                      self.deq_lanes, out)
                 lost += r["lost_prefix"]
                 survived += r["survived_wave_enqs"]
-        return {"lost_prefix": lost, "survived_wave_enqs": survived}
+        return {"lost_prefix": lost, "survived_wave_enqs": survived,
+                "distinct_points": distinct_mask_count(self.points)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExhaustResult:
+    """An exhaustive small-scope crash enumeration's evidence
+    (``FaultPlan("exhaust")`` -- the model-checking counterpart of
+    ``SweepResult``, built by ``repro.analysis.qcheck``).
+
+    Unlike a sweep's fixed [n_points, Q] grid, images are enumerated PER
+    QUEUE (queue q's flush epoch has 2^k_q live-record subsets), stacked
+    flat on one [n_images] axis with ``queue_index`` mapping each image to
+    its queue.  ``recovery_ok[i, m]`` is the bit-exact idempotence verdict
+    of re-crashing image i's recovery at its m-th write-stream mask
+    (every subset under the plan budget, else every prefix point --
+    ``recovery_mode``)."""
+
+    states: Any                       # recovered single-queue states [n, ...]
+    images: Any                       # torn NVM images (pre-recovery) [n, ...]
+    full_states: Any                  # [Q, ...] completed-flush recovery
+    masks: Any                        # np bool [n_images, n_records]
+    queue_index: Any                  # np int32 [n_images]
+    graphs: Tuple[Any, ...]           # per-queue qcheck.PersistGraph
+    recovery_ok: Any                  # np bool [n_images, n_recovery_masks]
+    recovery_mode: str                # "subsets" | "points"
+    n_recovery_images: int
+    pre_items: Tuple[Tuple[int, ...], ...]   # per-queue pre-wave contents
+    wave_enqs: Tuple[Tuple[int, ...], ...]   # per-queue in-flight enqueues
+    deq_lanes: int                    # in-flight dequeue lanes per queue
+
+    @property
+    def n_images(self) -> int:
+        return int(self.masks.shape[0])
+
+    def state_at(self, i: int):
+        """One recovered single-queue WaveState (unstacked), image i."""
+        return jax.tree.map(lambda a: a[i], self.states)
+
+    def items_at(self, i: int) -> List[int]:
+        """Recovered contents of image i's own internal queue."""
+        return peek_items(self.state_at(i))
+
+    def full_items(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-queue contents of the COMPLETED flush's recovery (the image
+        every other queue holds when one queue's epoch is being torn)."""
+        host = jax.device_get(self.full_states)
+        return tuple(
+            tuple(peek_items(jax.tree.map(lambda a, q=q: a[q], host)))
+            for q in range(len(self.pre_items)))
+
+    def check(self) -> Dict[str, int]:
+        """Feed EVERY enumerated image through the unchanged durable-
+        linearizability checker and assert the recovery-idempotence matrix
+        is all-True.  Raises on the first violation; returns aggregates."""
+        states = jax.device_get(self.states)
+        lost = survived = 0
+        for i in range(self.n_images):
+            q = int(self.queue_index[i])
+            out = peek_items(jax.tree.map(lambda a, i=i: a[i], states))
+            r = check_wave_crash(list(self.pre_items[q]),
+                                 list(self.wave_enqs[q]),
+                                 self.deq_lanes, out)
+            lost += r["lost_prefix"]
+            survived += r["survived_wave_enqs"]
+        ok = np.asarray(self.recovery_ok, bool)
+        if not ok.all():
+            i, m = np.argwhere(~ok)[0]
+            raise AssertionError(
+                f"recovery is NOT idempotent: image {i} (queue "
+                f"{int(self.queue_index[i])}, mask "
+                f"{np.asarray(self.masks[i]).astype(int)}), recovery-write "
+                f"mask #{m} ({self.recovery_mode}) recovers differently "
+                f"than the untorn recovery")
+        return {"images": self.n_images,
+                "recovery_images": self.n_recovery_images,
+                "image_space": sum(g.image_space_size()
+                                   for g in self.graphs),
+                "lost_prefix": lost, "survived_wave_enqs": survived}
 
 
 def as_fault_plan(torn: Any, seed: int = 0) -> FaultPlan:
@@ -99,4 +191,5 @@ def as_fault_plan(torn: Any, seed: int = 0) -> FaultPlan:
     return FaultPlan("torn", **kw)
 
 
-__all__: List[str] = ["FaultPlan", "SweepResult", "as_fault_plan"]
+__all__: List[str] = ["FaultPlan", "SweepResult", "ExhaustResult",
+                      "as_fault_plan"]

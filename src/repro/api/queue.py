@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.api.config import Capabilities, QueueConfig, negotiate
 from repro.api.delivery import Delivery
-from repro.api.faults import FaultPlan, SweepResult
+from repro.api.faults import ExhaustResult, FaultPlan, SweepResult
 from repro.core import driver as _drv
 from repro.core.fabric import (fabric_crash_sweep, fabric_dequeue_scan,
                                fabric_enqueue_scan, fabric_init,
@@ -587,7 +587,7 @@ class PersistentQueue:
     # -- fault injection ------------------------------------------------------
 
     def crash(self, plan: FaultPlan = FaultPlan()):
-        """THE crash surface (FaultPlan: clean | torn | sweep).
+        """THE crash surface (FaultPlan: clean | torn | sweep | exhaust).
 
         * clean -- full crash at a wave boundary; every volatile image is
           lost, one vectorized recovery scan rebuilds all Q queues.
@@ -602,7 +602,15 @@ class PersistentQueue:
           wave and recover every one in ONE vmapped device call, WITHOUT
           mutating the live queue.  Returns a ``SweepResult`` (its
           ``check()`` feeds every point through the shared
-          durable-linearizability checker)."""
+          durable-linearizability checker).
+        * exhaust -- small-scope model checking (repro.analysis.qcheck,
+          DESIGN.md §12): enumerate EVERY reachable crash image of that
+          wave's flush epoch per queue (all 2^k live-record subsets, i.e.
+          every prefix x every eviction subset), recover each, and
+          re-crash each recovery at every point/subset of its own write
+          stream (bit-exact idempotence) -- all in a handful of vmapped
+          device calls, WITHOUT mutating the live queue.  Returns an
+          ``ExhaustResult``."""
         if plan.kind == "clean":
             self._vol, self._nvm = crash_recover_images(
                 crash(self._nvm),
@@ -624,7 +632,7 @@ class PersistentQueue:
                 jax.vmap(apply_delta)(self._nvm, delta, masks),
                 lambda img: fabric_recover(img, backend=self.backend))
             return self._vol
-        # sweep: forensics only -- the live handle is left untouched
+        # sweep/exhaust: forensics only -- the live handle is left untouched
         pre = self.peek_items_per_queue()
         nvm_pre = tree_copy(self._nvm)
         place0 = self._place
@@ -633,6 +641,23 @@ class PersistentQueue:
         _v, _n, _ok, _out, delta = fabric_step_delta(
             self._vol, self._nvm, ev, dm,
             np.int32(plan.shard), backend=self.backend)
+        if plan.kind == "exhaust":
+            # lazy import: analysis rides on top of the api layer (the
+            # qcheck CLI drives this facade), so the engine only loads
+            # when an exhaust plan is actually run
+            from repro.analysis.qcheck.exhaust import exhaust_wave
+            ex = exhaust_wave(nvm_pre, delta, backend=self.backend,
+                              budget=plan.budget)
+            return ExhaustResult(
+                states=ex.states, images=ex.images,
+                full_states=ex.full_states, masks=ex.masks,
+                queue_index=ex.queue_index, graphs=ex.graphs,
+                recovery_ok=ex.recovery_ok,
+                recovery_mode=ex.recovery_mode,
+                n_recovery_images=ex.n_recovery_images,
+                pre_items=tuple(tuple(p) for p in pre),
+                wave_enqs=tuple(tuple(p) for p in pend),
+                deq_lanes=plan.deq_lanes)
         states, masks = fabric_crash_sweep(
             nvm_pre, delta, jax.random.PRNGKey(plan.seed), plan.n_points,
             backend=self.backend, evict_rate=plan.evict_rate)

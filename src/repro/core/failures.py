@@ -50,8 +50,11 @@ class ScenarioSpec:
     """One run/crash/recover scenario, independent of the stack under test.
 
     ``crash``: "none" (run to completion), "clean" (crash at an operation /
-    wave boundary) or "torn" (crash mid-flush; on the machine stack every
-    crash is torn by construction)."""
+    wave boundary), "torn" (crash mid-flush; on the machine stack every
+    crash is torn by construction) or "exhaust" (wave stack only: before
+    the torn injection, model-check EVERY reachable image of the crashed
+    wave's flush epoch through ``repro.analysis.qcheck`` -- the injected
+    crash is then one point of a fully-verified space)."""
 
     epochs: int = 2
     crash: str = "torn"
@@ -76,7 +79,7 @@ def run_scenario(driver, spec: ScenarioSpec) -> Dict[str, Any]:
 
     Returns {"epochs": [...], "n_enqueued": ..., "n_consumed": ...}.
     """
-    assert spec.crash in ("none", "clean", "torn"), spec.crash
+    assert spec.crash in ("none", "clean", "torn", "exhaust"), spec.crash
     epochs: List[Dict[str, Any]] = []
     for e in range(spec.epochs):
         crashed = spec.crash != "none"
@@ -219,6 +222,19 @@ class WaveScenario:
             self.queue.crash_and_recover()
             return []
         items = self._fresh_items(self.torn_enq)
+        if mode == "exhaust":
+            # model-check the WHOLE image space of the wave about to be
+            # torn (non-mutating; DESIGN.md §12), then inject one point of
+            # it -- the scenario keeps its sampled history, now backed by
+            # an exhaustive proof for this wave's flush epoch
+            from repro.api.faults import FaultPlan
+            if not hasattr(self.queue, "crash"):
+                raise TypeError(
+                    "crash='exhaust' needs the repro.api facade queue "
+                    "(PersistentQueue), not the deprecated core handles")
+            self.queue.crash(FaultPlan(
+                "exhaust", enq_items=items,
+                deq_lanes=self.torn_deq_lanes)).check()
         self.queue.torn_crash_and_recover(
             enq_items=items, deq_lanes=self.torn_deq_lanes, seed=seed)
         Q = getattr(self.queue, "Q", 1)

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 ENQ = "enq"
 DEQ = "deq"
@@ -128,20 +128,31 @@ class IntentJournal:
 
     # -- crash --------------------------------------------------------------
 
-    def crash(self, seed: int = 0, evict_rate: float = 0.25
-              ) -> List[IntentRecord]:
+    def crash(self, seed: int = 0, evict_rate: float = 0.25,
+              mask: Optional[Sequence[bool]] = None) -> List[IntentRecord]:
         """Torn loss of the un-synced suffix: a seeded prefix of the pending
         records landed (they were issued in order), plus independent
         evictions -- the same prefix+eviction adversary as
-        ``persistence.torn_mask``.  Lost records are REMOVED (a real
-        restart reads only the durable journal); returns them so the
+        ``persistence.torn_mask``.  ``mask`` pins the cut instead (one bool
+        per pending record, True = landed): the exhaustive checker
+        (``repro.analysis.qcheck``) drives every subset of the open journal
+        epoch through this one entry point.  Lost records are REMOVED (a
+        real restart reads only the durable journal); returns them so the
         caller can resolve their tickets as not-completed."""
         pending = list(self._pending)
-        rng = random.Random(seed)
-        point = rng.randint(0, len(pending))
+        if mask is not None:
+            assert len(mask) == len(pending), \
+                f"journal crash mask covers {len(mask)} records, " \
+                f"{len(pending)} pending"
+            landed = [bool(b) for b in mask]
+        else:
+            rng = random.Random(seed)
+            point = rng.randint(0, len(pending))
+            landed = [i < point or rng.random() < evict_rate
+                      for i in range(len(pending))]
         lost: List[IntentRecord] = []
         for i, r in enumerate(pending):
-            if i < point or rng.random() < evict_rate:
+            if landed[i]:
                 r.durable = True          # landed (prefix or eviction)
             else:
                 lost.append(r)

@@ -227,6 +227,45 @@ def torn_mask(key: jax.Array, n_records: int, point: Optional[int] = None,
     return (jnp.arange(n_records, dtype=jnp.int32) < pt) | evict
 
 
+def exhaustive_masks(live) -> np.ndarray:
+    """EVERY reachable crash image of ONE un-psynced flush epoch, as record
+    masks.  Under the prefix+eviction adversary the reachable images of an
+    open epoch are exactly ALL subsets of its live records: the empty prefix
+    plus an arbitrary eviction set reaches any subset, and every
+    prefix+eviction cut IS a subset -- so "all record prefixes x all
+    per-line eviction subsets" collapses to the 2^k boolean masks over the
+    k live records.  Dead records (idle/failed lanes) flush nothing; their
+    bits stay False.
+
+    This is the exhaustive counterpart of ``torn_masks`` for small-scope
+    model checking (``repro.analysis.qcheck``): host-side, returns
+    np.ndarray [2^k, len(live)] bool, row 0 = nothing landed, row -1 =
+    every live record landed."""
+    live = np.asarray(jax.device_get(live), bool).reshape(-1)
+    (pos,) = np.nonzero(live)
+    k = int(pos.size)
+    if k > 24:
+        raise ValueError(
+            f"exhaustive_masks: 2^{k} images is not a small scope; use "
+            f"torn_masks sampling instead")
+    bits = (np.arange(1 << k, dtype=np.int64)[:, None]
+            >> np.arange(k, dtype=np.int64)[None, :]) & 1
+    masks = np.zeros((1 << k, live.size), bool)
+    masks[:, pos] = bits.astype(bool)
+    return masks
+
+
+def distinct_mask_count(masks) -> int:
+    """Number of DISTINCT crash images a sampled sweep actually covers.
+    ``torn_masks``/``rebase_masks`` draws can alias (two points sharing a
+    prefix may draw the same eviction set), so reproducible sweep claims
+    report this dedup count, not the row count.  The exhaustive qcheck
+    masks are distinct by construction."""
+    m = np.asarray(jax.device_get(masks), bool)
+    m = m.reshape(m.shape[0], -1)
+    return int(np.unique(m, axis=0).shape[0])
+
+
 # ---------------------------------------------------------------------------
 # Quiescent ticket rebase: the maintenance flush (DESIGN.md §8)
 # ---------------------------------------------------------------------------

@@ -15,9 +15,11 @@ import repro.api as api
 API_SURFACE = [
     "Capabilities",
     "CapabilityError",
+    "CombinedExhaust",
     "CombinedSweep",
     "Combiner",
     "Delivery",
+    "ExhaustResult",
     "FaultPlan",
     "Maintenance",
     "PersistentQueue",

@@ -1,0 +1,347 @@
+"""qcheck: exhaustive small-scope crash-image model checking (PR 10).
+
+Tier-1 coverage for DESIGN.md §12: the persist-order graph, the full
+2^k-image enumeration of a wave's flush epoch through the facade
+(``FaultPlan("exhaust")``) and the Combiner (flush in flight), the
+crash-during-recovery re-crash (recovery idempotence, jnp AND pallas,
+post-recycling pools), the rebase and announce enumerations, the seeded
+sweeps' cross-backend determinism, and the CLI's exit/JSON contract."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis.qcheck.graph import (PersistGraph, journal_graph,
+                                         rebase_graph, recovery_graph,
+                                         wave_graph)
+from repro.analysis.qcheck.scenarios import (SMALL_SCOPE,
+                                             small_scope_combiner,
+                                             small_scope_queue,
+                                             small_scope_wave)
+from repro.api import FaultPlan, QueueConfig, open_combiner, open_queue
+from repro.core.fabric import fabric_recover
+from repro.core.persistence import (distinct_mask_count, exhaustive_masks,
+                                    rebase_masks, torn_masks, tree_copy)
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _cfg(**kw):
+    kw.setdefault("Q", 2)
+    for k, v in SMALL_SCOPE.items():
+        kw.setdefault(k, v)
+    return QueueConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# the persist-order graph (pure host: nodes, epochs, reachability)
+# ---------------------------------------------------------------------------
+
+
+def test_persist_graph_admits_and_image_space():
+    g = PersistGraph(kinds=("a", "b", "c", "d"),
+                     live=np.array([1, 0, 1, 1], bool),
+                     epochs=((0, 2), (2, 4)), source="test")
+    # happens-before is the epoch order (records inside an epoch race)
+    assert g.happens_before(0, 2) and not g.happens_before(0, 1)
+    assert not g.happens_before(2, 3)
+    # dead-record bits are ignored (a dead lane flushes nothing), so the
+    # mask aliases its live projection
+    assert g.admits(np.array([1, 1, 0, 0], bool)) == \
+        g.admits(np.array([1, 0, 0, 0], bool)) is True
+    # a psync'd epoch forces its live records before the next epoch starts
+    assert not g.admits(np.array([0, 0, 1, 0], bool))
+    assert g.admits(np.array([1, 0, 1, 0], bool))
+    # 1 empty image + per-epoch non-empty subsets: 1 + (2^1-1) + (2^2-1)
+    assert g.image_space_size() == 5
+    rm = g.reachable_masks()
+    assert rm.shape == (5, 4)
+    assert distinct_mask_count(rm) == 5
+    assert all(g.admits(m) for m in rm)
+
+
+def test_exhaustive_masks_space_and_guard():
+    live = np.array([1, 0, 1, 1], bool)
+    m = exhaustive_masks(live)
+    assert m.shape == (8, 4)
+    assert not m[:, 1].any()                  # dead bit never set
+    assert distinct_mask_count(m) == 8
+    with pytest.raises(ValueError, match="small scope"):
+        exhaustive_masks(np.ones(25, bool))
+
+
+def test_builder_graphs_shapes():
+    S, R, P = SMALL_SCOPE["S"], SMALL_SCOPE["R"], 1
+    g = rebase_graph(S, R, P)
+    assert g.n_records == S * R + P + 1
+    assert len(g.epochs) == 2                 # phase-1 | psync | header
+    assert g.image_space_size() == 2 ** (S * R + P) + 1
+    rg = recovery_graph(S, R)
+    assert rg.n_records == S * R and len(rg.epochs) == 1
+
+
+# ---------------------------------------------------------------------------
+# the facade exhaust: FULL 2^10-per-queue space, zero violations (jnp)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def jnp_exhaust():
+    q = small_scope_queue(Q=2, backend="jnp")
+    enq, lanes = small_scope_wave(Q=2)
+    res = q.crash(FaultPlan("exhaust", enq_items=enq, deq_lanes=lanes))
+    return q, res
+
+
+def test_exhaust_enumerates_full_space(jnp_exhaust):
+    """The acceptance bar: at S=2, R=4, W=4 with every record live the
+    enumeration IS the full crash-image space -- 2^10 images per queue,
+    all distinct, every one admitted by its queue's graph."""
+    _, res = jnp_exhaust
+    assert res.n_images == 2 * 1024
+    assert [g.image_space_size() for g in res.graphs] == [1024, 1024]
+    for q in range(2):
+        sel = res.masks[np.asarray(res.queue_index) == q]
+        assert sel.shape[0] == 1024
+        assert distinct_mask_count(sel) == 1024
+        assert all(res.graphs[q].admits(m) for m in sel)
+        assert res.graphs[q].n_records == 2 * SMALL_SCOPE["W"] + 2
+
+
+def test_exhaust_check_clean_and_recovery_idempotent(jnp_exhaust):
+    """Every image passes the UNCHANGED durable-linearizability checker;
+    recovery re-crashed at every SUBSET of its own write stream (2^8 per
+    image under the default budget) recovers identically."""
+    _, res = jnp_exhaust
+    agg = res.check()
+    assert agg["images"] == 2048
+    assert agg["image_space"] == 2048
+    # the maximally-live wave genuinely exercises both loss directions
+    assert agg["lost_prefix"] > 0 and agg["survived_wave_enqs"] > 0
+    assert res.recovery_mode == "subsets"
+    S, R = SMALL_SCOPE["S"], SMALL_SCOPE["R"]
+    assert res.recovery_ok.shape == (2048, 2 ** (S * R))
+    assert agg["recovery_images"] == 2048 * 2 ** (S * R)
+
+
+def test_exhaust_is_forensics_queue_contract_preserved(jnp_exhaust):
+    """The exhaust never mutates the system under test: contents intact,
+    and the facade's QueueFull/pending contract still holds afterwards."""
+    from repro.api import QueueFull
+    q, _ = jnp_exhaust
+    assert sorted(q.peek_items()) == list(range(108, 116))
+    q.enqueue_all(range(200, 208))            # fills both rows again
+    with pytest.raises(QueueFull) as ei:
+        q.enqueue_all([999], max_waves=8)
+    assert ei.value.pending == [999]
+    got, _ = q.dequeue_n(4)                   # FIFO head unchanged
+    assert sorted(int(v) for v in got) == [108, 109, 110, 111]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_exhaust_both_backends_points_floor(backend):
+    """Both engine backends enumerate the same full image space; a tiny
+    stage-2 budget falls back to the crash-during-recovery POINTS floor
+    (every prefix of recovery's write stream)."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    q = small_scope_queue(Q=1, backend=backend)
+    enq, lanes = small_scope_wave(Q=1)
+    res = q.crash(FaultPlan("exhaust", enq_items=enq, deq_lanes=lanes,
+                            budget=1))
+    agg = res.check()
+    assert agg["images"] == 1024 == agg["image_space"]
+    assert res.recovery_mode == "points"
+    S, R = SMALL_SCOPE["S"], SMALL_SCOPE["R"]
+    assert res.recovery_ok.shape == (1024, S * R + 1)
+
+
+def test_fault_plan_validation():
+    assert FaultPlan("exhaust").budget == 1 << 20
+    with pytest.raises(ValueError):
+        FaultPlan("exhaustive")
+
+
+# ---------------------------------------------------------------------------
+# satellite: recovery idempotence, bit-exact, both backends, recycled pools
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("Q", (1, 4))
+def test_recover_twice_equals_recover_once(backend, Q):
+    """recover(recover(nvm)) == recover(nvm) bit-exact on a post-recycling
+    pool (the primed state has a reborn epoch-2 row): recovery's cell
+    re-inits must be a fixed point of recovery itself."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    q = small_scope_queue(Q=Q, backend=backend)
+    nvm = tree_copy(q.nvm)
+    r1 = fabric_recover(nvm, backend=backend)
+    r2 = fabric_recover(tree_copy(r1), backend=backend)
+    for name, a, b in zip(r1._fields, jax.device_get(r1),
+                          jax.device_get(r2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"recovery not idempotent on {backend}, Q={Q}: leaf {name}")
+
+
+# ---------------------------------------------------------------------------
+# satellite: seeded sweeps are reproducible across calls AND backends
+# ---------------------------------------------------------------------------
+
+
+def test_mask_sampling_seed_stability():
+    key = jax.random.PRNGKey(7)
+    m1, p1 = torn_masks(key, 64, 10)
+    m2, p2 = torn_masks(key, 64, 10)
+    assert np.array_equal(m1, m2) and np.array_equal(p1, p2)
+    r1, q1 = rebase_masks(key, 64, 10)
+    r2, q2 = rebase_masks(key, 64, 10)
+    assert np.array_equal(r1, r2) and np.array_equal(q1, q2)
+    # different seed, different set (sanity that the seed matters)
+    m3, _ = torn_masks(jax.random.PRNGKey(8), 64, 10)
+    assert not np.array_equal(m1, m3)
+
+
+def test_sweep_points_identical_across_backends():
+    """The sweep's sampled point set is a function of the SEED alone: the
+    jnp and pallas engines recover the exact same crash images, so sweep
+    claims are reproducible across backends."""
+    pytest.importorskip("jax.experimental.pallas")
+    pts = {}
+    for backend in BACKENDS:
+        q = small_scope_queue(Q=2, backend=backend)
+        enq, lanes = small_scope_wave(Q=2)
+        res = q.crash(FaultPlan("sweep", enq_items=enq, deq_lanes=lanes,
+                                n_points=32, seed=9))
+        pts[backend] = np.asarray(jax.device_get(res.points), bool)
+    assert np.array_equal(pts["jnp"], pts["pallas"])
+    assert (distinct_mask_count(pts["jnp"])
+            == distinct_mask_count(pts["pallas"]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: the Combiner surface (flush in flight) + rebase + announce
+# ---------------------------------------------------------------------------
+
+
+def test_combined_exhaust_with_flush_in_flight():
+    """Exhaustive verdicts with a dispatched-but-unretired flush: every
+    outstanding ticket (the in-flight flight's included) resolves on EVERY
+    enumerated image, in-flight items count as dispatched, and the board/
+    queue are untouched (forensics)."""
+    c = open_combiner(_cfg(R=8, W=4), pipeline_depth=2)
+    c.submit_enqueue(range(500, 508)).result()       # pre-wave contents
+    inflight = c.submit_enqueue([900, 901])
+    c.flush()                                         # stays in flight
+    assert c.in_flight() == 1
+    for p in range(2):
+        c.submit_enqueue([p * 10, p * 10 + 1], producer=p)
+    c.submit_dequeue(3)
+    ex = c.crash_exhaust()
+    assert {900, 901} <= set(ex.dispatched)
+    assert inflight.id in {r.ticket for r in ex.records}
+    agg = ex.check()
+    assert agg["verdicts"] == agg["images"] * len(ex.records)
+    assert agg["images"] == sum(g.image_space_size()
+                                for g in ex.exhaust.graphs)
+    # forensics: board, flight and queue all intact (the in-flight items
+    # are already on the device -- dispatched, not yet retired)
+    assert c.in_flight() == 1 and c.pending() >= 3
+    assert sorted(c.queue.peek_items()) == list(range(500, 508)) + [900, 901]
+    # per-image verdict spot check: an image where nothing landed never
+    # completes a wave ticket
+    v0 = ex.verdicts_at(0)
+    assert len(v0) == len(ex.records)
+
+
+def test_combiner_crash_rejects_exhaust_kind():
+    c = open_combiner(_cfg())
+    with pytest.raises(ValueError, match="crash_exhaust"):
+        c.crash(FaultPlan("exhaust"))
+
+
+def test_exhaust_rebase_every_image_empty():
+    from repro.analysis.qcheck.exhaust import exhaust_rebase
+    q = small_scope_queue(Q=2, backend="jnp")
+    q.drain()
+    out = exhaust_rebase(q)
+    S, R, P = q.S, q.R, q.P
+    assert out["images"] == 2 * (2 ** (S * R + P) + 1)
+    assert out["image_space"] == out["images"]
+
+
+def test_exhaust_announce_every_subset_resolves():
+    from repro.analysis.qcheck.exhaust import exhaust_announce
+    c = small_scope_combiner(Q=2, backend="jnp", pending=6)
+    out = exhaust_announce(c)
+    assert out["images"] == 2 ** out["records"]
+    assert out["verdicts"] == out["images"] * 6
+
+
+def test_journal_graph_epochs():
+    """Durable journal prefix = closed epoch, pending tail = open epoch:
+    an image missing a durable record is unreachable, any pending subset
+    is reachable."""
+    c = small_scope_combiner(Q=2, backend="jnp", pending=4)
+    g = journal_graph(c.journal)
+    assert len(g.epochs) == 2 and g.epochs[-1][1] == g.n_records
+    durable = g.epochs[0][1]
+    full = np.ones(g.n_records, bool)
+    torn_tail = full.copy()
+    torn_tail[durable:] = False
+    assert g.admits(full) and g.admits(torn_tail)
+    torn_prefix = full.copy()
+    torn_prefix[0] = False
+    assert not g.admits(torn_prefix)
+
+
+# ---------------------------------------------------------------------------
+# scenario hook + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_exhaust_mode_wave_stack():
+    from repro.core.failures import ScenarioSpec, WaveScenario, run_scenario
+    q = open_queue(_cfg(R=8))
+    sc = WaveScenario(q, batch=8, deq=4, torn_enq=2, torn_deq_lanes=2)
+    out = run_scenario(sc, ScenarioSpec(epochs=2, crash="exhaust", seed=3))
+    assert len(out["epochs"]) == 2
+    assert all(e["crashed"] for e in out["epochs"])
+    assert out["n_enqueued"] >= out["n_consumed"] > 0
+
+
+def test_cli_json_and_exit_code(tmp_path):
+    from repro.analysis.qcheck.__main__ import main
+    report = tmp_path / "qcheck.json"
+    rc = main(["--backends", "jnp", "--queues", "1",
+               "--skip", "wave,rebase", "--json", str(report)])
+    assert rc == 0
+    data = json.loads(report.read_text())
+    assert data["violations"] == []
+    ann = data["backends"]["jnp"]["announce"]
+    assert ann["images"] == 2 ** ann["records"]
+    assert data["images_total"] == ann["images"]
+
+
+def test_cli_rejects_unknown_skip():
+    from repro.analysis.qcheck.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--skip", "nonsense"])
+
+
+def test_wave_graph_dead_lanes_shrink_space():
+    """An idle wave flushes fewer live records: the graph's image space
+    contracts accordingly (the reason scenarios.py primes a maximal
+    state)."""
+    q = open_queue(_cfg(Q=1))
+    q.enqueue_all([5, 6])
+    res = q.crash(FaultPlan("exhaust", enq_items=(7,), deq_lanes=1))
+    g = res.graphs[0]
+    assert g.n_records == 2 * q.W + 2
+    k = int(np.asarray(g.live).sum())
+    assert k < 2 * q.W + 2
+    assert res.n_images == 2 ** k == g.image_space_size()
+    res.check()

@@ -341,3 +341,61 @@ def test_cache_churn_detects_varying_dispatch_shapes():
         fab.fabric_step(vol, nvm, ev, dm, np.int32(0), backend="jnp")
 
     assert cache_churn.churn_findings(steady) == []
+
+
+# ---------------------------------------------------------------------------
+# PR 10 satellites: rebase two-epoch coverage + serving flush sites
+# ---------------------------------------------------------------------------
+
+
+def test_rebase_coverage_clean_and_known_bad():
+    """The RebaseDelta path of persist-order: the real ``apply_rebase``
+    materializes every persisted leaf from the delta records under the
+    crash mask; a fixture that writes a leaf from thin air (or ignores the
+    mask) is reported."""
+    from repro.analysis.jaxpr_rules import _rebase_coverage_findings
+    assert _rebase_coverage_findings() == []
+
+    def bad_apply(nvm, delta, mask):     # vals neither from delta nor torn
+        return nvm._replace(vals=jnp.zeros_like(nvm.vals))
+
+    msgs = [f.message for f in _rebase_coverage_findings(bad_apply)]
+    assert any("not materialized from the RebaseDelta" in m for m in msgs)
+    assert any("ignore the crash mask" in m for m in msgs)
+
+    def unmasked_apply(nvm, delta, mask):  # replays records, ignores mask
+        return nvm._replace(vals=delta.vals)
+
+    msgs = [f.message for f in _rebase_coverage_findings(unmasked_apply)]
+    assert any("ignore the crash mask" in m for m in msgs)
+
+
+def test_rebase_barrier_clean_and_known_bad():
+    """``rebase_masks`` samples must all be reachable under the two-psync-
+    epoch rebase graph (header => every phase-1 record); a mask set with
+    the header out alone is the known-bad fixture."""
+    from repro.analysis.jaxpr_rules import _rebase_barrier_findings
+    assert _rebase_barrier_findings() == []
+    bad = np.zeros((4, 10), bool)
+    bad[2, -1] = True                    # header landed, phase-1 all torn
+    (f,) = _rebase_barrier_findings(masks=bad)
+    assert "unreachable" in f.message and "psync barrier" in f.message
+
+
+def test_serving_flush_sites_clean_and_known_bad():
+    """Engine-layer announce-before-apply: the real serving engine routes
+    every queue mutation through the combiner journal; a fixture that
+    dispatches on the raw .queue handle is reported with its line."""
+    from repro.analysis.jaxpr_rules import _serving_flush_findings
+    assert _serving_flush_findings() == []
+    src = textwrap.dedent("""
+        class Engine:
+            def refill(self, free):
+                got, _ = self.queue.dequeue_n(len(free))   # bypass!
+                return got
+
+            def ok(self, rid):
+                self.combiner.submit_enqueue([rid])
+    """)
+    (f,) = _serving_flush_findings(source=src)
+    assert f.line == 4 and "bypassing the combiner" in f.message
